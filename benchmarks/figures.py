@@ -1,0 +1,146 @@
+"""Benchmarks mirroring the paper's figures (simulated performance model).
+
+Each function returns a list of CSV rows (name, us_per_call, derived).
+The 'derived' column carries the figure's headline quantity (bandwidth,
+IOPS, speedup, accuracy...).
+"""
+from __future__ import annotations
+
+from typing import List, Tuple
+
+from repro.core.layouts import DEFAULT_MODE, LayoutMode
+from repro.core.simulator import Phase, simulate, simulate_phase
+from repro.core.workloads import build_workloads, workload_by_name
+
+Row = Tuple[str, float, str]
+
+NODE_SCALES = (8, 16, 32, 64)
+
+
+def fig7_checkpoint_restart() -> List[Row]:
+    rows = []
+    for n in NODE_SCALES:
+        ckpt = Phase("bw", op="write", topology="NN", pattern="seq",
+                     total_mib=n * 4096, req_kib=4096)
+        restart = Phase("bw", op="read", topology="N1", pattern="seq",
+                        total_mib=n * 4096, req_kib=4096, written_by="other")
+        for mode in LayoutMode:
+            w = simulate_phase(ckpt, mode, n)
+            r = simulate_phase(restart, mode, n)
+            rows.append((f"fig7.ckpt.M{int(mode)}.n{n}", w.time_s * 1e6,
+                         f"write_GiBs={w.bw_mibs / 1024:.2f}"))
+            rows.append((f"fig7.restart.M{int(mode)}.n{n}", r.time_s * 1e6,
+                         f"read_GiBs={r.bw_mibs / 1024:.2f}"))
+    return rows
+
+
+def fig8_random_iops() -> List[Row]:
+    rows = []
+    for n in (8, 16, 32):
+        for rr in (0.1, 0.5, 0.9):
+            ph = Phase("iops", op="mixed", read_ratio=rr, req_kib=4,
+                       n_ops=100_000, written_by="shared")
+            for mode in LayoutMode:
+                r = simulate_phase(ph, mode, n)
+                rows.append((f"fig8.iops.M{int(mode)}.n{n}.r{int(rr * 100)}",
+                             r.time_s * 1e6, f"iops={r.iops:.0f}"))
+    return rows
+
+
+def fig9_qos_radar() -> List[Row]:
+    rows = []
+    ph = Phase("iops", op="mixed", read_ratio=0.5, req_kib=4,
+               n_ops=50_000, written_by="shared")
+    for n in (8, 32):
+        for mode in LayoutMode:
+            r = simulate_phase(ph, mode, n)
+            rows.append((f"fig9.qos.M{int(mode)}.n{n}", r.lat_ms_p50 * 1e3,
+                         f"p99_ms={r.lat_ms_p99:.3f};cv={r.jitter_cv:.3f}"))
+    return rows
+
+
+def fig10_metadata_ops() -> List[Row]:
+    rows = []
+    for op in ("create", "stat", "remove"):
+        for dirp in ("unique", "shared"):
+            ph = Phase("meta", n_ops=200_000, dir_pattern=dirp,
+                       meta_mix={op: 1.0},
+                       cross_rank=1.0 if op == "stat" else 0.0)
+            for mode in LayoutMode:
+                r = simulate_phase(ph, mode, 32)
+                rows.append((f"fig10.{op}.{dirp}.M{int(mode)}",
+                             r.time_s * 1e6, f"ops_per_s={r.iops:.0f}"))
+    return rows
+
+
+def fig11_production_kernels() -> List[Row]:
+    rows = []
+    for name in ("HACC-A", "HACC-B", "S3D-A", "S3D-B", "MAD-A", "MAD-B"):
+        w = workload_by_name(name)
+        for mode in LayoutMode:
+            r = simulate(w, mode, w.n_nodes)
+            rows.append((f"fig11.{name}.M{int(mode)}", r.total_s * 1e6,
+                         f"total_s={r.total_s:.2f}"))
+    return rows
+
+
+# mapping of comparison systems onto fixed layouts / tuning models
+# (DESIGN.md §7): UnifyFS ≈ fixed Mode 1 (node-local write-optimized),
+# CodepFS ≈ pattern-aware distributed ≈ fixed Mode 3 with a 8% routing win,
+# OPRAEL ≈ ML parameter tuning ON the fixed Mode-3 layout: best-case 12%
+# stack-parameter gain — it cannot cross structural layout limits.
+def fig13_system_comparison() -> List[Row]:
+    rows = []
+    from repro.core.intent.selector import select_layout
+    for w in build_workloads(32):
+        t3 = simulate(w, DEFAULT_MODE, w.n_nodes).total_s      # GekkoFS
+        proteus = simulate(w, select_layout(w).mode, w.n_nodes).total_s
+        oprael = t3 * 0.88
+        unify = simulate(w, LayoutMode.NODE_LOCAL, w.n_nodes).total_s
+        codep = t3 * 0.92
+        best_fixed = min(oprael, unify, codep)
+        rows.append((f"fig13.{w.name}", proteus * 1e6,
+                     f"proteus_x={t3 / proteus:.2f};oprael_x="
+                     f"{t3 / oprael:.2f};unifyfs_x={t3 / unify:.2f};"
+                     f"codepfs_x={t3 / codep:.2f}"))
+    return rows
+
+
+def fig12_proteus_speedups() -> List[Row]:
+    rows = []
+    from repro.core.intent.selector import select_layout
+    for w in build_workloads(32):
+        t3 = simulate(w, DEFAULT_MODE, w.n_nodes).total_s
+        tp = simulate(w, select_layout(w).mode, w.n_nodes).total_s
+        rows.append((f"fig12.{w.name}", tp * 1e6,
+                     f"speedup={t3 / tp:.2f}"))
+    return rows
+
+
+def fig14_case_studies() -> List[Row]:
+    from repro.core.intent.selector import select_layout
+    rows = []
+    # (1) isolation bandwidth — IOR-A at 16 nodes (case-study scale)
+    w = workload_by_name("IOR-A", n_nodes=16)
+    d = select_layout(w)
+    r = simulate(w, d.mode, 16)
+    rows.append(("fig14.iorA.mode", float(int(d.mode)),
+                 f"selected=M{int(d.mode)};conf={d.confidence:.2f}"))
+    rows.append(("fig14.iorA.bw", r.total_s * 1e6,
+                 f"MiBs={r.agg_bw:.0f}"))
+    # (2) N-1 write burst with global visibility — HACC-A at 64 nodes
+    w = workload_by_name("HACC-A", n_nodes=64)
+    d = select_layout(w)
+    r = simulate(w, d.mode, 64)
+    rows.append(("fig14.haccA.mode", float(int(d.mode)),
+                 f"selected=M{int(d.mode)};conf={d.confidence:.2f}"))
+    rows.append(("fig14.haccA.bw", r.total_s * 1e6,
+                 f"MBs={r.agg_bw * 1.048576:.0f}"))
+    # (3) metadata storm centralization — MDTEST-B
+    w = workload_by_name("MDTEST-B")
+    d = select_layout(w)
+    t2 = simulate(w, d.mode, 32).total_s
+    t3 = simulate(w, DEFAULT_MODE, 32).total_s
+    rows.append(("fig14.mdtestB.mode", float(int(d.mode)),
+                 f"selected=M{int(d.mode)};speedup={t3 / t2:.2f}"))
+    return rows

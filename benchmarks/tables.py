@@ -1,0 +1,147 @@
+"""Benchmarks mirroring the paper's tables (II: accuracy, III: ablations,
+IV: cost) plus real wall-clock microbenchmarks of the decision pipeline and
+the BB engine."""
+from __future__ import annotations
+
+import time
+from typing import List, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.intent.oracle import oracle_mode
+from repro.core.intent.selector import select_layout
+from repro.core.workloads import build_workloads
+
+Row = Tuple[str, float, str]
+
+
+def _accuracy(**kw):
+    ws = build_workloads(32)
+    hits = sum(int(select_layout(w, **kw).mode == oracle_mode(w))
+               for w in ws)
+    return hits, len(ws)
+
+
+def table2_accuracy() -> List[Row]:
+    rows = []
+    t0 = time.time()
+    h, n = _accuracy()
+    dt = (time.time() - t0) / n * 1e6
+    rows.append(("table2.proteus", dt, f"accuracy={h}/{n}={h / n * 100:.2f}%"
+                 ";paper=91.30%"))
+    try:
+        from repro.core.intent.ml_baseline import loo_accuracy
+        acc, _ = loo_accuracy()
+        rows.append(("table2.gbdt_baseline", 0.0,
+                     f"accuracy={acc * 100:.2f}%;paper_xgboost=73.91%"))
+    except Exception as e:  # pragma: no cover
+        rows.append(("table2.gbdt_baseline", 0.0, f"error={e}"))
+    return rows
+
+
+def table3_ablations() -> List[Row]:
+    rows = []
+    for label, kw, paper in (
+            ("full", {}, "91.30%"),
+            ("wo_runtime", {"use_runtime": False}, "86.96%"),
+            ("wo_app_ref", {"use_app_ref": False}, "82.60%"),
+            ("wo_mode_know", {"use_mode_know": False}, "65.20%")):
+        h, n = _accuracy(**kw)
+        rows.append((f"table3.{label}", 0.0,
+                     f"accuracy={h / n * 100:.2f}%;paper={paper}"))
+    return rows
+
+
+def table4_cost() -> List[Row]:
+    """Decision-pipeline cost: measured wall time per stage + prompt size."""
+    from repro.core.intent.probe import run_probe
+    from repro.core.intent.prompt import build_prompt
+    from repro.core.intent.context import HybridContext
+    from repro.core.intent.static_extractor import extract_static
+    from repro.core.intent.reasoner import KnowledgeReasoner
+    ws = build_workloads(32)
+    t_static = t_probe = t_reason = 0.0
+    prompt_tokens = 0
+    for w in ws:
+        t0 = time.time()
+        st = extract_static(w.source_code, w.job_script)
+        t_static += time.time() - t0
+        t0 = time.time()
+        rt = run_probe(w)
+        t_probe += time.time() - t0
+        ctx = HybridContext(w.app, st, rt, w.n_nodes)
+        prompt = build_prompt(ctx)
+        prompt_tokens += len(prompt.split())
+        t0 = time.time()
+        KnowledgeReasoner().reason(ctx)
+        t_reason += time.time() - t0
+    n = len(ws)
+    return [
+        ("table4.static_extract", t_static / n * 1e6,
+         "offline_training_runs=0"),
+        ("table4.probe", t_probe / n * 1e6, "pre_exec_profiling=1-2 probes"),
+        ("table4.reasoning", t_reason / n * 1e6,
+         f"prompt_words~{prompt_tokens // n};paper_llm_latency=33.0s"),
+    ]
+
+
+def engine_microbench() -> List[Row]:
+    """REAL wall-clock of the BB data plane (stacked engine, 1 CPU)."""
+    import jax
+    from repro.core import burst_buffer as bb
+    from repro.core.layouts import LayoutMode, LayoutParams
+    rows = []
+    N, q, w = 8, 16, 64
+    rng = np.random.RandomState(0)
+    ph = jnp.asarray(rng.randint(1, 1 << 20, (N, q)), jnp.int32)
+    cid = jnp.asarray(rng.randint(0, 8, (N, q)), jnp.int32)
+    payload = jnp.asarray(rng.randint(0, 999, (N, q, w)), jnp.int32)
+    valid = jnp.ones((N, q), bool)
+    for mode in LayoutMode:
+        params = LayoutParams(mode=mode, n_nodes=N)
+        state = bb.init_state(N, cap=1024, words=w, mcap=1024)
+        wr = jax.jit(lambda s, a, b, c, d: bb.forward_write(
+            s, params, a, b, c, d))
+        state = wr(state, ph, cid, payload, valid)   # compile
+        jax.block_until_ready(state.data)
+        t0 = time.time()
+        iters = 20
+        for _ in range(iters):
+            state = wr(state, ph, cid, payload, valid)
+        jax.block_until_ready(state.data)
+        us = (time.time() - t0) / iters * 1e6
+        chunks_per_s = N * q / (us / 1e6)
+        rows.append((f"engine.write.M{int(mode)}", us,
+                     f"chunks_per_s={chunks_per_s:.0f}"))
+    return rows
+
+
+def kernel_microbench() -> List[Row]:
+    """Interpret-mode kernel wall times (correctness-path latency)."""
+    import jax
+    from repro.kernels.chunk_router.ops import route_chunks
+    from repro.kernels.fletcher.ops import fletcher_checksum
+    rows = []
+    rng = np.random.RandomState(0)
+    ph = jnp.asarray(rng.randint(1, 1 << 30, 4096), jnp.int32)
+    cid = jnp.asarray(rng.randint(0, 64, 4096), jnp.int32)
+    cl = jnp.zeros(4096, jnp.int32)
+    d, c = route_chunks(ph, cid, cl, mode=3, n_nodes=64)
+    jax.block_until_ready(d)
+    t0 = time.time()
+    for _ in range(5):
+        d, c = route_chunks(ph, cid, cl, mode=3, n_nodes=64)
+    jax.block_until_ready(d)
+    rows.append(("kernel.chunk_router.4096", (time.time() - t0) / 5 * 1e6,
+                 "interpret_mode=True"))
+    x = jnp.asarray(rng.randint(0, 1 << 30, 1 << 16), jnp.int32)
+    cs = fletcher_checksum(x)
+    jax.block_until_ready(cs)
+    t0 = time.time()
+    for _ in range(5):
+        cs = fletcher_checksum(x)
+    jax.block_until_ready(cs)
+    rows.append(("kernel.fletcher.64Kwords", (time.time() - t0) / 5 * 1e6,
+                 "interpret_mode=True"))
+    return rows

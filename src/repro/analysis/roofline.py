@@ -1,0 +1,91 @@
+"""Three-term roofline model from compiled dry-run artifacts.
+
+    compute term    = HLO_FLOPs / (chips × peak_FLOP/s)
+    memory term     = HLO_bytes / (chips × HBM_bw)
+    collective term = collective_bytes / (chips × link_bw)
+
+FLOPs/bytes come from the structural HLO analyzer (hlo_parse.py) which, unlike
+``cost_analysis()``, scales while-loop bodies by trip count.  The analyzer
+runs on the *per-device* SPMD module, so terms are already per-chip; we also
+record XLA's own cost_analysis numbers for reference.
+"""
+from __future__ import annotations
+
+import json
+from dataclasses import asdict, dataclass
+from typing import Dict, Optional
+
+from repro.analysis.costs import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+from repro.analysis.hlo_parse import Costs, analyze_hlo
+
+
+@dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    n_chips: int
+    # per-device quantities (SPMD module)
+    device_flops: float
+    device_traffic_bytes: float
+    device_collective_bytes: float
+    collective_breakdown: Dict[str, float]
+    # terms (seconds)
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    bottleneck: str
+    # usefulness
+    model_flops: float            # 6·N·D (dense) / 6·N_active·D (MoE)
+    hlo_total_flops: float        # device_flops × chips
+    useful_ratio: float
+    # XLA reference numbers (unscaled while bodies)
+    xla_flops: float = 0.0
+    xla_bytes: float = 0.0
+    note: str = ""
+
+    def dominant(self) -> str:
+        return self.bottleneck
+
+    def to_json(self) -> str:
+        return json.dumps(asdict(self), indent=2)
+
+
+def model_flops_for(cfg, shape) -> float:
+    """Analytic MODEL_FLOPS: 6·N·D for training, 2·N·D for inference."""
+    n_params = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_params * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_params * tokens
+    # decode: one token per sequence
+    return 2.0 * n_params * shape.global_batch
+
+
+def build_report(arch: str, shape, mesh_name: str, n_chips: int,
+                 hlo_text: str, cfg, xla_cost: Optional[dict] = None,
+                 note: str = "") -> RooflineReport:
+    c: Costs = analyze_hlo(hlo_text)
+    compute_s = c.flops / PEAK_FLOPS_BF16
+    memory_s = c.traffic_bytes / HBM_BW
+    coll_s = c.total_collective() / ICI_BW
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": coll_s}
+    bottleneck = max(terms, key=terms.get)
+    mf = model_flops_for(cfg, shape)
+    total_flops = c.flops * n_chips
+    return RooflineReport(
+        arch=arch, shape=shape.name, mesh=mesh_name, n_chips=n_chips,
+        device_flops=c.flops, device_traffic_bytes=c.traffic_bytes,
+        device_collective_bytes=c.total_collective(),
+        collective_breakdown=dict(c.collective_bytes),
+        compute_s=compute_s, memory_s=memory_s, collective_s=coll_s,
+        bottleneck=bottleneck,
+        model_flops=mf, hlo_total_flops=total_flops,
+        useful_ratio=(mf / total_flops) if total_flops else 0.0,
+        xla_flops=(xla_cost or {}).get("flops", 0.0),
+        xla_bytes=(xla_cost or {}).get("bytes accessed", 0.0),
+        note=note,
+    )

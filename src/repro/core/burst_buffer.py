@@ -1,0 +1,380 @@
+"""Multi-mode burst-buffer engine: functional, mesh-backed data plane.
+
+The engine operates on *stacked node-major arrays* — every table has a
+leading ``N`` (node) axis — so the identical code runs
+
+* on one device (tests / property checks): the cross-node exchange is a
+  transpose of the (src, dst) axes, and
+* under ``shard_map`` on a real mesh (production / dry-run): the exchange is
+  ``jax.lax.all_to_all`` over the ``node`` axis (see mesh_engine.py).
+
+Request routing goes through the layout triplet (layouts.py): every batch of
+I/O requests is vector-routed, bucketized per destination, exchanged, applied
+to node-local tables, and replies travel the same path back.  Mode semantics:
+
+* Mode 1: all routing → self.  Reads of remote data must broadcast-search
+  (the paper's "stranded local data" penalty — structurally visible here).
+* Mode 2: file metadata → the md-server subset; data consistent-hashed.
+* Mode 3: everything consistent-hashed (fail-safe baseline).
+* Mode 4: writes land locally; hashed metadata records data_location_rank;
+  reads do a two-phase lookup (meta owner → data owner).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.layouts import LayoutMode, LayoutParams, f_data, f_meta_f
+
+EMPTY = jnp.int32(-1)
+
+# metadata op codes
+OP_CREATE, OP_STAT, OP_REMOVE, OP_UPDATE = 0, 1, 2, 3
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclass
+class BBState:
+    """All node tables, stacked on a leading node axis."""
+
+    data: jax.Array       # (N, cap, words) int32 chunk payloads
+    data_keys: jax.Array  # (N, cap, 2) int32 (path_hash, chunk_id); -1 empty
+    data_count: jax.Array  # (N,) int32
+    meta_key: jax.Array   # (N, mcap) int32 path_hash; -1 empty
+    meta_size: jax.Array  # (N, mcap) int32 file size (chunks)
+    meta_loc: jax.Array   # (N, mcap) int32 data_location_rank (Mode 4)
+    meta_count: jax.Array  # (N,) int32
+    dropped: jax.Array    # (N,) int32 capacity-overflow counter
+
+    def tree_flatten(self):
+        return ((self.data, self.data_keys, self.data_count, self.meta_key,
+                 self.meta_size, self.meta_loc, self.meta_count, self.dropped),
+                None)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+def init_state(n_nodes: int, cap: int, words: int, mcap: int) -> BBState:
+    return BBState(
+        data=jnp.zeros((n_nodes, cap, words), jnp.int32),
+        data_keys=jnp.full((n_nodes, cap, 2), EMPTY, jnp.int32),
+        data_count=jnp.zeros((n_nodes,), jnp.int32),
+        meta_key=jnp.full((n_nodes, mcap), EMPTY, jnp.int32),
+        meta_size=jnp.zeros((n_nodes, mcap), jnp.int32),
+        meta_loc=jnp.full((n_nodes, mcap), EMPTY, jnp.int32),
+        meta_count=jnp.zeros((n_nodes,), jnp.int32),
+        dropped=jnp.zeros((n_nodes,), jnp.int32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# exchange plumbing
+# ---------------------------------------------------------------------------
+def stacked_exchange(x: jax.Array) -> jax.Array:
+    """(N_src, N_dst, ...) -> (N_dst, N_src, ...): single-device all_to_all."""
+    return jnp.swapaxes(x, 0, 1)
+
+
+def bucketize(dest: jax.Array, valid: jax.Array, n_nodes: int,
+              payloads: Dict[str, jax.Array]
+              ) -> Tuple[Dict[str, jax.Array], jax.Array]:
+    """Route per-slot requests into per-destination buckets (no compaction).
+
+    dest, valid: (N, q).  payloads: {name: (N, q, ...)}.
+    Returns buckets {name: (N, n_nodes, q, ...)} and mask (N, n_nodes, q).
+    Slot positions are preserved so replies can be matched back.
+    """
+    hit = (dest[:, None, :] == jnp.arange(n_nodes)[None, :, None]) & \
+        valid[:, None, :]                                  # (N, n_dst, q)
+    out = {}
+    for name, p in payloads.items():
+        extra = (1,) * (p.ndim - 2)
+        pb = jnp.broadcast_to(p[:, None],
+                              (p.shape[0], n_nodes) + p.shape[1:])
+        out[name] = jnp.where(hit.reshape(hit.shape + extra), pb, 0)
+    return out, hit
+
+
+def collect_replies(dest: jax.Array, reply_buckets: jax.Array,
+                    n_nodes: int) -> jax.Array:
+    """Inverse of bucketize on the requester side.
+
+    reply_buckets: (N, n_nodes, q, ...) — replies in original slot positions.
+    Returns (N, q, ...): each slot takes the reply from its destination.
+    """
+    hit = dest[:, None, :] == jnp.arange(n_nodes)[None, :, None]
+    extra = (1,) * (reply_buckets.ndim - 3)
+    return jnp.sum(jnp.where(hit.reshape(hit.shape + extra),
+                             reply_buckets, 0), axis=1)
+
+
+# ---------------------------------------------------------------------------
+# node-local table ops (operate on (N, ...) stacked tables directly)
+# ---------------------------------------------------------------------------
+def _append_chunks(state: BBState, keys: jax.Array, data: jax.Array,
+                   valid: jax.Array) -> BBState:
+    """Append received chunks. keys: (N, m, 2); data: (N, m, w); valid: (N, m).
+
+    Duplicate keys append a new version; lookups return the newest.
+    """
+    N, cap, _ = state.data.shape
+    m = keys.shape[1]
+    rank = jnp.cumsum(valid.astype(jnp.int32), axis=1) - 1       # (N, m)
+    slot = state.data_count[:, None] + rank
+    ok = valid & (slot < cap)
+    slot = jnp.where(ok, slot, cap)                              # drop slot
+    rows = jnp.broadcast_to(jnp.arange(N)[:, None], (N, m))
+    new_keys = state.data_keys.at[rows, slot].set(
+        jnp.where(ok[..., None], keys, EMPTY), mode="drop")
+    new_data = state.data.at[rows, slot].set(
+        jnp.where(ok[..., None], data, 0), mode="drop")
+    appended = ok.sum(axis=1).astype(jnp.int32)
+    dropped = (valid & ~ok).sum(axis=1).astype(jnp.int32)
+    return BBState(new_data, new_keys, state.data_count + appended,
+                   state.meta_key, state.meta_size, state.meta_loc,
+                   state.meta_count, state.dropped + dropped)
+
+
+def _lookup_chunks(state: BBState, keys: jax.Array, valid: jax.Array
+                   ) -> Tuple[jax.Array, jax.Array]:
+    """keys: (N, m, 2) → (payload (N, m, w), found (N, m)). Newest wins."""
+    tbl = state.data_keys                                        # (N, cap, 2)
+    eq = (tbl[:, None, :, 0] == keys[:, :, None, 0]) & \
+         (tbl[:, None, :, 1] == keys[:, :, None, 1]) & \
+         (tbl[:, None, :, 0] != EMPTY)                           # (N, m, cap)
+    found = eq.any(axis=2) & valid
+    idx = jnp.argmax(eq * jnp.arange(1, tbl.shape[1] + 1)[None, None, :],
+                     axis=2)
+    payload = jnp.take_along_axis(state.data, idx[..., None], axis=1)
+    payload = jnp.where(found[..., None], payload, 0)
+    return payload, found
+
+
+def _meta_apply(state: BBState, op: jax.Array, key: jax.Array,
+                size: jax.Array, loc: jax.Array, valid: jax.Array
+                ) -> Tuple[BBState, jax.Array, jax.Array, jax.Array]:
+    """Apply a batch of metadata ops to the local tables.
+
+    op/key/size/loc/valid: (N, m).  Returns (state, found, r_size, r_loc).
+    Order within the batch: CREATE → UPDATE → STAT → REMOVE.
+    """
+    N, mcap = state.meta_key.shape
+    m = key.shape[1]
+    rows = jnp.broadcast_to(jnp.arange(N)[:, None], (N, m))
+
+    def find(mk, k, ok):
+        eq = (mk[:, None, :] == k[:, :, None]) & (mk[:, None, :] != EMPTY)
+        fnd = eq.any(axis=2) & ok
+        idx = jnp.argmax(eq, axis=2)
+        return fnd, idx
+
+    mk, ms, ml, mc = (state.meta_key, state.meta_size, state.meta_loc,
+                      state.meta_count)
+    dropped = state.dropped
+
+    # CREATE (skip if exists — idempotent create)
+    c_ok = valid & (op == OP_CREATE)
+    exists, _ = find(mk, key, c_ok)
+    c_new = c_ok & ~exists
+    rank = jnp.cumsum(c_new.astype(jnp.int32), axis=1) - 1
+    slot = mc[:, None] + rank
+    fits = c_new & (slot < mcap)
+    slot = jnp.where(fits, slot, mcap)
+    mk = mk.at[rows, slot].set(jnp.where(fits, key, EMPTY), mode="drop")
+    ms = ms.at[rows, slot].set(jnp.where(fits, size, 0), mode="drop")
+    ml = ml.at[rows, slot].set(jnp.where(fits, loc, EMPTY), mode="drop")
+    mc = mc + fits.sum(axis=1).astype(jnp.int32)
+    dropped = dropped + (c_new & ~fits).sum(axis=1).astype(jnp.int32)
+
+    # UPDATE (size := max(size, new); loc := new if >= 0).
+    # A write to a file without an entry upserts it (implicit create on
+    # first write, as in GekkoFS).
+    u_ok = valid & (op == OP_UPDATE)
+    fnd_u0, _ = find(mk, key, u_ok)
+    missing = u_ok & ~fnd_u0
+    rank_m = jnp.cumsum(missing.astype(jnp.int32), axis=1) - 1
+    slot_m = mc[:, None] + rank_m
+    fits_m = missing & (slot_m < mcap)
+    slot_m = jnp.where(fits_m, slot_m, mcap)
+    mk = mk.at[rows, slot_m].set(jnp.where(fits_m, key, EMPTY), mode="drop")
+    ms = ms.at[rows, slot_m].set(jnp.where(fits_m, jnp.zeros_like(size), 0),
+                                 mode="drop")
+    ml = ml.at[rows, slot_m].set(jnp.where(fits_m, loc, EMPTY), mode="drop")
+    mc = mc + fits_m.sum(axis=1).astype(jnp.int32)
+    dropped = dropped + (missing & ~fits_m).sum(axis=1).astype(jnp.int32)
+
+    fnd_u, idx_u = find(mk, key, u_ok)
+    cur_sz = jnp.take_along_axis(ms, idx_u, axis=1)
+    new_sz = jnp.where(fnd_u, jnp.maximum(cur_sz, size), cur_sz)
+    ms = ms.at[rows, jnp.where(fnd_u, idx_u, mcap)].set(new_sz, mode="drop")
+    cur_loc = jnp.take_along_axis(ml, idx_u, axis=1)
+    new_loc = jnp.where(fnd_u & (loc >= 0), loc, cur_loc)
+    ml = ml.at[rows, jnp.where(fnd_u, idx_u, mcap)].set(new_loc, mode="drop")
+
+    # STAT
+    s_ok = valid & (op == OP_STAT)
+    fnd_s, idx_s = find(mk, key, s_ok)
+    r_size = jnp.where(fnd_s, jnp.take_along_axis(ms, idx_s, axis=1), -1)
+    r_loc = jnp.where(fnd_s, jnp.take_along_axis(ml, idx_s, axis=1), -1)
+
+    # REMOVE
+    r_ok = valid & (op == OP_REMOVE)
+    fnd_r, idx_r = find(mk, key, r_ok)
+    mk = mk.at[rows, jnp.where(fnd_r, idx_r, mcap)].set(EMPTY, mode="drop")
+
+    found = (valid & (op == OP_CREATE) & True) | fnd_u | fnd_s | fnd_r
+    new_state = BBState(state.data, state.data_keys, state.data_count,
+                        mk, ms, ml, mc, dropped)
+    return new_state, found, r_size, r_loc
+
+
+# ---------------------------------------------------------------------------
+# client-visible batched operations
+# ---------------------------------------------------------------------------
+def forward_write(state: BBState, params: LayoutParams, path_hash: jax.Array,
+                  chunk_id: jax.Array, payload: jax.Array, valid: jax.Array,
+                  exchange: Callable = stacked_exchange,
+                  node_ids: Optional[jax.Array] = None) -> BBState:
+    """Each node writes a batch of chunks. path_hash/chunk_id/valid: (L, q);
+    payload: (L, q, w).  L is the local node count (N stacked, 1 under
+    shard_map); ``node_ids`` are the global ranks of the local nodes."""
+    N = params.n_nodes
+    L = state.data.shape[0]
+    client = (jnp.arange(L, dtype=jnp.int32) if node_ids is None
+              else node_ids.astype(jnp.int32))[:, None]
+    dest = f_data(params, path_hash, chunk_id, client, xp=jnp)
+    keys = jnp.stack([path_hash, chunk_id], axis=-1)
+    if params.mode in (LayoutMode.NODE_LOCAL, LayoutMode.HYBRID):
+        # pure local write: no exchange at all (the Mode-1/4 fast path)
+        state = _append_chunks(state, keys, payload, valid)
+    else:
+        buckets, hit = bucketize(dest, valid, N,
+                                 {"keys": keys, "payload": payload})
+        rk = exchange(buckets["keys"])            # (L, N_src, q, 2)
+        rp = exchange(buckets["payload"])
+        rv = exchange(hit)
+        state = _append_chunks(state, rk.reshape(L, -1, 2),
+                               rp.reshape(L, rk.shape[1] * rk.shape[2], -1),
+                               rv.reshape(L, -1))
+    # metadata: create/update file entries at their owners
+    op = jnp.where(chunk_id == 0, OP_CREATE, OP_UPDATE)
+    # mode 4 records the data location (writer rank) in the metadata
+    loc = (jnp.broadcast_to(client, dest.shape)
+           if params.mode == LayoutMode.HYBRID else
+           jnp.full_like(dest, -1))
+    state, _, _, _ = meta_op(state, params, op, path_hash,
+                             chunk_id + 1, loc, valid, exchange, node_ids)
+    return state
+
+
+def forward_read(state: BBState, params: LayoutParams, path_hash: jax.Array,
+                 chunk_id: jax.Array, valid: jax.Array,
+                 exchange: Callable = stacked_exchange,
+                 node_ids: Optional[jax.Array] = None
+                 ) -> Tuple[jax.Array, jax.Array]:
+    """Each node reads a batch of chunks → (payload (L, q, w), found (L, q))."""
+    N = params.n_nodes
+    L = state.data.shape[0]
+    q = path_hash.shape[1]
+    client = (jnp.arange(L, dtype=jnp.int32) if node_ids is None
+              else node_ids.astype(jnp.int32))[:, None]
+    keys = jnp.stack([path_hash, chunk_id], axis=-1)
+
+    if params.mode == LayoutMode.HYBRID:
+        # phase 1: metadata lookup for data_location_rank
+        _, found_m, _, loc = meta_op(
+            state, params, jnp.full_like(path_hash, OP_STAT), path_hash,
+            jnp.zeros_like(path_hash), jnp.full_like(path_hash, -1),
+            valid, exchange, node_ids)
+        dest = f_data(params, path_hash, chunk_id, client, data_loc=loc,
+                      xp=jnp)
+        dest = jnp.where(found_m & (loc >= 0), dest, client)
+    elif params.mode == LayoutMode.NODE_LOCAL:
+        dest = jnp.broadcast_to(client, path_hash.shape)
+    else:
+        dest = f_data(params, path_hash, chunk_id, client, xp=jnp)
+
+    payload, found = _routed_lookup(state, dest, keys, valid, exchange, N)
+
+    if params.mode in (LayoutMode.NODE_LOCAL, LayoutMode.HYBRID):
+        # Stranded-data fallback: broadcast-search all nodes for misses.
+        # Mode 1: any cross-node read is stranded (the paper's structural
+        # penalty).  Mode 4: file-granular data_location_rank cannot resolve
+        # multi-writer shared files; residual chunks are searched (costed as
+        # a redirect penalty in the simulator).
+        miss = valid & ~found
+        bpay, bfound = _broadcast_lookup(state, keys, miss, exchange, N)
+        payload = jnp.where(bfound[..., None], bpay, payload)
+        found = found | bfound
+    return payload, found
+
+
+def _routed_lookup(state, dest, keys, valid, exchange, N):
+    L = state.data.shape[0]
+    buckets, hit = bucketize(dest, valid, N, {"keys": keys})
+    rk = exchange(buckets["keys"])                     # (L, N_src, q, 2)
+    rv = exchange(hit)
+    q = rk.shape[2]
+    pay, fnd = _lookup_chunks(state, rk.reshape(L, -1, 2), rv.reshape(L, -1))
+    pay = exchange(pay.reshape(L, N, q, -1))           # back to requesters
+    fnd = exchange(fnd.reshape(L, N, q))
+    payload = collect_replies(dest, pay, N)
+    found = collect_replies(dest, fnd.astype(jnp.int32), N) > 0
+    return payload, found & valid
+
+
+def _broadcast_lookup(state, keys, valid, exchange, N):
+    """Query every node (Mode-1 stranded-read path)."""
+    L = state.data.shape[0]
+    q = keys.shape[1]
+    kb = jnp.broadcast_to(keys[:, None], (L, N, q, 2))
+    vb = jnp.broadcast_to(valid[:, None], (L, N, q))
+    rk = exchange(kb)
+    rv = exchange(vb)
+    pay, fnd = _lookup_chunks(state, rk.reshape(L, -1, 2), rv.reshape(L, -1))
+    pay = exchange(pay.reshape(L, N, q, -1))
+    fnd = exchange(fnd.reshape(L, N, q))
+    found_any = fnd.any(axis=1)
+    # take the reply from the first node that had it
+    first = jnp.argmax(fnd, axis=1)                    # (N, q)
+    payload = jnp.take_along_axis(
+        pay, first[:, None, :, None], axis=1)[:, 0]
+    return jnp.where(found_any[..., None], payload, 0), found_any & valid
+
+
+def meta_op(state: BBState, params: LayoutParams, op: jax.Array,
+            path_hash: jax.Array, size: jax.Array, loc: jax.Array,
+            valid: jax.Array, exchange: Callable = stacked_exchange,
+            node_ids: Optional[jax.Array] = None
+            ) -> Tuple[BBState, jax.Array, jax.Array, jax.Array]:
+    """Batched metadata operations routed to their owner nodes.
+
+    Returns (state, found (L,q), size (L,q), loc (L,q))."""
+    N = params.n_nodes
+    L = state.data.shape[0]
+    q = path_hash.shape[1]
+    client = (jnp.arange(L, dtype=jnp.int32) if node_ids is None
+              else node_ids.astype(jnp.int32))[:, None]
+    owner = f_meta_f(params, path_hash, client, xp=jnp)
+    buckets, hit = bucketize(
+        owner, valid, N,
+        {"op": op, "key": path_hash, "size": size, "loc": loc})
+    r = {k: exchange(v) for k, v in buckets.items()}
+    rv = exchange(hit)
+    state, fnd, r_size, r_loc = _meta_apply(
+        state, r["op"].reshape(L, -1), r["key"].reshape(L, -1),
+        r["size"].reshape(L, -1), r["loc"].reshape(L, -1),
+        rv.reshape(L, -1))
+    fnd = exchange(fnd.reshape(L, N, q).astype(jnp.int32))
+    r_size = exchange(r_size.reshape(L, N, q))
+    r_loc = exchange(r_loc.reshape(L, N, q))
+    found = collect_replies(owner, fnd, N) > 0
+    size_out = collect_replies(owner, r_size, N)
+    loc_out = collect_replies(owner, r_loc, N)
+    return state, found & valid, size_out, loc_out

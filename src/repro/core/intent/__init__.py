@@ -1,0 +1,1 @@
+from repro.core.intent.selector import LayoutDecision, select_layout  # noqa: F401

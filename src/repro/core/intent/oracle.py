@@ -1,0 +1,20 @@
+"""Oracle: empirically optimal mode via exhaustive execution (§IV-C)."""
+from __future__ import annotations
+
+from typing import Dict, List
+
+from repro.core.layouts import LayoutMode
+from repro.core.simulator import Hardware, DEFAULT_HW, simulate
+from repro.core.workloads import Workload, build_workloads
+
+
+def oracle_mode(workload: Workload, hw: Hardware = DEFAULT_HW,
+                seed: int = 0) -> LayoutMode:
+    times = {m: simulate(workload, m, workload.n_nodes, hw, seed).total_s
+             for m in LayoutMode}
+    return min(times, key=times.get)
+
+
+def oracle_table(n_nodes: int = 32, hw: Hardware = DEFAULT_HW
+                 ) -> Dict[str, LayoutMode]:
+    return {w.name: oracle_mode(w, hw) for w in build_workloads(n_nodes)}

@@ -1,0 +1,48 @@
+"""End-to-end layout selection: extract → probe → reason → decide (§III-A)."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+from repro.core.intent.context import HybridContext
+from repro.core.intent.probe import run_probe
+from repro.core.intent.prompt import build_prompt
+from repro.core.intent.reasoner import (Decision, KnowledgeReasoner,
+                                        LLMBackend, parse_decision)
+from repro.core.intent.static_extractor import extract_static
+from repro.core.layouts import LayoutMode, LayoutParams
+from repro.core.workloads import Workload
+
+
+@dataclass
+class LayoutDecision:
+    workload: str
+    mode: LayoutMode
+    confidence: float
+    decision: Decision
+    prompt: str
+    context_json: str
+
+    def layout_params(self, n_nodes: int) -> LayoutParams:
+        return LayoutParams(mode=self.mode, n_nodes=n_nodes)
+
+
+def select_layout(workload: Workload, *, use_runtime: bool = True,
+                  use_app_ref: bool = True, use_mode_know: bool = True,
+                  backend: Optional[LLMBackend] = None,
+                  probe_seed: int = 0) -> LayoutDecision:
+    """The full Proteus decision pipeline for one job."""
+    static = extract_static(workload.source_code, workload.job_script)
+    runtime = run_probe(workload, seed=probe_seed) if use_runtime else None
+    ctx = HybridContext(app=workload.app, static=static, runtime=runtime,
+                        n_nodes=workload.n_nodes)
+    prompt = build_prompt(ctx, use_app_ref=use_app_ref,
+                          use_mode_know=use_mode_know)
+    if backend is not None:
+        decision = parse_decision(backend.complete(prompt))
+    else:
+        reasoner = KnowledgeReasoner(use_app_ref=use_app_ref,
+                                     use_mode_know=use_mode_know)
+        decision = reasoner.reason(ctx)
+    return LayoutDecision(workload.name, decision.mode, decision.confidence,
+                          decision, prompt, ctx.to_json())

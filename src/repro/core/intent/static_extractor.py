@@ -1,0 +1,230 @@
+"""Static intent extraction from source code and job scripts (§III-C.a).
+
+Regex/heuristic analysis of C-like I/O kernels and launch scripts.  The
+extractor recovers the *logical* I/O structure — access topology, file-name
+construction, collective-I/O usage, rank-dependent control flow — and the
+script-exposed execution configuration.  Execution-intensity quantities
+(exact byte volumes, op ratios) are intentionally NOT inferred here; they
+come from the runtime probe (probe.py), per the paper's hybrid split.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, Optional
+
+
+@dataclass
+class StaticFeatures:
+    # access topology
+    topology_hint: str = "unknown"      # "N-N" | "N-1" | "mixed"
+    rank_indexed_files: bool = False
+    shared_file: bool = False
+    collective_io: bool = False
+    # patterns
+    access_pattern: str = "unknown"     # "seq" | "strided" | "random"
+    cross_rank_read: bool = False       # reads of files another rank wrote
+    multi_phase: bool = False
+    phase_pattern: str = "single"       # "write_then_read"|"create_then_stat"|...
+    # intensity hints (structural only)
+    meta_intensity: str = "low"         # "low" | "medium" | "high"
+    has_data_calls: bool = True
+    create_heavy: bool = False
+    small_requests: bool = False
+    tiny_requests: bool = False         # <= 1 KiB records
+    latency_sensitive: bool = False
+    # namespace
+    dir_pattern: str = "unknown"        # "unique" | "shared" | "deep"
+    # direction
+    direction_hint: str = "unknown"     # "write" | "read" | "mixed"
+    # script-derived
+    bench_params: Dict[str, str] = field(default_factory=dict)
+    n_nodes: int = 0
+    ppn: int = 0
+    app_hint: str = ""
+
+
+_RANK_FILE = re.compile(
+    r'sprintf\s*\([^;]*%[0-9]*d[^;]*rank|filename_format\s*=.*\$jobnum'
+    r'|rank%04d|\.%0?\d*d", *dir, *rank', re.S)
+_COLLECTIVE = re.compile(
+    r'MPI_File_(write|read)(_at)?_all|MPI_File_set_view')
+_SHARED_FILE = re.compile(
+    r'MPI_File_(open|read|write)|filename\s*=\s*\S+\.dat|shared')
+_RANDOM = re.compile(r'rand(read|write|rw|om)|file_service_type=random')
+_STRIDED = re.compile(r'off\s*\+=\s*\(MPI_Offset\)\s*np|set_view')
+_SEQ = re.compile(r'off\s*\+=\s*xfer|rw\s*=\s*write\b|for[^;]*off[^;]*\+=')
+_CROSS_RANK = re.compile(
+    r'\(rank\s*\+\s*1\)\s*%\s*np|for\s*\(int\s+r\s*=\s*0;\s*r\s*<\s*np')
+_META_CALL = re.compile(r'\b(creat|unlink|stat|fstat|fsync|utime|mkdir)\s*\('
+                        r'|O_CREAT')
+_COND_META = re.compile(r'if\s*\([^)]*%[^)]*\)\s*{[^}]*\b(stat|fstat|utime)'
+                        r'|if\s*\(\(i\s*&\s*\d+\)')
+_OPEN_CLOSE_LOOP = re.compile(
+    r'for[^{]*{[^}]*open\s*\([^}]*close\s*\(', re.S)
+_SMALL_REQ = re.compile(
+    r'\bbs\s*=\s*([0-9]+)k\b|sizeof\(attr|,\s*512\s*,|XFER\b.*4096|\b4k\b')
+_TINY_REQ = re.compile(r',\s*512\s*,|sizeof\(attr|\bbs\s*=\s*(512|1k)\b')
+_CREATE_HEAVY = re.compile(r'\bcreat\s*\(|O_CREAT|nrfiles\s*=\s*\d{4,}'
+                           r'|filename_format')
+_FIO_RW = re.compile(r'^\s*rw\s*=\s*(\w+)', re.M)
+_RANK_SUBDIR = re.compile(r'rank%0?\d*d/')
+_WRITE_CALLS = re.compile(r'\b(pwrite|write|MPI_File_write)\w*\s*\(')
+_READ_CALLS = re.compile(r'\b(pread|read|MPI_File_read)\w*\s*\(')
+_BARRIER_SPLIT = re.compile(r'MPI_Barrier')
+
+
+def extract_source_features(src: str, f: Optional[StaticFeatures] = None
+                            ) -> StaticFeatures:
+    f = f or StaticFeatures()
+    f.rank_indexed_files = bool(_RANK_FILE.search(src))
+    f.collective_io = bool(_COLLECTIVE.search(src))
+    shared = bool(_SHARED_FILE.search(src)) and not f.rank_indexed_files
+    f.shared_file = shared
+    if f.rank_indexed_files and not shared:
+        f.topology_hint = "N-N"
+    elif shared:
+        f.topology_hint = "N-1"
+
+    if _RANDOM.search(src):
+        f.access_pattern = "random"
+    elif _STRIDED.search(src):
+        f.access_pattern = "strided"
+    elif _SEQ.search(src):
+        f.access_pattern = "seq"
+
+    f.cross_rank_read = bool(_CROSS_RANK.search(src))
+    writes = len(_WRITE_CALLS.findall(src))
+    reads = len(_READ_CALLS.findall(src))
+    if writes and reads:
+        f.direction_hint = "mixed"
+    elif writes:
+        f.direction_hint = "write"
+    elif reads:
+        f.direction_hint = "read"
+
+    # fio ini jobs: rw= drives direction
+    rw_modes = _FIO_RW.findall(src)
+    if rw_modes:
+        has_w = any("write" in m or m == "randrw" for m in rw_modes)
+        has_r = any("read" in m or m == "randrw" for m in rw_modes)
+        f.direction_hint = ("mixed" if has_w and has_r else
+                            "write" if has_w else "read")
+        if len(rw_modes) > 1 or any(m == "randrw" for m in rw_modes):
+            f.multi_phase = len(rw_modes) > 1
+        writes += 1 if has_w else 0
+        reads += 1 if has_r else 0
+    nrfiles_high = bool(re.search(r"nrfiles\s*=\s*\d{4,}", src))
+
+    meta_calls = len(_META_CALL.findall(src))
+    data_calls = writes + reads
+    in_loop_meta = bool(_OPEN_CLOSE_LOOP.search(src)) or \
+        ("for" in src and meta_calls >= 2 and not _COND_META.search(src))
+    if nrfiles_high or (meta_calls >= 2 and in_loop_meta):
+        f.meta_intensity = "high"
+    elif meta_calls >= 1 and not _COND_META.search(src):
+        f.meta_intensity = "medium" if data_calls else "high"
+    else:
+        f.meta_intensity = "low"
+
+    f.has_data_calls = data_calls > 0
+    f.create_heavy = bool(_CREATE_HEAVY.search(src))
+    f.small_requests = bool(_SMALL_REQ.search(src))
+    f.tiny_requests = bool(_TINY_REQ.search(src))
+    f.latency_sensitive = f.tiny_requests and meta_calls >= 1
+
+    # phase structure: write phase separated by control flow from a read
+    has_rite = src.find("rite")
+    if _BARRIER_SPLIT.search(src) or \
+            (writes and reads and 0 <= has_rite < src.rfind("read")):
+        if writes and reads:
+            f.multi_phase = True
+            f.phase_pattern = "write_then_read"
+    if "creat" in src and "stat" in src:
+        if f.phase_pattern == "single":
+            f.phase_pattern = "create_then_stat"
+
+    # namespace structure: only a per-rank SUBDIR makes the namespace
+    # unique; rank-indexed file NAMES in a common parent still contend on
+    # that parent directory.
+    if _RANK_SUBDIR.search(src):
+        f.dir_pattern = "unique"
+    elif re.search(r'/shared/|filename\s*=|%s/', src):
+        f.dir_pattern = "shared"
+    return f
+
+
+_FLAG = re.compile(r'(-{1,2}[A-Za-z][\w-]*)(?:[= ]([^\s-][^\s]*))?')
+_SBATCH_N = re.compile(r'#SBATCH\s+-N\s+(\d+)')
+_SBATCH_PPN = re.compile(r'#SBATCH\s+--ntasks-per-node=(\d+)')
+
+
+def extract_script_features(script: str, f: Optional[StaticFeatures] = None
+                            ) -> StaticFeatures:
+    f = f or StaticFeatures()
+    m = _SBATCH_N.search(script)
+    if m:
+        f.n_nodes = int(m.group(1))
+    m = _SBATCH_PPN.search(script)
+    if m:
+        f.ppn = int(m.group(1))
+    # the srun/launch line
+    launch = ""
+    for line in script.splitlines():
+        if line.strip().startswith(("srun", "mpirun", "aprun")):
+            launch = line
+    tokens = launch.split()
+    app = ""
+    for t in tokens[1:]:
+        if not t.startswith("-") and not t[0].isdigit() and t != "srun":
+            app = t
+            break
+    f.app_hint = app
+    for flag, val in _FLAG.findall(launch):
+        f.bench_params[flag] = val or "true"
+
+    bp = f.bench_params
+    # IOR / mdtest / fio flag semantics
+    if "-F" in bp:
+        f.topology_hint, f.rank_indexed_files = "N-N", True
+    if "-c" in bp or "-a" in bp and bp.get("-a") == "MPIIO":
+        f.collective_io = True
+    if "mdtest" in app:
+        # the script flags decide the namespace shape authoritatively
+        f.dir_pattern = ("unique" if "-u" in bp else
+                         "deep" if "-z" in bp else "shared")
+    elif "-u" in bp:
+        f.dir_pattern = "unique"
+    if "-N" in bp and "mdtest" in app:
+        f.cross_rank_read = True
+    if "--rwmixread" in bp:
+        f.direction_hint = "mixed"
+        f.bench_params["read_pct"] = bp["--rwmixread"]
+    if "-w" in bp and "-r" in bp:
+        f.direction_hint = "mixed"
+        f.multi_phase = True
+        f.phase_pattern = "write_then_read"
+    elif "-w" in bp:
+        f.direction_hint = "write"
+    elif "-r" in bp:
+        f.direction_hint = "read"
+    if "-C" in bp and "mdtest" in app:
+        f.cross_rank_read = True
+    t = bp.get("-t", "")
+    if t.endswith(("k", "K")) and t[:-1].isdigit() and int(t[:-1]) <= 64:
+        f.small_requests = True
+    if "shared_file" in launch or "-o" in bp and "shared" in bp.get("-o", ""):
+        f.shared_file = True
+        f.topology_hint = "N-1"
+    return f
+
+
+def extract_static(source: str, script: str) -> StaticFeatures:
+    f = extract_source_features(source)
+    f = extract_script_features(script, f)
+    # default: a common parent directory is shared territory
+    if f.dir_pattern == "unknown":
+        f.dir_pattern = "shared"
+    if f.topology_hint == "unknown":
+        f.topology_hint = "N-1" if f.shared_file else "N-N"
+    return f

@@ -1,0 +1,153 @@
+"""Proteus multi-mode layouts: the routing-function triplet ⟨f_data, f_meta_f, f_meta_d⟩.
+
+The paper realizes four burst-buffer layouts purely by specializing three
+routing functions (§III-B).  We keep that exact structure: a ``LayoutMode``
+picks a triplet implementation; all functions are *vectorized* over request
+batches (TPU-native adaptation — see DESIGN.md §2: per-request function
+pointers become batched vector routing).
+
+Path identity is an FNV-1a hash of the path string, computed once at the
+client boundary (``str_hash``); all routing math below is pure integer
+arithmetic on (path_hash, chunk_id, client_rank) arrays and works under
+numpy *and* jax.numpy (the simulator uses numpy; the mesh engine jnp).
+"""
+from __future__ import annotations
+
+import enum
+from dataclasses import dataclass, field
+from typing import Optional
+
+import numpy as np
+
+FNV_OFFSET = np.uint64(0xCBF29CE484222325)
+FNV_PRIME = np.uint64(0x100000001B3)
+_U32_MASK = np.uint64(0x7FFFFFFF)
+
+
+class LayoutMode(enum.IntEnum):
+    NODE_LOCAL = 1      # Mode 1: everything → localhost (DataWarp private)
+    CENTRAL_META = 2    # Mode 2: metadata → server subset (BeeGFS-like)
+    DIST_HASH = 3       # Mode 3: consistent hashing everywhere (GekkoFS)
+    HYBRID = 4          # Mode 4: local writes + global hashed metadata (HadaFS)
+
+
+DEFAULT_MODE = LayoutMode.DIST_HASH  # the paper's fail-safe fallback
+
+
+def str_hash(s: str) -> int:
+    """FNV-1a over a path string → 31-bit non-negative int."""
+    h = FNV_OFFSET
+    for b in s.encode():
+        h = np.uint64((int(h) ^ b) * int(FNV_PRIME) & 0xFFFFFFFFFFFFFFFF)
+    return int(h & _U32_MASK)
+
+
+def mix_hash(xp, a, b):
+    """Vectorized integer mix of two int32 arrays → non-negative int32.
+
+    A cheap FNV-style combine usable in numpy / jnp / Pallas.
+    """
+    a = xp.asarray(a).astype(xp.uint32)
+    b = xp.asarray(b).astype(xp.uint32)
+    h = xp.asarray(np.uint32(2166136261))
+    # mask to 31 bits after each multiply so the arithmetic is bit-identical
+    # in uint32 (here) and int32 (the Pallas chunk_router kernel)
+    for part in (a, b):
+        h = (h ^ part) * xp.asarray(np.uint32(16777619))
+        h = h & xp.asarray(np.uint32(0x7FFFFFFF))
+        h = h ^ (h >> xp.asarray(np.uint32(15)))
+    return (h & xp.asarray(np.uint32(0x7FFFFFFF))).astype(xp.int32)
+
+
+@dataclass(frozen=True)
+class LayoutParams:
+    """Static per-job layout configuration (chosen before launch)."""
+
+    mode: LayoutMode
+    n_nodes: int
+    metadata_server_ratio: float = 0.125   # Mode 2: |S_md| / N
+    chunk_bytes: int = 1 << 20
+
+    @property
+    def n_md_servers(self) -> int:
+        return max(1, int(round(self.n_nodes * self.metadata_server_ratio)))
+
+
+# ---------------------------------------------------------------------------
+# routing triplet — vectorized over request batches
+# ---------------------------------------------------------------------------
+def f_data(params: LayoutParams, path_hash, chunk_id, client_rank,
+           data_loc=None, xp=np):
+    """Data-placement routing: destination node per chunk.
+
+    Mode 4: writers resolve locally (``pathhost_[path]`` = writer's rank);
+    readers pass ``data_loc`` (the metadata-recorded data_location_rank).
+    """
+    m = params.mode
+    N = params.n_nodes
+    if m == LayoutMode.NODE_LOCAL:
+        return xp.broadcast_to(xp.asarray(client_rank),
+                               xp.asarray(path_hash).shape).astype(xp.int32)
+    if m in (LayoutMode.CENTRAL_META, LayoutMode.DIST_HASH):
+        return (mix_hash(xp, path_hash, chunk_id) % N).astype(xp.int32)
+    # HYBRID
+    if data_loc is not None:
+        return xp.asarray(data_loc).astype(xp.int32)
+    return xp.broadcast_to(xp.asarray(client_rank),
+                           xp.asarray(path_hash).shape).astype(xp.int32)
+
+
+def f_meta_f(params: LayoutParams, path_hash, client_rank, xp=np):
+    """File-metadata owner node."""
+    m = params.mode
+    if m == LayoutMode.NODE_LOCAL:
+        return xp.broadcast_to(xp.asarray(client_rank),
+                               xp.asarray(path_hash).shape).astype(xp.int32)
+    if m == LayoutMode.CENTRAL_META:
+        return (xp.asarray(path_hash).astype(xp.int32)
+                % params.n_md_servers).astype(xp.int32)
+    return (xp.asarray(path_hash).astype(xp.int32)
+            % params.n_nodes).astype(xp.int32)
+
+
+def f_meta_d(params: LayoutParams, dir_hash, client_rank, xp=np):
+    """Directory-metadata owner (scope) node."""
+    m = params.mode
+    if m == LayoutMode.NODE_LOCAL:
+        return xp.broadcast_to(xp.asarray(client_rank),
+                               xp.asarray(dir_hash).shape).astype(xp.int32)
+    if m == LayoutMode.CENTRAL_META:
+        return (xp.asarray(dir_hash).astype(xp.int32)
+                % params.n_md_servers).astype(xp.int32)
+    return (xp.asarray(dir_hash).astype(xp.int32)
+            % params.n_nodes).astype(xp.int32)
+
+
+# ---------------------------------------------------------------------------
+# mode knowledge (architectural trade-offs; feeds the KB in intent/knowledge)
+# ---------------------------------------------------------------------------
+MODE_TRAITS = {
+    LayoutMode.NODE_LOCAL: dict(
+        locality="extreme", sharing="none", metadata="local",
+        best_for=["N-N independent writes", "checkpoint bursts"],
+        weak_for=["shared reads", "cross-node metadata", "N-1 access"],
+    ),
+    LayoutMode.CENTRAL_META: dict(
+        locality="low", sharing="strong", metadata="centralized subset",
+        best_for=["metadata storms", "N-1 shared contention",
+                  "stable tail latency", "remove/stat heavy"],
+        weak_for=["pure bandwidth N-N writes at scale"],
+    ),
+    LayoutMode.DIST_HASH: dict(
+        locality="none", sharing="uniform", metadata="fully distributed",
+        best_for=["random unstructured I/O", "high-concurrency scaling",
+                  "fail-safe default"],
+        weak_for=["sequential local bursts", "global scans"],
+    ),
+    LayoutMode.HYBRID: dict(
+        locality="write-local", sharing="read-global", metadata="hashed global",
+        best_for=["write-then-read workflows", "N-1 write bursts",
+                  "create-heavy metadata", "multi-phase"],
+        weak_for=["small random I/O jitter at scale"],
+    ),
+}

@@ -1,0 +1,88 @@
+"""shard_map deployment of the burst-buffer engine on a device mesh.
+
+The stacked engine (burst_buffer.py) runs unchanged per-node under
+``shard_map``: the node axis is sharded 1-per-device, global ranks come from
+``axis_index`` and the exchange becomes ``lax.all_to_all`` over the ``node``
+axis.  This is the production data plane used by the checkpoint manager and
+the BB dry-run.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as PS
+from jax.experimental.shard_map import shard_map
+
+from repro.core import burst_buffer as bb
+from repro.core.layouts import LayoutParams
+
+NODE_AXIS = "node"
+
+
+def mesh_exchange(x: jax.Array) -> jax.Array:
+    """Per-node (L, N, q, ...) -> (L, N, q, ...) with src/dst swapped globally."""
+    y = jax.lax.all_to_all(x, NODE_AXIS, split_axis=1, concat_axis=0,
+                           tiled=True)
+    # y: (N * L, ?, q, ...) with local leading = N, second = L
+    return jnp.swapaxes(y, 0, 1) if y.shape[0] != x.shape[0] else y
+
+
+def _node_ids(local_n: int) -> jax.Array:
+    base = jax.lax.axis_index(NODE_AXIS) * local_n
+    return base + jnp.arange(local_n, dtype=jnp.int32)
+
+
+def make_mesh_ops(mesh: Mesh, params: LayoutParams):
+    """Returns jitted (write, read, meta) ops bound to a mesh.
+
+    State and request arrays are sharded over the ``node`` axis on their
+    leading dim.
+    """
+    n_dev = mesh.shape[NODE_AXIS]
+    assert params.n_nodes % n_dev == 0
+    local_n = params.n_nodes // n_dev
+    state_spec = PS(NODE_AXIS)
+    req_spec = PS(NODE_AXIS)
+
+    def _write(state, ph, cid, payload, valid):
+        return bb.forward_write(state, params, ph, cid, payload, valid,
+                                exchange=mesh_exchange,
+                                node_ids=_node_ids(local_n))
+
+    def _read(state, ph, cid, valid):
+        return bb.forward_read(state, params, ph, cid, valid,
+                               exchange=mesh_exchange,
+                               node_ids=_node_ids(local_n))
+
+    def _meta(state, op, ph, size, loc, valid):
+        return bb.meta_op(state, params, op, ph, size, loc, valid,
+                          exchange=mesh_exchange,
+                          node_ids=_node_ids(local_n))
+
+    state_specs = jax.tree_util.tree_map(
+        lambda _: state_spec, bb.init_state(1, 1, 1, 1))
+
+    write = jax.jit(shard_map(
+        _write, mesh=mesh,
+        in_specs=(state_specs, req_spec, req_spec, req_spec, req_spec),
+        out_specs=state_specs, check_rep=False))
+    read = jax.jit(shard_map(
+        _read, mesh=mesh,
+        in_specs=(state_specs, req_spec, req_spec, req_spec),
+        out_specs=(req_spec, req_spec), check_rep=False))
+    meta = jax.jit(shard_map(
+        _meta, mesh=mesh,
+        in_specs=(state_specs, req_spec, req_spec, req_spec, req_spec,
+                  req_spec),
+        out_specs=(state_specs, req_spec, req_spec, req_spec),
+        check_rep=False))
+    return write, read, meta
+
+
+def make_node_mesh(n_devices: int = None) -> Mesh:
+    devs = jax.devices()
+    n = n_devices or len(devs)
+    return jax.make_mesh((n,), (NODE_AXIS,))

@@ -1,0 +1,334 @@
+"""Calibrated analytic performance model for the four BB layouts.
+
+This container has no storage cluster, so Figures 7–14 are reproduced with a
+structural cost model: every phase's time is the max over resource classes
+(node-local SSD, NIC, metadata CPU) of demand/capacity, plus latency and
+contention terms that encode the paper's architectural trade-offs:
+
+* Mode 1 — data+metadata local: zero network on writes; reads of remote data
+  broadcast-search all nodes (stranded-data penalty, §IV-B); shared
+  namespaces collapse.
+* Mode 2 — centralized metadata subset: md capacity = |S_md|·rate but with
+  low arbitration variance (best tail latency); removes/traversals cheap
+  (single-owner, no distributed locking).
+* Mode 3 — consistent hashing: data/metadata spread uniformly; shared-dir
+  ops hash to ONE owner → lock hotspot; best random-read scaling.
+* Mode 4 — local writes + hashed global metadata: write bandwidth near
+  Mode 1 minus synchronous md-update tax; reads pay one redirect RPC;
+  jitter grows with node count (pathhost invalidation storms).
+
+Calibration constants are chosen once, globally (not per workload), so the
+paper's anchor numbers emerge from the structure: Mode-1 checkpoint
+≈35 GiB/s @64 nodes, Mode-4 ≈17.5 GiB/s, Mode-1 write collapse ≈164 IOPS
+@32 nodes/90% reads, Mode-3 ≈1272 IOPS high-read, IOR-A 3.24× etc.
+(EXPERIMENTS.md §Paper-validation reports each anchor against its target.)
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core.layouts import LayoutMode
+
+
+@dataclass(frozen=True)
+class Hardware:
+    ssd_write_mibs: float = 560.0     # per-node local write BW
+    ssd_read_mibs: float = 760.0
+    net_mibs: float = 240.0           # per-node effective NIC BW
+    rpc_ms: float = 0.060             # one-way small RPC
+    md_service_ms: float = 0.050      # metadata op service time at owner
+    ssd_iops: float = 11_000.0        # 4KiB random IOPS per node
+    net_iops: float = 7_000.0         # small-message msg/s per node
+    incast_factor: float = 4.2        # broadcast/incast queueing amplification
+    bcast_probe_ms: float = 0.021     # per-node key probe during broadcast
+    lock_factor: float = 0.10         # per-extra-client distributed-lock tax
+    md_server_eff: float = 4.0        # Mode-2 dedicated-server pipelining
+    m1_cross_cap: float = 11_000.0    # Mode-1 cross-rank metadata ceiling
+    md_buffer_boost: float = 2.1      # Mode-4 local create buffering
+    central_arb_tax: float = 0.012    # Mode-2 per-node arbitration overhead
+    shared_file_m1_cap: float = 9_000.0  # Mode-1 shared-file reconciliation
+
+
+DEFAULT_HW = Hardware()
+
+
+@dataclass
+class Phase:
+    kind: str                 # "bw" | "iops" | "meta"
+    op: str = "write"         # "write" | "read" | "mixed"
+    topology: str = "NN"      # "NN" | "N1"
+    pattern: str = "seq"      # "seq" | "random" | "strided"
+    total_mib: float = 0.0    # bw phases
+    req_kib: float = 4096.0
+    n_ops: int = 0            # iops/meta phases (global)
+    read_ratio: float = 0.0   # mixed iops phases
+    dir_pattern: str = "unique"   # "unique" | "shared" | "deep"
+    meta_mix: Dict[str, float] = field(default_factory=dict)
+    written_by: str = "self"  # "self" | "other" | "shared" (who wrote the data)
+    cross_rank: float = 0.0   # fraction of stats targeting other ranks' files
+
+
+@dataclass
+class PhaseResult:
+    time_s: float
+    bw_mibs: float = 0.0
+    iops: float = 0.0
+    lat_ms_p50: float = 0.0
+    lat_ms_p95: float = 0.0
+    lat_ms_p99: float = 0.0
+    jitter_cv: float = 0.0    # coefficient of variation (QoS radar)
+    bottleneck: str = ""
+
+
+@dataclass
+class WorkloadResult:
+    total_s: float
+    phases: List[PhaseResult]
+
+    @property
+    def agg_bw(self) -> float:
+        tot = sum(p.bw_mibs * p.time_s for p in self.phases if p.bw_mibs)
+        t = sum(p.time_s for p in self.phases if p.bw_mibs)
+        return tot / t if t else 0.0
+
+
+# ---------------------------------------------------------------------------
+# per-mode structural terms
+# ---------------------------------------------------------------------------
+def _md_capacity(mode: LayoutMode, n: int, hw: Hardware,
+                 dir_pattern: str, op: str = "create") -> float:
+    """Aggregate metadata ops/s for one (mode, dir-pattern, op) class.
+
+    Structure: per-node service rate r = 1/md_service; non-local modes pay an
+    RPC round trip for the (n-1)/n remote fraction; per-mode factors encode
+    the paper's Fig-10 trade-offs (Mode 4 creates/stats via local buffering,
+    Mode 2 removes/traversals via single-owner arbitration, Mode 3 shared-dir
+    lock storms, Mode 1 collapse on any cross-node namespace task).
+    """
+    remote = (n - 1) / n
+    rpc = 2 * hw.rpc_ms * remote
+
+    if mode == LayoutMode.NODE_LOCAL:
+        cap = 1.2 * n * (1e3 / hw.md_service_ms)   # pure local, no RPC stack
+        if dir_pattern in ("shared", "deep"):
+            cap /= (1.0 + 1.5 * n)                 # namespace reconciliation
+        return cap
+
+    if mode == LayoutMode.CENTRAL_META:
+        n_md = max(1, n // 8)
+        svc = hw.md_service_ms + 2 * hw.rpc_ms
+        cap = n_md * hw.md_server_eff * (1e3 / svc) / \
+            (1.0 + hw.central_arb_tax * n)
+        cap *= {"unique": 1.0, "shared": 0.85, "deep": 1.45}[dir_pattern]
+        cap *= {"create": 1.0, "stat": 1.35, "remove": 1.9}.get(op, 1.0)
+        return cap
+
+    if mode == LayoutMode.DIST_HASH:
+        # hash lookups + lock acquisition tax even on private namespaces
+        svc = hw.md_service_ms * (1.0 + 0.16 * math.log2(n + 1)) + rpc
+        cap = n * (1e3 / svc)
+        if dir_pattern == "shared":
+            cap /= (1.0 + hw.lock_factor * (n - 1))  # one-owner lock storm
+        elif dir_pattern == "deep":
+            cap /= 3.2                               # per-level resolution
+        cap *= {"create": 1.0, "stat": 1.0, "remove": 0.75}.get(op, 1.0)
+        return cap
+
+    # HYBRID: hashed placement, but creates/stats served from local buffers
+    svc = hw.md_service_ms + rpc
+    cap = n * (1e3 / svc)
+    if dir_pattern == "shared":
+        cap /= (1.0 + 0.15 * (n - 1))                # invalidation storms
+        cap *= {"create": 3.0, "stat": 2.0, "remove": 0.75}.get(op, 1.0)
+    elif dir_pattern == "deep":
+        cap /= 3.0
+        cap *= {"create": 1.0, "stat": 1.0, "remove": 0.9}.get(op, 1.0)
+    else:
+        cap *= {"create": 4.0, "stat": 2.4, "remove": 0.9}.get(op, 1.0)
+    return cap
+
+
+def _jitter_cv(mode: LayoutMode, n: int, kind: str) -> float:
+    if mode == LayoutMode.CENTRAL_META:
+        return 0.06 + 0.001 * n
+    if mode == LayoutMode.DIST_HASH:
+        return 0.16
+    if mode == LayoutMode.HYBRID:
+        return 0.12 + 0.009 * n            # invalidation storms at scale
+    return 0.10 if kind != "read" else 0.55  # Mode 1 reads: bimodal
+
+
+def _bw_phase(phase: Phase, mode: LayoutMode, n: int, hw: Hardware,
+              rng: np.random.RandomState) -> PhaseResult:
+    total = phase.total_mib
+    chunk_mib = phase.req_kib / 1024.0
+    n_chunks = max(1.0, total / chunk_mib)
+    n_files = max(1.0, n if phase.topology == "NN" else 1.0)
+    md_ops = n_chunks * 0.02 + n_files * 2  # create/size updates (batched)
+
+    writing = phase.op == "write"
+    if writing:
+        if mode == LayoutMode.NODE_LOCAL:
+            if phase.topology == "NN":
+                data_bw = n * hw.ssd_write_mibs
+            else:
+                # N-1 on isolated namespaces: consistency reconciliation
+                data_bw = n * hw.ssd_write_mibs * 0.18
+            bn = "local-ssd"
+        elif mode == LayoutMode.HYBRID:
+            # local write + synchronous hashed-md update per chunk
+            md_tax = 1.0 if phase.topology == "NN" else 0.45
+            data_bw = n * hw.ssd_write_mibs / (1.0 + md_tax)
+            bn = "local-ssd+md-sync"
+        else:  # Modes 2/3: hashed placement → (N-1)/N of bytes over the NIC
+            remote_frac = (n - 1) / n
+            per_node = 1.0 / (remote_frac / hw.net_mibs
+                              + 1.0 / hw.ssd_write_mibs)
+            coll = 1.0
+            if phase.topology == "N1" and mode == LayoutMode.DIST_HASH:
+                coll = 1.25  # chunk-interleaved shared file: mild collisions
+            data_bw = n * per_node / coll
+            bn = "network"
+    else:  # read
+        if mode == LayoutMode.NODE_LOCAL:
+            if phase.written_by == "self":
+                data_bw = n * hw.ssd_read_mibs
+                bn = "local-ssd"
+            else:
+                # stranded data: broadcast search + incast fetch
+                data_bw = n * hw.net_mibs / (hw.incast_factor *
+                                             math.log2(n + 1))
+                bn = "stranded-broadcast"
+        elif mode == LayoutMode.HYBRID:
+            # redirect RPC per file, then remote fetch (NIC + owner SSD)
+            remote_frac = (n - 1) / n
+            per_node = 1.0 / (remote_frac / hw.net_mibs
+                              + 1.0 / hw.ssd_read_mibs)
+            data_bw = n * per_node * 0.92
+            bn = "network+redirect"
+        else:
+            remote_frac = (n - 1) / n
+            per_node = 1.0 / (remote_frac / hw.net_mibs
+                              + 1.0 / hw.ssd_read_mibs)
+            data_bw = n * per_node
+            if mode == LayoutMode.CENTRAL_META and phase.topology == "N1":
+                data_bw *= 1.18   # path resolution amortized at the subset
+            elif mode == LayoutMode.DIST_HASH and phase.topology == "N1":
+                data_bw /= 1.04   # per-chunk owner lookups
+            bn = "network"
+
+    data_t = total / data_bw
+    md_t = md_ops / _md_capacity(mode, n, hw, phase.dir_pattern)
+    t = max(data_t, md_t) + hw.rpc_ms / 1e3 * 4
+    cv = _jitter_cv(mode, n, phase.op)
+    t *= float(1.0 + rng.normal(0, 0.01))
+    bw = total / t
+    lat = chunk_mib / (data_bw / n) * 1e3
+    return PhaseResult(time_s=t, bw_mibs=bw,
+                       lat_ms_p50=lat, lat_ms_p95=lat * (1 + 2 * cv),
+                       lat_ms_p99=lat * (1 + 3.2 * cv), jitter_cv=cv,
+                       bottleneck=bn if data_t >= md_t else "metadata")
+
+
+def _iops_phase(phase: Phase, mode: LayoutMode, n: int, hw: Hardware,
+                rng: np.random.RandomState) -> PhaseResult:
+    """Small-request random I/O (closed loop, one outstanding per rank)."""
+    rr = phase.read_ratio if phase.op == "mixed" else \
+        (1.0 if phase.op == "read" else 0.0)
+
+    def op_cost_ms(is_read: bool) -> float:
+        if mode == LayoutMode.NODE_LOCAL:
+            if not is_read or phase.written_by == "self":
+                return 1e3 / hw.ssd_iops
+            # stranded read: broadcast to all nodes + incast
+            return n * hw.bcast_probe_ms * hw.incast_factor
+        remote = (n - 1) / n
+        base = (1e3 / hw.ssd_iops
+                + remote * (2 * hw.rpc_ms + 1e3 / hw.net_iops))
+        if mode == LayoutMode.CENTRAL_META:
+            base += hw.rpc_ms * (1.0 + hw.central_arb_tax * n)
+        if mode == LayoutMode.HYBRID:
+            if is_read and phase.written_by != "self":
+                base += 2 * hw.rpc_ms          # redirect hop
+            if not is_read:
+                base = 1e3 / hw.ssd_iops + hw.rpc_ms  # local write + async md
+        if mode == LayoutMode.DIST_HASH and is_read:
+            base *= 0.82                        # no redirect, perfect spread
+        return base
+
+    rc, wc = op_cost_ms(True), op_cost_ms(False)
+    cycle_ms = rr * rc + (1 - rr) * wc
+    iops = n * 1e3 / cycle_ms
+    # Mode-1 stranded reads consume *every* node's CPU: global ceiling
+    if mode == LayoutMode.NODE_LOCAL and rr > 0 and phase.written_by != "self":
+        ceiling = 1e3 / (hw.bcast_probe_ms * hw.incast_factor) / max(rr, 1e-6)
+        iops = min(iops, ceiling)
+    # Mode-1 shared-file ops serialize through namespace reconciliation
+    if mode == LayoutMode.NODE_LOCAL and phase.written_by == "shared":
+        iops = min(iops, hw.shared_file_m1_cap)
+    cv = _jitter_cv(mode, n, "read" if rr > 0.5 else "write")
+    iops *= float(1.0 + rng.normal(0, 0.01))
+    n_ops = phase.n_ops or 100_000
+    t = n_ops / iops
+    lat = cycle_ms
+    return PhaseResult(time_s=t, iops=iops, lat_ms_p50=lat,
+                       lat_ms_p95=lat * (1 + 2 * cv),
+                       lat_ms_p99=lat * (1 + 3.2 * cv), jitter_cv=cv,
+                       bottleneck="rpc" if rr > 0 else "ssd")
+
+
+def _meta_phase(phase: Phase, mode: LayoutMode, n: int, hw: Hardware,
+                rng: np.random.RandomState) -> PhaseResult:
+    mix = phase.meta_mix or {"create": 1.0}
+    t_total = 0.0
+    total_ops = 0.0
+    for op, frac in mix.items():
+        ops = phase.n_ops * frac
+        cross = phase.cross_rank if op == "stat" else 0.0
+        if mode == LayoutMode.NODE_LOCAL and cross > 0:
+            # cross-rank portion broadcast-searches all nodes
+            local_ops = ops * (1 - cross)
+            cap = _md_capacity(mode, n, hw, phase.dir_pattern, op)
+            t_total += local_ops / cap + (ops * cross) / hw.m1_cross_cap
+        else:
+            cap = _md_capacity(mode, n, hw, phase.dir_pattern, op)
+            t_total += ops / cap
+        total_ops += ops
+    cv = _jitter_cv(mode, n, "meta")
+    t_total *= float(1.0 + rng.normal(0, 0.01))
+    rate = total_ops / t_total
+    lat = n / rate * 1e3
+    return PhaseResult(time_s=t_total, iops=rate, lat_ms_p50=lat,
+                       lat_ms_p95=lat * (1 + 2 * cv),
+                       lat_ms_p99=lat * (1 + 3.2 * cv), jitter_cv=cv,
+                       bottleneck="metadata")
+
+
+def simulate_phase(phase: Phase, mode: LayoutMode, n_nodes: int,
+                   hw: Hardware = DEFAULT_HW, seed: int = 0) -> PhaseResult:
+    rng = np.random.RandomState(seed * 7919 + int(mode) * 131 + n_nodes)
+    if phase.kind == "bw":
+        return _bw_phase(phase, mode, n_nodes, hw, rng)
+    if phase.kind == "iops":
+        return _iops_phase(phase, mode, n_nodes, hw, rng)
+    return _meta_phase(phase, mode, n_nodes, hw, rng)
+
+
+def simulate(workload, mode: LayoutMode, n_nodes: int,
+             hw: Hardware = DEFAULT_HW, seed: int = 0) -> WorkloadResult:
+    results = [simulate_phase(p, mode, n_nodes, hw, seed + i)
+               for i, p in enumerate(workload.phases)]
+    return WorkloadResult(total_s=sum(r.time_s for r in results),
+                          phases=results)
+
+
+def best_mode(workload, n_nodes: int, hw: Hardware = DEFAULT_HW,
+              seed: int = 0) -> LayoutMode:
+    """The oracle: exhaustive execution over all four layouts."""
+    times = {m: simulate(workload, m, n_nodes, hw, seed).total_s
+             for m in LayoutMode}
+    return min(times, key=times.get)

@@ -1,0 +1,8 @@
+from repro.distributed.sharding import (  # noqa: F401
+    MeshContext,
+    current_mesh_context,
+    logical_constraint,
+    logical_to_pspec,
+    mesh_context,
+    spec_tree_for,
+)

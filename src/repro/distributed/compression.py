@@ -1,0 +1,62 @@
+"""Gradient compression for the DP all-reduce path.
+
+Error-feedback compressors applied to gradients before the optimizer:
+* ``int8``  — per-tensor symmetric quantization (32→8 bits on the wire),
+* ``topk``  — magnitude top-k sparsification with residual accumulation.
+
+Under pjit the all-reduce happens implicitly on the sharded gradient; the
+compressor reduces the *representational* width the collective carries (on
+a real deployment the compressed payload is what crosses DCN between pods).
+Error feedback keeps the optimizer unbiased over time.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class Int8Compressor:
+    def init(self, params):
+        return jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+    def __call__(self, grads, residual):
+        def comp(g, r):
+            g = g.astype(jnp.float32) + r
+            scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
+            q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+            deq = q.astype(jnp.float32) * scale
+            return deq, g - deq
+        flat_g, td = jax.tree_util.tree_flatten(grads)
+        flat_r = td.flatten_up_to(residual)
+        out = [comp(g, r) for g, r in zip(flat_g, flat_r)]
+        return (td.unflatten([o[0] for o in out]),
+                td.unflatten([o[1] for o in out]))
+
+
+@dataclass(frozen=True)
+class TopKCompressor:
+    frac: float = 0.1
+
+    def init(self, params):
+        return jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+    def __call__(self, grads, residual):
+        def comp(g, r):
+            g = g.astype(jnp.float32) + r
+            flat = g.reshape(-1)
+            k = max(1, int(flat.shape[0] * self.frac))
+            thresh = jax.lax.top_k(jnp.abs(flat), k)[0][-1]
+            mask = jnp.abs(g) >= thresh
+            sent = jnp.where(mask, g, 0.0)
+            return sent, g - sent
+        flat_g, td = jax.tree_util.tree_flatten(grads)
+        flat_r = td.flatten_up_to(residual)
+        out = [comp(g, r) for g, r in zip(flat_g, flat_r)]
+        return (td.unflatten([o[0] for o in out]),
+                td.unflatten([o[1] for o in out]))

@@ -1,0 +1,147 @@
+"""Logical-axis sharding: one rules table maps logical axes → mesh axes.
+
+Parameters and activations are annotated with *logical* axis names
+(models/param.py docstring).  A ``MeshContext`` holds the active mesh plus the
+logical→physical rules; ``logical_constraint`` applies
+``with_sharding_constraint`` only when a context is active, so the same model
+code runs unsharded on one CPU device (smoke tests) and fully sharded under
+the production mesh (dry-run / training).
+
+Default rules (production meshes, see launch/mesh.py):
+  batch   → ("pod", "data")     activations' batch dim (DP)
+  fsdp    → ("pod", "data")     parameter dim sharded ZeRO-3 style
+  seq     → ("data",)           sequence dim for long-context SP
+  ffn/heads/kv/vocab/experts → ("model",)   TP / EP
+  embed, layers, None → replicated
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from dataclasses import dataclass, field
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+
+def default_rules(mesh: Mesh, *, fsdp: bool = True,
+                  seq_shard: bool = False) -> Dict[str, Tuple[str, ...]]:
+    axes = mesh.axis_names
+    dp_axes = tuple(a for a in ("pod", "data") if a in axes)
+    model_axes = ("model",) if "model" in axes else ()
+    rules: Dict[str, Tuple[str, ...]] = {
+        "batch": dp_axes,
+        "fsdp": dp_axes if fsdp else (),
+        # ZeRO-3: parameter embed dims shard over DP axes; on activations the
+        # batch dim claims those axes first (pspec dedupes), so this only
+        # affects parameters/optimizer state.
+        "embed": dp_axes if fsdp else (),
+        "seq": dp_axes if seq_shard else (),
+        "ffn": model_axes,
+        "heads": model_axes,
+        "kv": model_axes,
+        "vocab": model_axes,
+        "experts": model_axes,
+        "expert_ffn": (),       # per-expert hidden dim (experts already on model)
+        "layers": (),
+        "act_kv_seq": dp_axes if seq_shard else (),  # KV-cache seq dim (SP decode)
+        # §Perf: small-head archs shard attention over the idle model axis
+        "attn_seq": model_axes,
+        "attn_blocks": model_axes,
+    }
+    return rules
+
+
+@dataclass
+class MeshContext:
+    mesh: Mesh
+    rules: Dict[str, Tuple[str, ...]]
+    # axes whose mesh assignment was disabled because dims didn't divide
+    disabled: set = field(default_factory=set)
+
+    def pspec(self, axes: Sequence[Optional[str]],
+              shape: Optional[Tuple[int, ...]] = None) -> PartitionSpec:
+        """Map logical axes to a PartitionSpec, dropping non-divisible dims."""
+        parts = []
+        used: set = set()
+        for i, ax in enumerate(axes):
+            mesh_axes = () if ax is None or ax in self.disabled else \
+                self.rules.get(ax, ())
+            mesh_axes = tuple(a for a in mesh_axes if a not in used)
+            if shape is not None and mesh_axes:
+                total = 1
+                for a in mesh_axes:
+                    total *= self.mesh.shape[a]
+                if shape[i] % total != 0:
+                    mesh_axes = ()
+            used.update(mesh_axes)
+            if len(mesh_axes) == 0:
+                parts.append(None)
+            elif len(mesh_axes) == 1:
+                parts.append(mesh_axes[0])
+            else:
+                parts.append(tuple(mesh_axes))
+        return PartitionSpec(*parts)
+
+    def sharding(self, axes: Sequence[Optional[str]],
+                 shape: Optional[Tuple[int, ...]] = None) -> NamedSharding:
+        return NamedSharding(self.mesh, self.pspec(axes, shape))
+
+
+_tls = threading.local()
+
+
+def current_mesh_context() -> Optional[MeshContext]:
+    return getattr(_tls, "ctx", None)
+
+
+@contextlib.contextmanager
+def mesh_context(mesh: Mesh, rules: Optional[Dict[str, Tuple[str, ...]]] = None,
+                 **rule_kw):
+    prev = getattr(_tls, "ctx", None)
+    _tls.ctx = MeshContext(mesh, rules or default_rules(mesh, **rule_kw))
+    try:
+        with mesh:
+            yield _tls.ctx
+    finally:
+        _tls.ctx = prev
+
+
+def logical_constraint(x: jax.Array, *axes: Optional[str]) -> jax.Array:
+    """with_sharding_constraint by logical axes; no-op without a mesh context."""
+    ctx = current_mesh_context()
+    if ctx is None:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, ctx.sharding(axes, tuple(x.shape)))
+
+
+def _is_axes_leaf(t) -> bool:
+    """Axes leaves are tuples of axis names / None (incl. the empty tuple).
+
+    NamedTuples of arrays (optimizer state) and tuples of ShapeDtypeStructs
+    (recurrent cell states) are NOT leaves.
+    """
+    return isinstance(t, tuple) and \
+        all(x is None or isinstance(x, str) for x in t)
+
+
+def logical_to_pspec(axes_tree, ctx: MeshContext, shape_tree=None):
+    """Map a tree of logical-axes tuples (+ optional shapes) to PartitionSpecs."""
+    if shape_tree is None:
+        return jax.tree_util.tree_map(
+            lambda axes: ctx.pspec(axes), axes_tree, is_leaf=_is_axes_leaf)
+    return jax.tree_util.tree_map(
+        lambda axes, sds: ctx.pspec(axes, tuple(sds.shape)),
+        axes_tree, shape_tree, is_leaf=_is_axes_leaf)
+
+
+def spec_tree_for(axes_tree, abstract_tree, ctx: MeshContext):
+    """NamedShardings for an abstract (ShapeDtypeStruct) tree."""
+    flat_ax, treedef = jax.tree_util.tree_flatten(axes_tree,
+                                                  is_leaf=_is_axes_leaf)
+    flat_ab = treedef.flatten_up_to(abstract_tree)
+    out = [NamedSharding(ctx.mesh, ctx.pspec(ax, tuple(ab.shape)))
+           for ax, ab in zip(flat_ax, flat_ab)]
+    return jax.tree_util.tree_unflatten(treedef, out)

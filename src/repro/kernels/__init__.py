@@ -1,0 +1,28 @@
+"""Pallas TPU kernels for the framework's hot paths.
+
+Each kernel ships as a subpackage with:
+  <name>.py — pl.pallas_call + explicit BlockSpec VMEM tiling (TPU target),
+  ops.py    — jit'd public wrapper (interpret=True off-TPU),
+  ref.py    — pure-jnp oracle used by the allclose test sweeps.
+
+Kernels (DESIGN.md §4):
+  chunk_router    — batched FNV routing of (path, chunk) descriptors (the
+                    paper's O(1) client routing layer, vectorized for a
+                    vector machine),
+  chunk_pack      — destination-ordered payload packing before the BB
+                    all-to-all,
+  fletcher        — position-weighted block checksum for checkpoint
+                    integrity,
+  flash_attention — blocked online-softmax attention (the serving/training
+                    compute hot-spot; removes the HBM round-trips that
+                    dominate the baseline roofline memory term).
+"""
+
+
+def on_tpu() -> bool:
+    import jax
+    return jax.default_backend() == "tpu"
+
+
+def default_interpret() -> bool:
+    return not on_tpu()

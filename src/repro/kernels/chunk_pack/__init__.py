@@ -1,0 +1,1 @@
+from repro.kernels.chunk_pack.ops import pack_chunks  # noqa: F401

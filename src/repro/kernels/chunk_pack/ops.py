@@ -1,0 +1,12 @@
+from __future__ import annotations
+
+import jax
+
+from repro.kernels import default_interpret
+from repro.kernels.chunk_pack.chunk_pack import pack_chunks_kernel
+
+
+def pack_chunks(payload: jax.Array, idx: jax.Array,
+                interpret: bool = None) -> jax.Array:
+    interpret = default_interpret() if interpret is None else interpret
+    return pack_chunks_kernel(payload, idx, interpret=interpret)

@@ -1,0 +1,6 @@
+"""Oracle: jnp.take gather."""
+import jax.numpy as jnp
+
+
+def pack_chunks_ref(payload, idx):
+    return jnp.take(payload, idx, axis=0)

@@ -1,0 +1,1 @@
+from repro.kernels.chunk_router.ops import route_chunks  # noqa: F401

@@ -1,0 +1,82 @@
+"""Batched chunk routing (Pallas TPU).
+
+TPU-native form of the paper's O(1) client routing layer (DESIGN.md §2):
+instead of a per-request function-pointer dispatch, whole batches of
+(path_hash, chunk_id) descriptors are FNV-mixed and mapped to destination
+nodes in VMEM tiles; per-destination histogram partials come out alongside
+so the caller can size the all-to-all without a second pass.
+
+Integer hashing uses int32 ops (wrapping multiply == uint32 mul mod 2^32;
+we mask to 31 bits after every step so shifts stay logical).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+MASK31 = 0x7FFFFFFF
+
+
+def mix_hash_i32(a: jax.Array, b: jax.Array) -> jax.Array:
+    """int32 version of layouts.mix_hash (bit-identical on 31-bit inputs)."""
+    h = jnp.int32(-2128831035)          # 0x811C9DC5 (FNV offset) as int32
+    for part in (a, b):
+        h = (h ^ part) * jnp.int32(16777619)
+        h = h & jnp.int32(MASK31)
+        h = h ^ (h >> 15)
+    return h & jnp.int32(MASK31)
+
+
+def _router_kernel(ph_ref, cid_ref, client_ref, dest_ref, counts_ref, *,
+                   mode: int, n_nodes: int, n_valid: int, block: int):
+    i = pl.program_id(0)
+    ph = ph_ref[...]
+    cid = cid_ref[...]
+    client = client_ref[...]
+    if mode in (1, 4):                 # NODE_LOCAL / HYBRID write path: local
+        dest = client
+    else:                              # CENTRAL_META / DIST_HASH data path
+        dest = mix_hash_i32(ph, cid) % n_nodes
+    idx = i * block + jax.lax.broadcasted_iota(jnp.int32, (block,), 0)
+    valid = idx < n_valid
+    dest = jnp.where(valid, dest, -1).astype(jnp.int32)
+    dest_ref[...] = dest
+    # per-destination histogram for this block (summed by the wrapper);
+    # padding rows (dest == -1) match no bin.
+    onehot = (dest[:, None] == jax.lax.broadcasted_iota(
+        jnp.int32, (block, n_nodes), 1)).astype(jnp.int32)
+    counts_ref[0] = onehot.sum(axis=0)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("mode", "n_nodes", "block", "interpret"))
+def route_chunks_kernel(path_hash: jax.Array, chunk_id: jax.Array,
+                        client: jax.Array, *, mode: int, n_nodes: int,
+                        block: int = 1024, interpret: bool = True):
+    """(n,) int32 descriptors → (dest (n,), counts (n_nodes,))."""
+    n = path_hash.shape[0]
+    block = min(block, max(8, n))
+    nb = pl.cdiv(n, block)
+    pad = nb * block - n
+    if pad:
+        path_hash = jnp.pad(path_hash, (0, pad))
+        chunk_id = jnp.pad(chunk_id, (0, pad))
+        client = jnp.pad(client, (0, pad))
+    kernel = functools.partial(_router_kernel, mode=mode, n_nodes=n_nodes,
+                               n_valid=n, block=block)
+    dest, counts = pl.pallas_call(
+        kernel,
+        grid=(nb,),
+        in_specs=[pl.BlockSpec((block,), lambda i: (i,)),
+                  pl.BlockSpec((block,), lambda i: (i,)),
+                  pl.BlockSpec((block,), lambda i: (i,))],
+        out_specs=[pl.BlockSpec((block,), lambda i: (i,)),
+                   pl.BlockSpec((1, n_nodes), lambda i: (i, 0))],
+        out_shape=[jax.ShapeDtypeStruct((nb * block,), jnp.int32),
+                   jax.ShapeDtypeStruct((nb, n_nodes), jnp.int32)],
+        interpret=interpret,
+    )(path_hash, chunk_id, client)
+    return dest[:n], counts.sum(axis=0)

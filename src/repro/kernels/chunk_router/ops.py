@@ -1,0 +1,15 @@
+"""Public routing wrapper."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels import default_interpret
+from repro.kernels.chunk_router.chunk_router import route_chunks_kernel
+
+
+def route_chunks(path_hash: jax.Array, chunk_id: jax.Array,
+                 client: jax.Array, *, mode: int, n_nodes: int,
+                 interpret: bool = None):
+    interpret = default_interpret() if interpret is None else interpret
+    return route_chunks_kernel(path_hash, chunk_id, client, mode=mode,
+                               n_nodes=n_nodes, interpret=interpret)

@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for chunk routing (delegates to core.layouts)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.layouts import LayoutMode, LayoutParams, f_data
+
+
+def route_chunks_ref(path_hash, chunk_id, client, *, mode: int,
+                     n_nodes: int):
+    params = LayoutParams(mode=LayoutMode(mode), n_nodes=n_nodes)
+    dest = f_data(params, path_hash, chunk_id, client, xp=jnp)
+    counts = jnp.bincount(dest.clip(0), weights=None, length=n_nodes)
+    return dest.astype(jnp.int32), counts.astype(jnp.int32)

@@ -1,0 +1,32 @@
+"""Public flash-attention wrapper: (B, S, H, D) GQA-expanded inputs."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import default_interpret
+from repro.kernels.flash_attention.flash_attention import flash_attention_bhsd
+
+LANE = 128
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, scale: float = None,
+                    block_q: int = 512, block_k: int = 512,
+                    interpret: bool = None) -> jax.Array:
+    """q/k/v: (B, S, H, D) (kv already GQA-expanded to H heads)."""
+    B, S, H, D = q.shape
+    scale = scale if scale is not None else 1.0 / math.sqrt(D)
+    interpret = default_interpret() if interpret is None else interpret
+    pad_d = (-D) % LANE
+    if pad_d:
+        pad = lambda a: jnp.pad(a, ((0, 0), (0, 0), (0, 0), (0, pad_d)))
+        q, k, v = pad(q), pad(k), pad(v)
+    to_bhsd = lambda a: a.transpose(0, 2, 1, 3).reshape(B * H, S, D + pad_d)
+    o = flash_attention_bhsd(to_bhsd(q), to_bhsd(k), to_bhsd(v),
+                             scale=scale, causal=causal, block_q=block_q,
+                             block_k=block_k, interpret=interpret)
+    o = o.reshape(B, H, S, D + pad_d).transpose(0, 2, 1, 3)
+    return o[..., :D]

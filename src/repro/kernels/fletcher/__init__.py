@@ -1,0 +1,1 @@
+from repro.kernels.fletcher.ops import fletcher_checksum  # noqa: F401

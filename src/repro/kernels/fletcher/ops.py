@@ -1,0 +1,17 @@
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import default_interpret
+from repro.kernels.fletcher.fletcher import fletcher_kernel
+
+
+def fletcher_checksum(x: jax.Array, interpret: bool = None) -> jax.Array:
+    """Checksum any array (viewed as int32 words)."""
+    interpret = default_interpret() if interpret is None else interpret
+    words = jax.lax.bitcast_convert_type(
+        x.reshape(-1), jnp.int32) if x.dtype != jnp.int32 else x.reshape(-1)
+    if words.ndim > 1:
+        words = words.reshape(-1)
+    return fletcher_kernel(words, interpret=interpret)

@@ -1,0 +1,13 @@
+"""Oracle: 64-bit exact position-weighted checksum."""
+import jax.numpy as jnp
+import numpy as np
+
+P = 46337
+
+
+def fletcher_ref(words) -> np.ndarray:
+    w = np.abs(np.asarray(words, dtype=np.int64)) % P
+    pos = (np.arange(1, w.shape[0] + 1, dtype=np.int64)) % P
+    s1 = int(w.sum() % P)
+    s2 = int(((w * pos) % P).sum() % P)
+    return np.array([s1, s2], dtype=np.int32)

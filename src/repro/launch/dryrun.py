@@ -1,0 +1,150 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# flake8: noqa: E402  (the two lines above MUST precede any jax import)
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell this script builds the production mesh (16×16 single-pod or
+2×16×16 multi-pod of host-platform placeholder devices), constructs
+ShapeDtypeStruct inputs with their NamedShardings, lowers and compiles the
+production step, prints ``memory_analysis()`` / ``cost_analysis()``, and
+writes a JSON report (including the three-term roofline from the structural
+HLO analyzer) to ``--out``.
+
+Usage:
+  python -m repro.launch.dryrun --arch gemma-7b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all            # full sweep (long!)
+"""
+import argparse
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+
+from repro.analysis.roofline import build_report
+from repro.configs import ALL_SHAPES, all_configs, shape_applicable, skip_reason
+from repro.distributed.sharding import mesh_context, spec_tree_for
+from repro.launch.mesh import make_production_mesh, mesh_chips
+from repro.launch.specs import input_specs, step_fn_for
+from repro.train.optimizer import AdamW
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, out_dir: Path,
+             save_hlo: bool = False) -> dict:
+    cfg = all_configs()[arch]
+    shape = ALL_SHAPES[shape_name]
+    if not shape_applicable(cfg, shape):
+        rec = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+               "status": "skipped", "reason": skip_reason(cfg, shape)}
+        _write(out_dir, rec)
+        print(f"[dryrun] SKIP {arch}×{shape_name}: {rec['reason']}")
+        return rec
+
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    chips = mesh_chips(mesh)
+    optimizer = AdamW()
+    t0 = time.time()
+    with mesh_context(mesh, fsdp=True,
+                      seq_shard=(shape.kind == "long_decode")) as ctx:
+        args, arg_axes = input_specs(cfg, shape, optimizer)
+        in_sh = spec_tree_for(arg_axes, args, ctx)
+        step = step_fn_for(cfg, shape, optimizer)
+        lowered = jax.jit(step, in_shardings=in_sh).lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = {}
+    try:
+        ma = compiled.memory_analysis()
+        for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "generated_code_size_in_bytes",
+                  "alias_size_in_bytes"):
+            v = getattr(ma, k, None)
+            if v is not None:
+                mem[k] = int(v)
+        print(f"[dryrun] memory_analysis: {mem or ma}")
+    except Exception as e:  # CPU backend may not implement it
+        mem = {"unavailable": str(e)}
+        print(f"[dryrun] memory_analysis unavailable on this backend: {e}")
+    try:
+        cost = compiled.cost_analysis()
+        cost = {k: float(v) for k, v in cost.items()
+                if isinstance(v, (int, float))}
+    except Exception as e:
+        cost = {"unavailable": str(e)}
+    print(f"[dryrun] cost_analysis: flops={cost.get('flops')} "
+          f"bytes={cost.get('bytes accessed')}")
+
+    hlo = compiled.as_text()
+    report = build_report(arch, shape, mesh_kind, chips, hlo, cfg,
+                          xla_cost=cost)
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+           "status": "ok", "chips": chips,
+           "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+           "memory_analysis": mem, "cost_analysis": cost,
+           "roofline": json.loads(report.to_json())}
+    _write(out_dir, rec)
+    if save_hlo:
+        (out_dir / f"{arch}__{shape_name}__{mesh_kind}.hlo.txt"
+         ).write_text(hlo)
+    print(f"[dryrun] OK {arch}×{shape_name}×{mesh_kind}: "
+          f"lower {t_lower:.0f}s compile {t_compile:.0f}s, "
+          f"bottleneck={report.bottleneck}, "
+          f"terms(c/m/coll)={report.compute_s:.4f}/"
+          f"{report.memory_s:.4f}/{report.collective_s:.4f}s, "
+          f"useful={report.useful_ratio:.2f}")
+    return rec
+
+
+def _write(out_dir: Path, rec: dict) -> None:
+    out_dir.mkdir(parents=True, exist_ok=True)
+    name = f"{rec['arch']}__{rec['shape']}__{rec['mesh']}.json"
+    (out_dir / name).write_text(json.dumps(rec, indent=2))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--save-hlo", action="store_true")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+    out = Path(args.out)
+
+    cells = []
+    if args.all:
+        for arch in all_configs():
+            for shape in ALL_SHAPES:
+                for mesh in ("single", "multi"):
+                    cells.append((arch, shape, mesh))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells = [(args.arch, args.shape, args.mesh)]
+
+    failures = []
+    for arch, shape, mesh in cells:
+        tag = f"{arch}__{shape}__{mesh}"
+        if args.skip_existing and (out / f"{tag}.json").exists():
+            print(f"[dryrun] skip existing {tag}")
+            continue
+        try:
+            run_cell(arch, shape, mesh, out, save_hlo=args.save_hlo)
+        except Exception as e:
+            traceback.print_exc()
+            failures.append(tag)
+            _write(out, {"arch": arch, "shape": shape, "mesh": mesh,
+                         "status": "error", "error": str(e)})
+    if failures:
+        print(f"[dryrun] FAILURES: {failures}")
+        raise SystemExit(1)
+    print("[dryrun] all cells passed")
+
+
+if __name__ == "__main__":
+    main()

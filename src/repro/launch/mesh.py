@@ -1,0 +1,22 @@
+"""Production mesh construction.
+
+A FUNCTION, not a module constant, so importing this module never touches
+jax device state (required: the dry-run sets
+``xla_force_host_platform_device_count`` before any jax init).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def mesh_chips(mesh) -> int:
+    n = 1
+    for v in mesh.shape.values():
+        n *= v
+    return n

@@ -1,0 +1,63 @@
+"""Batched serving driver: prefill + decode loop with KV cache.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch gemma3-1b --tokens 32
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import all_configs
+from repro.models import build_model
+from repro.train.train_step import make_serve_step
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma3-1b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--tokens", type=int, default=32)
+    ap.add_argument("--reduced", action="store_true", default=True)
+    args = ap.parse_args()
+
+    cfg = all_configs()[args.arch]
+    if args.reduced:
+        cfg = cfg.reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+
+    B = args.batch
+    meta = getattr(cfg, "num_meta_tokens", 0)
+    max_len = meta + args.prompt_len + args.tokens + 8
+    cache = model.init_cache(B, max_len)
+    serve_step = jax.jit(make_serve_step(model))
+
+    rng = np.random.RandomState(0)
+    prompt = rng.randint(1, cfg.vocab_size, (B, args.prompt_len))
+    # prefill token-by-token through the decode path (exactly the production
+    # serve_step; a fused prefill is the launch-time optimization)
+    tok = jnp.asarray(prompt[:, :1], jnp.int32)
+    t0 = time.time()
+    out_tokens = []
+    for i in range(args.prompt_len + args.tokens - 1):
+        cache_len = jnp.asarray(meta + i + 1, jnp.int32)
+        nxt, cache = serve_step(params, cache, tok, cache_len)
+        if i + 1 < args.prompt_len:
+            tok = jnp.asarray(prompt[:, i + 1:i + 2], jnp.int32)
+        else:
+            tok = nxt[:, None]
+            out_tokens.append(np.asarray(nxt))
+    dt = time.time() - t0
+    gen = np.stack(out_tokens, 1)
+    print(f"[serve] generated {gen.shape} in {dt:.2f}s "
+          f"({B * gen.shape[1] / dt:.1f} tok/s)")
+    print("[serve] sample:", gen[0][:16].tolist())
+
+
+if __name__ == "__main__":
+    main()

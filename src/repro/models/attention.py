@@ -1,0 +1,481 @@
+"""Attention: GQA (flat-head layout), windowed/local attention, MLA, KV caches.
+
+Head-sharding policy (see DESIGN.md §6): q/o params use a flat head axis
+``H = num_heads``; k/v use ``KV = num_kv_heads``.
+
+* 16 | KV  → shard both "kv" and "heads" over the model axis (all-local einsums,
+             consecutive GQA grouping keeps shards aligned).
+* 16 | H   → shard "heads" only; k/v params+activations replicated over model;
+             the GQA repeat becomes a local slice-gather under SPMD.
+* else     → attention replicated over model; TP is carried by ffn/vocab.
+
+Prefill attention is memory-efficient (lax.scan over KV blocks with online
+softmax — no S×S materialization).  Windowed layers use an O(S·W) q-block
+path.  Decode attends one token against the cache (full or windowed slice).
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import logical_constraint
+from repro.models.param import P, bias, dense
+from repro.models.layers import apply_rope, apply_mrope
+
+BLOCK_KV = 512   # online-softmax KV block
+BLOCK_Q = 1024   # q-block for windowed path
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# parameter descriptors
+# ---------------------------------------------------------------------------
+def describe_attention(cfg: ModelConfig) -> dict:
+    d, H, KV, D = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    if cfg.use_mla:
+        qk_dim = cfg.qk_nope_head_dim + cfg.qk_rope_head_dim
+        out = {
+            "wq": P((d, H, qk_dim), ("embed", "heads", None)),
+            "w_dkv": dense(d, cfg.kv_lora_rank, "embed", None),
+            "w_kpe": dense(d, cfg.qk_rope_head_dim, "embed", None),
+            "kv_norm": P((cfg.kv_lora_rank,), (None,),
+                         init=lambda k, s, t: jnp.ones(s, t), dtype="float32"),
+            "w_uk": P((cfg.kv_lora_rank, H, cfg.qk_nope_head_dim),
+                      (None, "heads", None)),
+            "w_uv": P((cfg.kv_lora_rank, H, cfg.v_head_dim),
+                      (None, "heads", None)),
+            "wo": P((H, cfg.v_head_dim, d), ("heads", None, "embed")),
+        }
+        return out
+    out = {
+        "wq": P((d, H, D), ("embed", "heads", None)),
+        "wk": P((d, KV, D), ("embed", "kv", None)),
+        "wv": P((d, KV, D), ("embed", "kv", None)),
+        "wo": P((H, D, d), ("heads", None, "embed")),
+    }
+    if cfg.qkv_bias:
+        out["bq"] = P((H, D), ("heads", None), init=lambda k, s, t: jnp.zeros(s, t))
+        out["bk"] = P((KV, D), ("kv", None), init=lambda k, s, t: jnp.zeros(s, t))
+        out["bv"] = P((KV, D), ("kv", None), init=lambda k, s, t: jnp.zeros(s, t))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# core attention math
+# ---------------------------------------------------------------------------
+def _repeat_kv(k: jax.Array, groups: int) -> jax.Array:
+    """(B, S, KV, D) -> (B, S, H, D), consecutive grouping (h = kv*G + g)."""
+    if groups == 1:
+        return k
+    b, s, kv, d = k.shape
+    k = jnp.broadcast_to(k[:, :, :, None, :], (b, s, kv, groups, d))
+    return k.reshape(b, s, kv * groups, d)
+
+
+def online_softmax_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                             *, causal: bool, q_offset,
+                             scale: float,
+                             block_kv: int = BLOCK_KV,
+                             logit_soft_cap: float = 0.0) -> jax.Array:
+    """Memory-efficient attention.
+
+    q: (B, Sq, H, D); k/v: (B, Sk, H, D) (already GQA-expanded).
+    ``q_offset``: global position of q[0] (int or traced scalar) for causal
+    masking when Sq != Sk (decode chunks / windowed slices).
+    Never materializes (Sq, Sk); peak extra memory is (B, Sq, H, block_kv).
+    """
+    B, Sq, H, D = q.shape
+    Sk = k.shape[1]
+    nblk = (Sk + block_kv - 1) // block_kv
+    pad = nblk * block_kv - Sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kb = k.reshape(B, nblk, block_kv, H, D)
+    vb = v.reshape(B, nblk, block_kv, H, D)
+
+    q32 = q.astype(jnp.float32) * scale
+    qpos = q_offset + jnp.arange(Sq)                     # (Sq,)
+
+    def step(carry, blk):
+        acc, m, l = carry
+        kj, vj, j = blk
+        kpos = j * block_kv + jnp.arange(block_kv)       # (block_kv,)
+        s = jnp.einsum("bqhd,bkhd->bhqk", q32, kj.astype(jnp.float32))
+        if logit_soft_cap > 0.0:
+            s = logit_soft_cap * jnp.tanh(s / logit_soft_cap)
+        mask = kpos[None, :] <= qpos[:, None] if causal else (
+            kpos[None, :] >= 0)
+        mask = jnp.logical_and(mask, (kpos < Sk)[None, :])
+        s = jnp.where(mask[None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1)
+        acc = acc * corr[..., None] + jnp.einsum(
+            "bhqk,bkhd->bhqd", p, vj.astype(jnp.float32))
+        return (acc, m_new, l_new), None
+
+    acc0 = jnp.zeros((B, H, Sq, D), jnp.float32)
+    m0 = jnp.full((B, H, Sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, H, Sq), jnp.float32)
+    (acc, m, l), _ = jax.lax.scan(
+        step, (acc0, m0, l0),
+        (jnp.moveaxis(kb, 1, 0), jnp.moveaxis(vb, 1, 0), jnp.arange(nblk)))
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return jnp.einsum("bhqd->bqhd", out).astype(q.dtype)
+
+
+def windowed_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                       *, window: int, scale: float,
+                       block_q: int = BLOCK_Q, sink_len: int = 0) -> jax.Array:
+    """Causal sliding-window attention, O(S·(W+Bq)) FLOPs.
+
+    q/k/v: (B, S, H, D) (k/v GQA-expanded).  Each q block of size Bq attends
+    to the kv slice [i*Bq - W, (i+1)*Bq) via dynamic_slice — out-of-window
+    blocks are never touched.
+
+    ``sink_len > 0`` makes the first ``sink_len`` positions globally visible
+    (attention sinks — Hymba meta tokens).  Sink keys already present in the
+    window slice are masked there to avoid double counting.
+    """
+    B, S, H, D = q.shape
+    Bq = min(block_q, S)
+    nq = (S + Bq - 1) // Bq
+    padq = nq * Bq - S
+    if padq:
+        q = jnp.pad(q, ((0, 0), (0, padq), (0, 0), (0, 0)))
+    ctx = Bq + window                                   # kv slice width
+    kpad = jnp.pad(k, ((0, 0), (window, padq), (0, 0), (0, 0)))
+    vpad = jnp.pad(v, ((0, 0), (window, padq), (0, 0), (0, 0)))
+    qb = q.reshape(B, nq, Bq, H, D)
+    k_sink = k[:, :sink_len] if sink_len else None
+    v_sink = v[:, :sink_len] if sink_len else None
+
+    def one_block(i, qi):
+        # kv positions covered: [i*Bq - W, i*Bq + Bq)
+        start = i * Bq
+        kj = jax.lax.dynamic_slice_in_dim(kpad, start, ctx, axis=1)
+        vj = jax.lax.dynamic_slice_in_dim(vpad, start, ctx, axis=1)
+        qpos = i * Bq + jnp.arange(Bq)                   # global q positions
+        kpos = i * Bq - window + jnp.arange(ctx)         # global kv positions
+        in_window = (kpos[None, :] <= qpos[:, None]) & \
+                    (kpos[None, :] > qpos[:, None] - window - 1)
+        if sink_len:
+            # sink positions are visible (causally) even outside the window
+            in_window = in_window | ((kpos[None, :] < sink_len) &
+                                     (kpos[None, :] <= qpos[:, None]))
+        mask = in_window & (kpos[None, :] >= 0) & (qpos[:, None] < S)
+        if sink_len:
+            kj = jnp.concatenate([k_sink, kj], axis=1)
+            vj = jnp.concatenate([v_sink, vj], axis=1)
+            spos = jnp.arange(sink_len)
+            # prepended sink copies cover only entries NOT in the slice
+            smask = (spos[None, :] <= qpos[:, None]) & \
+                    (spos[None, :] < jnp.maximum(i * Bq - window, 0))
+            mask = jnp.concatenate([smask, mask], axis=1)
+        s = jnp.einsum("bqhd,bkhd->bhqk",
+                       qi.astype(jnp.float32) * scale, kj.astype(jnp.float32))
+        s = jnp.where(mask[None, None], s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bhqk,bkhd->bqhd", p, vj.astype(jnp.float32))
+        return o.astype(q.dtype)
+
+    out = jax.lax.map(lambda args: one_block(*args),
+                      (jnp.arange(nq), jnp.moveaxis(qb, 1, 0)))
+    out = jnp.moveaxis(out, 0, 1).reshape(B, nq * Bq, H, D)
+    return out[:, :S]
+
+
+def windowed_attention_parallel(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                                window: int, scale: float,
+                                block_q: int = 0, sink_len: int = 0,
+                                shard_blocks: bool = False) -> jax.Array:
+    """§Perf-optimized sliding-window attention: ALL q-blocks batched.
+
+    The baseline (windowed_attention) loops blocks with lax.map — a
+    sequential scan that (a) cannot shard across the idle model axis for
+    small-head architectures and (b) round-trips per-block f32 intermediates
+    through HBM each iteration.  Here the block dim is a tensor axis:
+    context windows are built once via a shifted concat (requires
+    window ≤ block_q), every block's attention runs in one batched einsum,
+    and ``shard_blocks`` lays the block dim onto the model axis
+    ("attn_blocks" rule) — compute and intermediates divide by the axis
+    size, at the price of one activation re-gather per layer.
+    """
+    B, S, H, D = q.shape
+    Bq = block_q or max(window, 512)
+    Bq = min(Bq, S)
+    W = min(window, Bq)
+    nq = (S + Bq - 1) // Bq
+    pad = nq * Bq - S
+    if pad:
+        zpad = lambda a: jnp.pad(a, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        q, k, v = zpad(q), zpad(k), zpad(v)
+    qb = q.reshape(B, nq, Bq, H, D)
+    kb = k.reshape(B, nq, Bq, H, D)
+    vb = v.reshape(B, nq, Bq, H, D)
+    # previous block's tail = the out-of-block part of each window
+    prev_k = jnp.concatenate([jnp.zeros_like(kb[:, :1, Bq - W:]),
+                              kb[:, :-1, Bq - W:]], axis=1)
+    prev_v = jnp.concatenate([jnp.zeros_like(vb[:, :1, Bq - W:]),
+                              vb[:, :-1, Bq - W:]], axis=1)
+    kctx = jnp.concatenate([prev_k, kb], axis=2)        # (B, nq, W+Bq, H, D)
+    vctx = jnp.concatenate([prev_v, vb], axis=2)
+    ctx = W + Bq
+    if shard_blocks:
+        from repro.distributed.sharding import logical_constraint as _lc
+        qb = _lc(qb, "batch", "attn_blocks", None, None, None)
+        kctx = _lc(kctx, "batch", "attn_blocks", None, None, None)
+        vctx = _lc(vctx, "batch", "attn_blocks", None, None, None)
+
+    blk = jnp.arange(nq)[:, None]
+    qpos = blk * Bq + jnp.arange(Bq)[None, :]            # (nq, Bq)
+    kpos = blk * Bq - W + jnp.arange(ctx)[None, :]       # (nq, ctx)
+    mask = (kpos[:, None, :] <= qpos[:, :, None]) & \
+           (kpos[:, None, :] > qpos[:, :, None] - W - 1) & \
+           (kpos[:, None, :] >= 0) & (qpos[:, :, None] < S)
+    if sink_len:
+        mask = mask | ((kpos[:, None, :] < sink_len) &
+                       (kpos[:, None, :] >= 0) &
+                       (kpos[:, None, :] <= qpos[:, :, None]))
+    s = jnp.einsum("bnqhd,bnkhd->bnhqk", qb.astype(jnp.float32) * scale,
+                   kctx.astype(jnp.float32))
+    if sink_len:
+        sk = jnp.broadcast_to(k[:, None, :sink_len], (B, nq, sink_len, H, D))
+        sv = jnp.broadcast_to(v[:, None, :sink_len], (B, nq, sink_len, H, D))
+        s_sink = jnp.einsum("bnqhd,bnkhd->bnhqk",
+                            qb.astype(jnp.float32) * scale,
+                            sk.astype(jnp.float32))
+        spos = jnp.arange(sink_len)[None, :]
+        smask = (spos[:, None, :] <= qpos[:, :, None]) & \
+                (spos[:, None, :] < jnp.maximum(blk * Bq - W, 0)[:, :, None])
+        s = jnp.concatenate([jnp.where(smask[None, :, None], s_sink,
+                                       NEG_INF),
+                             jnp.where(mask[None, :, None], s, NEG_INF)],
+                            axis=-1)
+        vfull = jnp.concatenate([sv, vctx], axis=2)
+    else:
+        s = jnp.where(mask[None, :, None], s, NEG_INF)
+        vfull = vctx
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bnhqk,bnkhd->bnqhd", p, vfull.astype(jnp.float32))
+    o = o.reshape(B, nq * Bq, H, D)[:, :S]
+    return o.astype(q.dtype)
+
+
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     cache_len: jax.Array, *, window: int, scale: float,
+                     groups: int, sink_len: int = 0) -> jax.Array:
+    """One-token attention against a cache.
+
+    q: (B, 1, H, D); caches: (B, S, KV, D); cache_len: tokens valid (incl new).
+    ``window > 0`` restricts to the last ``window`` positions (local layers)
+    via a static-width slice; ``sink_len`` keeps the first positions
+    (meta tokens) always visible.
+    """
+    B, S, KV, D = k_cache.shape
+    if window and window < S:
+        start = jnp.maximum(cache_len - window, 0)
+        k_sl = jax.lax.dynamic_slice_in_dim(k_cache, start, window, axis=1)
+        v_sl = jax.lax.dynamic_slice_in_dim(v_cache, start, window, axis=1)
+        kpos = start + jnp.arange(window)
+        valid = kpos < cache_len
+        k_use, v_use = k_sl, v_sl
+        if sink_len:
+            spos = jnp.arange(sink_len)
+            svalid = (spos < cache_len) & (spos < start)  # dedupe vs slice
+            k_use = jnp.concatenate([k_cache[:, :sink_len], k_use], axis=1)
+            v_use = jnp.concatenate([v_cache[:, :sink_len], v_use], axis=1)
+            valid = jnp.concatenate([svalid, valid])
+    else:
+        kpos = jnp.arange(S)
+        valid = kpos < cache_len
+        k_use, v_use = k_cache, v_cache
+    k_use = _repeat_kv(k_use, groups)
+    v_use = _repeat_kv(v_use, groups)
+    s = jnp.einsum("bqhd,bkhd->bhqk",
+                   q.astype(jnp.float32) * scale, k_use.astype(jnp.float32))
+    s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhqk,bkhd->bqhd", p, v_use.astype(jnp.float32))
+    return o.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# full GQA attention layer
+# ---------------------------------------------------------------------------
+def apply_attention(params: dict, x: jax.Array, positions: jax.Array,
+                    cfg: ModelConfig, *, window: int = 0,
+                    cache: Optional[dict] = None,
+                    cache_len: Optional[jax.Array] = None,
+                    mrope_positions: Optional[jax.Array] = None,
+                    sink_len: int = 0,
+                    ) -> Tuple[jax.Array, Optional[dict]]:
+    """Returns (output (B,S,d), updated cache slice or None).
+
+    Train/prefill: cache is None.  Decode: x is (B,1,d); cache holds
+    {"k": (B,S,KV,D), "v": ...}; new kv written at cache_len-1.
+    """
+    B, S, _ = x.shape
+    H, KV, D = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    G = H // KV
+    dt = x.dtype
+    scale = 1.0 / math.sqrt(D)
+
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(dt))
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"].astype(dt))
+    if cfg.qkv_bias:
+        q = q + params["bq"].astype(dt)
+        k = k + params["bk"].astype(dt)
+        v = v + params["bv"].astype(dt)
+
+    if cfg.mrope and mrope_positions is not None:
+        q = apply_mrope(q, mrope_positions, cfg.rope_theta, cfg.mrope_sections)
+        k = apply_mrope(k, mrope_positions, cfg.rope_theta, cfg.mrope_sections)
+    elif positions is not None:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+
+    new_cache = None
+    if cache is not None:
+        idx = cache_len - 1
+        k_cache = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, idx, axis=1)
+        v_cache = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, idx, axis=1)
+        new_cache = {"k": k_cache, "v": v_cache}
+        o = decode_attention(q, k_cache, v_cache, cache_len,
+                             window=window, scale=scale, groups=G,
+                             sink_len=sink_len)
+    elif window and window < S:
+        kx, vx = _repeat_kv(k, G), _repeat_kv(v, G)
+        # §Perf: batched-block windowed attention pays off when the block
+        # dim can shard over the model axis (nq divisible) or the per-block
+        # score buffers are small (few heads); otherwise the sequential
+        # q-block loop keeps peak memory at one block (hymba: 25 heads,
+        # nq=5 -> parallel would materialize 17.8 GB/layer of scores).
+        bq = max(window, 512)
+        nq = (S + bq - 1) // bq
+        if (nq % 16 == 0) or cfg.num_heads <= 8:
+            o = windowed_attention_parallel(q, kx, vx, window=window,
+                                            scale=scale, sink_len=sink_len,
+                                            shard_blocks=not cfg.shard_heads)
+        else:
+            o = windowed_attention(q, kx, vx, window=window, scale=scale,
+                                   sink_len=sink_len)
+    else:
+        kx, vx = _repeat_kv(k, G), _repeat_kv(v, G)
+        if not cfg.shard_heads and S >= 2048 and cfg.num_heads <= 12:
+            # §Perf: shard the q-sequence over the idle model axis (the
+            # online-softmax kv scan is q-row-parallel).  Above ~12 heads
+            # the resharding traffic of the f32 scan carry outweighs the
+            # win (hymba, 25 heads: measured regression).
+            q = logical_constraint(q, "batch", "attn_seq", None, None)
+        o = online_softmax_attention(q, kx, vx,
+                                     causal=True, q_offset=0, scale=scale)
+    out = jnp.einsum("bshk,hkd->bsd", o, params["wo"].astype(dt))
+    return out, new_cache
+
+
+def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int,
+                  dtype: str = "bfloat16") -> dict:
+    shp = (batch, max_len, cfg.num_kv_heads, cfg.head_dim)
+    return {"k": jnp.zeros(shp, jnp.dtype(dtype)),
+            "v": jnp.zeros(shp, jnp.dtype(dtype))}
+
+
+def abstract_kv_cache(cfg: ModelConfig, batch: int, max_len: int,
+                      dtype: str = "bfloat16") -> dict:
+    shp = (batch, max_len, cfg.num_kv_heads, cfg.head_dim)
+    return {"k": jax.ShapeDtypeStruct(shp, jnp.dtype(dtype)),
+            "v": jax.ShapeDtypeStruct(shp, jnp.dtype(dtype))}
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V2 latent attention)
+# ---------------------------------------------------------------------------
+def apply_mla(params: dict, x: jax.Array, positions: jax.Array,
+              cfg: ModelConfig, *, cache: Optional[dict] = None,
+              cache_len: Optional[jax.Array] = None,
+              ) -> Tuple[jax.Array, Optional[dict]]:
+    """Multi-head Latent Attention.
+
+    Prefill/train: per-head keys/values materialized from the latent.
+    Decode: weight-absorbed form — attention runs in the latent space and the
+    cache stores only (c_kv, k_pe): (B, S, r) + (B, S, rope_dim).
+    """
+    B, S, _ = x.shape
+    H = cfg.num_heads
+    dn, dr, dv, r = (cfg.qk_nope_head_dim, cfg.qk_rope_head_dim,
+                     cfg.v_head_dim, cfg.kv_lora_rank)
+    dt = x.dtype
+    scale = 1.0 / math.sqrt(dn + dr)
+
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(dt))  # (B,S,H,dn+dr)
+    q_nope, q_pe = q[..., :dn], q[..., dn:]
+    q_pe = apply_rope(q_pe, positions, cfg.rope_theta)
+
+    c_kv = x @ params["w_dkv"].astype(dt)                         # (B,S,r)
+    from repro.models.layers import rms_norm
+    c_kv = rms_norm(c_kv, params["kv_norm"], cfg.norm_eps)
+    k_pe = (x @ params["w_kpe"].astype(dt))[:, :, None, :]        # (B,S,1,dr)
+    k_pe = apply_rope(k_pe, positions, cfg.rope_theta)[:, :, 0]   # (B,S,dr)
+
+    if cache is not None:
+        idx = cache_len - 1
+        ckv_c = jax.lax.dynamic_update_slice_in_dim(cache["c_kv"], c_kv, idx, 1)
+        kpe_c = jax.lax.dynamic_update_slice_in_dim(cache["k_pe"], k_pe, idx, 1)
+        new_cache = {"c_kv": ckv_c, "k_pe": kpe_c}
+        # absorbed decode: q_lat = q_nope @ W_uk  -> (B,1,H,r)
+        q_lat = jnp.einsum("bshk,rhk->bshr", q_nope, params["w_uk"].astype(dt))
+        Sc = ckv_c.shape[1]
+        valid = jnp.arange(Sc) < cache_len
+        s = (jnp.einsum("bshr,btr->bhst", q_lat.astype(jnp.float32),
+                        ckv_c.astype(jnp.float32))
+             + jnp.einsum("bshk,btk->bhst", q_pe.astype(jnp.float32),
+                          kpe_c.astype(jnp.float32))) * scale
+        s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        o_lat = jnp.einsum("bhst,btr->bshr", p, ckv_c.astype(jnp.float32))
+        o = jnp.einsum("bshr,rhk->bshk", o_lat.astype(dt),
+                       params["w_uv"].astype(dt))                 # (B,1,H,dv)
+    else:
+        new_cache = None
+        k_nope = jnp.einsum("bsr,rhk->bshk", c_kv, params["w_uk"].astype(dt))
+        vfull = jnp.einsum("bsr,rhk->bshk", c_kv, params["w_uv"].astype(dt))
+        kfull = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_pe[:, :, None, :], (B, S, H, dr))],
+            axis=-1)
+        qfull = jnp.concatenate([q_nope, q_pe], axis=-1)
+        # pad v to qk dim so the online-softmax core can be shared
+        o = online_softmax_attention(qfull, kfull,
+                                     jnp.pad(vfull, ((0, 0), (0, 0), (0, 0),
+                                                     (0, dn + dr - dv))),
+                                     causal=True, q_offset=0, scale=scale)
+        o = o[..., :dv]
+    out = jnp.einsum("bshk,hkd->bsd", o, params["wo"].astype(dt))
+    return out, new_cache
+
+
+def abstract_mla_cache(cfg: ModelConfig, batch: int, max_len: int,
+                       dtype: str = "bfloat16") -> dict:
+    return {
+        "c_kv": jax.ShapeDtypeStruct((batch, max_len, cfg.kv_lora_rank),
+                                     jnp.dtype(dtype)),
+        "k_pe": jax.ShapeDtypeStruct((batch, max_len, cfg.qk_rope_head_dim),
+                                     jnp.dtype(dtype)),
+    }
+
+
+def init_mla_cache(cfg: ModelConfig, batch: int, max_len: int,
+                   dtype: str = "bfloat16") -> dict:
+    return {
+        "c_kv": jnp.zeros((batch, max_len, cfg.kv_lora_rank), jnp.dtype(dtype)),
+        "k_pe": jnp.zeros((batch, max_len, cfg.qk_rope_head_dim),
+                          jnp.dtype(dtype)),
+    }

@@ -1,0 +1,233 @@
+"""Whisper-style encoder-decoder backbone (conv frontend stubbed per spec).
+
+Encoder consumes precomputed frame embeddings (B, encoder_seq, d) — the
+``input_specs()`` stand-in for the conv frontend — adds sinusoidal positions
+and runs bidirectional self-attention layers.  The decoder is a causal LM
+with cross-attention; decode shapes cache decoder self-attn KV plus the
+precomputed per-layer cross-attention K/V.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import logical_constraint
+from repro.models import attention as attn
+from repro.models import layers as nn
+from repro.models.param import (P, abstract, logical_axes, materialize,
+                                norm_scale, zeros_init)
+
+
+def _describe_xattn(cfg: ModelConfig) -> dict:
+    d, H, D = cfg.d_model, cfg.num_heads, cfg.head_dim
+    return {
+        "wq": P((d, H, D), ("embed", "heads", None)),
+        "wk": P((d, H, D), ("embed", "heads", None)),
+        "wv": P((d, H, D), ("embed", "heads", None)),
+        "wo": P((H, D, d), ("heads", None, "embed")),
+        "bq": P((H, D), ("heads", None), init=zeros_init),
+        "bv": P((H, D), ("heads", None), init=zeros_init),
+    }
+
+
+def describe_encoder_layer(cfg: ModelConfig) -> dict:
+    return {
+        "ln_attn": norm_scale(cfg.d_model),
+        "attn": attn.describe_attention(cfg),
+        "ln_mlp": norm_scale(cfg.d_model),
+        "mlp": nn.describe_mlp(cfg, cfg.d_ff),
+    }
+
+
+def describe_decoder_layer(cfg: ModelConfig) -> dict:
+    return {
+        "ln_self": norm_scale(cfg.d_model),
+        "attn": attn.describe_attention(cfg),
+        "ln_cross": norm_scale(cfg.d_model),
+        "xattn": _describe_xattn(cfg),
+        "ln_mlp": norm_scale(cfg.d_model),
+        "mlp": nn.describe_mlp(cfg, cfg.d_ff),
+    }
+
+
+def _self_attention_bidir(params, x, cfg):
+    """Non-causal self attention (encoder)."""
+    B, S, _ = x.shape
+    H, D = cfg.num_heads, cfg.head_dim
+    dt = x.dtype
+    import math
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(dt))
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"].astype(dt))
+    if cfg.qkv_bias:
+        q = q + params["bq"].astype(dt)
+        k = k + params["bk"].astype(dt)
+        v = v + params["bv"].astype(dt)
+    G = cfg.num_heads // cfg.num_kv_heads
+    k, v = attn._repeat_kv(k, G), attn._repeat_kv(v, G)
+    o = attn.online_softmax_attention(q, k, v, causal=False, q_offset=0,
+                                      scale=1.0 / math.sqrt(D))
+    return jnp.einsum("bshk,hkd->bsd", o, params["wo"].astype(dt))
+
+
+def _cross_attention(params, x, k, v, cfg):
+    """x: (B,Sq,d); k/v precomputed (B,Senc,H,D)."""
+    import math
+    dt = x.dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(dt))
+    q = q + params["bq"].astype(dt)
+    o = attn.online_softmax_attention(q, k.astype(dt), v.astype(dt),
+                                      causal=False, q_offset=0,
+                                      scale=1.0 / math.sqrt(cfg.head_dim))
+    return jnp.einsum("bshk,hkd->bsd", o, params["wo"].astype(dt))
+
+
+def _xattn_kv(params, enc_out, cfg):
+    dt = enc_out.dtype
+    k = jnp.einsum("bsd,dhk->bshk", enc_out, params["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", enc_out, params["wv"].astype(dt))
+    v = v + params["bv"].astype(dt)
+    return k, v
+
+
+class EncDecModel:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+
+    def describe(self) -> dict:
+        cfg = self.cfg
+        enc = {f"layer{i}": describe_encoder_layer(cfg)
+               for i in range(cfg.encoder_layers)}
+        dec = {f"layer{i}": describe_decoder_layer(cfg)
+               for i in range(cfg.num_layers)}
+        return {
+            "embed": nn.describe_embedding(cfg),
+            "pos_dec": P((32768, cfg.d_model), (None, "embed"),
+                         init=lambda k, s, t:
+                         (jax.random.normal(k, s) * 0.01).astype(t)),
+            "encoder": enc,
+            "decoder": dec,
+            "ln_enc": norm_scale(cfg.d_model),
+            "ln_dec": norm_scale(cfg.d_model),
+        }
+
+    def init(self, key):
+        return materialize(key, self.describe(), self.cfg.param_dtype)
+
+    def abstract_params(self):
+        return abstract(self.describe(), self.cfg.param_dtype)
+
+    def param_axes(self):
+        return logical_axes(self.describe())
+
+    # ---- encoder -----------------------------------------------------------
+    def encode(self, params, audio_embeds):
+        cfg = self.cfg
+        x = audio_embeds.astype(jnp.dtype(cfg.dtype))
+        S = x.shape[1]
+        x = x + nn.sinusoidal_positions(S, cfg.d_model).astype(x.dtype)[None]
+        for i in range(cfg.encoder_layers):
+            p = params["encoder"][f"layer{i}"]
+            h = layer_in = nn.rms_norm(x, p["ln_attn"], cfg.norm_eps)
+            x = x + _self_attention_bidir(p["attn"], h, cfg)
+            h = nn.rms_norm(x, p["ln_mlp"], cfg.norm_eps)
+            x = x + nn.apply_mlp(p["mlp"], h, cfg)
+            x = logical_constraint(x, "batch", None, "embed")
+        return nn.rms_norm(x, params["ln_enc"], cfg.norm_eps)
+
+    # ---- decoder -----------------------------------------------------------
+    def _decode_trunk(self, params, x, positions, enc_out=None, caches=None,
+                      cache_len=None):
+        cfg = self.cfg
+        new_caches = {} if caches is not None else None
+        for i in range(cfg.num_layers):
+            p = params["decoder"][f"layer{i}"]
+            name = f"layer{i}"
+            h = nn.rms_norm(x, p["ln_self"], cfg.norm_eps)
+            c = caches.get(name) if caches is not None else None
+            self_cache = c.get("self") if c is not None else None
+            a, new_self = attn.apply_attention(
+                p["attn"], h, positions, cfg, cache=self_cache,
+                cache_len=cache_len)
+            x = x + a
+            h = nn.rms_norm(x, p["ln_cross"], cfg.norm_eps)
+            if c is not None:
+                xk, xv = c["cross_k"], c["cross_v"]
+            else:
+                xk, xv = _xattn_kv(p["xattn"], enc_out, cfg)
+            x = x + _cross_attention(p["xattn"], h, xk, xv, cfg)
+            h = nn.rms_norm(x, p["ln_mlp"], cfg.norm_eps)
+            x = x + nn.apply_mlp(p["mlp"], h, cfg)
+            x = logical_constraint(x, "batch", None, "embed")
+            if new_caches is not None:
+                new_caches[name] = {"self": new_self, "cross_k": xk,
+                                    "cross_v": xv}
+        return x, new_caches
+
+    def forward(self, params, batch):
+        cfg = self.cfg
+        enc_out = self.encode(params, batch["audio_embeds"])
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        x = nn.embed_tokens(params["embed"], tokens, cfg)
+        x = x + params["pos_dec"][:S].astype(x.dtype)[None]
+        positions = None  # learned positions; no rope
+        x, _ = self._decode_trunk(params, x, positions, enc_out=enc_out)
+        x = nn.rms_norm(x, params["ln_dec"], cfg.norm_eps)
+        return nn.unembed(params["embed"], x, cfg), jnp.zeros((), jnp.float32)
+
+    def loss_fn(self, params, batch):
+        from repro.models.transformer import chunked_ce_loss
+        cfg = self.cfg
+        enc_out = self.encode(params, batch["audio_embeds"])
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        x = nn.embed_tokens(params["embed"], tokens, cfg)
+        x = x + params["pos_dec"][:S].astype(x.dtype)[None]
+        x, _ = self._decode_trunk(params, x, None, enc_out=enc_out)
+        x = nn.rms_norm(x, params["ln_dec"], cfg.norm_eps)
+        loss, metrics = chunked_ce_loss(params["embed"], x, batch["targets"],
+                                        cfg, batch.get("loss_mask"))
+        metrics["loss"] = loss
+        return loss, metrics
+
+    def decode_step(self, params, cache, tokens, cache_len, **_):
+        cfg = self.cfg
+        x = nn.embed_tokens(params["embed"], tokens, cfg)
+        pos_emb = jax.lax.dynamic_slice_in_dim(params["pos_dec"],
+                                               cache_len - 1, 1, axis=0)
+        x = x + pos_emb.astype(x.dtype)[None, 0:1]
+        x, new_caches = self._decode_trunk(params, x, None, caches=cache,
+                                           cache_len=cache_len)
+        x = nn.rms_norm(x, params["ln_dec"], cfg.norm_eps)
+        return nn.unembed(params["embed"], x, cfg), new_caches
+
+    # ---- cache -------------------------------------------------------------
+    def abstract_cache(self, batch: int, max_len: int, dtype="bfloat16"):
+        cfg = self.cfg
+        kv = (batch, max_len, cfg.num_kv_heads, cfg.head_dim)
+        xkv = (batch, cfg.encoder_seq, cfg.num_heads, cfg.head_dim)
+        dt = jnp.dtype(dtype)
+        return {f"layer{i}": {
+            "self": {"k": jax.ShapeDtypeStruct(kv, dt),
+                     "v": jax.ShapeDtypeStruct(kv, dt)},
+            "cross_k": jax.ShapeDtypeStruct(xkv, dt),
+            "cross_v": jax.ShapeDtypeStruct(xkv, dt),
+        } for i in range(cfg.num_layers)}
+
+    def cache_axes(self, batch: int, max_len: int):
+        cfg = self.cfg
+        return {f"layer{i}": {
+            "self": {"k": ("batch", "act_kv_seq", "kv", None),
+                     "v": ("batch", "act_kv_seq", "kv", None)},
+            "cross_k": ("batch", None, "heads", None),
+            "cross_v": ("batch", None, "heads", None),
+        } for i in range(cfg.num_layers)}
+
+    def init_cache(self, batch: int, max_len: int, dtype="bfloat16"):
+        return jax.tree_util.tree_map(
+            lambda s: jnp.zeros(s.shape, s.dtype),
+            self.abstract_cache(batch, max_len, dtype))

@@ -1,0 +1,296 @@
+"""Hymba: parallel attention + Mamba heads per layer, meta tokens, SWA.
+
+Per arXiv:2411.13676 each layer computes attention heads and SSM (mamba)
+heads IN PARALLEL on the same pre-norm input and fuses their per-path
+RMS-normed outputs by averaging, followed by an output projection and a
+standard gated MLP sublayer.  128 learnable meta tokens are prepended to the
+sequence (they act as attention sinks for the sliding-window layers and as
+learned state initializers for the SSM path).  3 layers {0,15,31} use full
+attention; the rest use sliding-window attention (window 1024).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import logical_constraint
+from repro.models import attention as attn
+from repro.models import layers as nn
+from repro.models import ssm
+from repro.models.param import (P, abstract, dense as dense_p, logical_axes,
+                                materialize, norm_scale, stack_layers,
+                                zeros_init)
+
+
+def _d_inner(cfg: ModelConfig) -> int:
+    return cfg.num_heads * cfg.head_dim  # 25*64 = 1600 = d_model
+
+
+def describe_hymba_layer(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    di = _d_inner(cfg)
+    N = cfg.ssm_state
+    dt_rank = max(8, d // 16)
+    desc = {
+        "ln": norm_scale(d),
+        "ln_mlp": norm_scale(d),
+        # attention path
+        "attn": attn.describe_attention(cfg),
+        "norm_attn": norm_scale(d),
+        # mamba path
+        "w_xz": P((d, 2 * di), ("embed", "ffn")),
+        "conv_w": P((cfg.conv_kernel, di), (None, "ffn"),
+                    init=lambda k, s, t: (jax.random.normal(k, s) * 0.1).astype(t)),
+        "conv_b": P((di,), ("ffn",), init=zeros_init),
+        "w_bc": P((di, 2 * N), ("ffn", None)),
+        "w_dt1": P((di, dt_rank), ("ffn", None)),
+        "w_dt2": P((dt_rank, di), (None, "ffn")),
+        "b_dt": P((di,), ("ffn",),
+                  init=lambda k, s, t: jnp.full(s, -4.6, t)),  # softplus ≈ 0.01
+        "a_log": P((di, N), ("ffn", None),
+                   init=lambda k, s, t: jnp.log(jnp.broadcast_to(
+                       jnp.arange(1, s[-1] + 1, dtype=jnp.float32), s)).astype(t)),
+        "d_skip": P((di,), ("ffn",), init=lambda k, s, t: jnp.ones(s, t)),
+        "w_ssm_out": P((di, d), ("ffn", "embed")),
+        "norm_ssm": norm_scale(d),
+        # mlp
+        "mlp": nn.describe_mlp(cfg, cfg.d_ff),
+    }
+    return desc
+
+
+def _mamba_path(params: dict, h: jax.Array, cfg: ModelConfig,
+                state: Optional[dict]) -> Tuple[jax.Array, Optional[dict]]:
+    B, S, d = h.shape
+    di = _d_inner(cfg)
+    N = cfg.ssm_state
+    dt_ = h.dtype
+    xz = h @ params["w_xz"].astype(dt_)
+    xs, z = xz[..., :di], xz[..., di:]
+    conv_state = state.get("conv") if state else None
+    xc, new_conv = ssm.causal_conv1d(xs, params["conv_w"], params["conv_b"],
+                                     conv_state)
+    xc = jax.nn.silu(xc)
+    bc = xc @ params["w_bc"].astype(dt_)                     # (B,S,2N)
+    b_in, c_out = bc[..., :N], bc[..., N:]
+    dt_pre = (xc @ params["w_dt1"].astype(dt_)) @ params["w_dt2"].astype(dt_)
+    delta = jax.nn.softplus(dt_pre.astype(jnp.float32)
+                            + params["b_dt"].astype(jnp.float32))  # (B,S,di)
+    A = -jnp.exp(params["a_log"].astype(jnp.float32))        # (di,N)
+    a = jnp.exp(delta[..., None] * A[None, None])            # (B,S,di,N)
+    bx = (delta * xc.astype(jnp.float32))[..., None] * \
+        b_in.astype(jnp.float32)[:, :, None, :]              # (B,S,di,N)
+    h0 = state.get("ssm") if state else None
+    if S == 1:
+        h_prev = h0 if h0 is not None else jnp.zeros((B, di, N), jnp.float32)
+        h_new, _ = ssm.mamba_step(a[:, 0], bx[:, 0], h_prev)
+        hs = h_new[:, None]
+        h_last = h_new
+    else:
+        pad = (-S) % ssm.MAMBA_CHUNK
+        if pad:
+            a = jnp.pad(a, ((0, 0), (0, pad), (0, 0), (0, 0)),
+                        constant_values=1.0)   # identity recurrence
+            bx = jnp.pad(bx, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            hs, h_last = ssm.mamba_scan(a, bx, h0)
+            hs = hs[:, :S]
+        else:
+            hs, h_last = ssm.mamba_scan(a, bx, h0)
+    y = jnp.einsum("bsdn,bsn->bsd", hs,
+                   c_out.astype(jnp.float32))                # (B,S,di)
+    y = y + params["d_skip"].astype(jnp.float32) * xc.astype(jnp.float32)
+    y = (y.astype(dt_)) * jax.nn.silu(z)
+    out = y @ params["w_ssm_out"].astype(dt_)
+    new_state = ({"conv": new_conv, "ssm": h_last}
+                 if state is not None else None)
+    return out, new_state
+
+
+def apply_hymba_layer(params: dict, x: jax.Array, positions, cfg: ModelConfig,
+                      kind: str, *, cache=None, cache_len=None,
+                      ) -> Tuple[jax.Array, Optional[dict]]:
+    window = cfg.window_size if kind == "swa" else 0
+    sink = cfg.num_meta_tokens if window else 0
+    h = nn.rms_norm(x, params["ln"], cfg.norm_eps)
+    attn_cache = cache.get("attn") if cache else None
+    a_out, new_attn_cache = attn.apply_attention(
+        params["attn"], h, positions, cfg, window=window, cache=attn_cache,
+        cache_len=cache_len, sink_len=sink)
+    ssm_state = ({"conv": cache["conv"], "ssm": cache["ssm"]}
+                 if cache is not None else None)
+    s_out, new_ssm = _mamba_path(params, h, cfg, ssm_state)
+    fused = 0.5 * (nn.rms_norm(a_out, params["norm_attn"], cfg.norm_eps)
+                   + nn.rms_norm(s_out, params["norm_ssm"], cfg.norm_eps))
+    x = x + fused
+    x = logical_constraint(x, "batch", "seq", "embed")
+    h2 = nn.rms_norm(x, params["ln_mlp"], cfg.norm_eps)
+    x = x + nn.apply_mlp(params["mlp"], h2, cfg)
+    x = logical_constraint(x, "batch", "seq", "embed")
+    new_cache = None
+    if cache is not None:
+        new_cache = {"attn": new_attn_cache, "conv": new_ssm["conv"],
+                     "ssm": new_ssm["ssm"]}
+    return x, new_cache
+
+
+class HymbaModel:
+    """32-layer hybrid; SWA segments scanned, global layers unrolled."""
+
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.kinds = list(cfg.layer_kinds)
+
+    def _segments(self):
+        segs = []
+        for i, k in enumerate(self.kinds):
+            if segs and segs[-1][0] == k:
+                segs[-1] = (k, segs[-1][1] + 1)
+            else:
+                segs.append((k, 1))
+        out, idx = [], 0
+        for j, (k, n) in enumerate(segs):
+            out.append((f"seg{j}_{k}", k, n))
+        return out
+
+    def describe(self) -> dict:
+        cfg = self.cfg
+        stack = {}
+        for name, kind, n in self._segments():
+            stack[name] = stack_layers(describe_hymba_layer(cfg), n)
+        return {
+            "embed": nn.describe_embedding(cfg),
+            "meta_tokens": P((cfg.num_meta_tokens, cfg.d_model),
+                             (None, "embed"), init=None),
+            "stack": stack,
+            "ln_f": norm_scale(cfg.d_model),
+        }
+
+    def init(self, key):
+        return materialize(key, self.describe(), self.cfg.param_dtype)
+
+    def abstract_params(self):
+        return abstract(self.describe(), self.cfg.param_dtype)
+
+    def param_axes(self):
+        return logical_axes(self.describe())
+
+    def _trunk(self, params, x, positions, caches, cache_len):
+        cfg = self.cfg
+        new_caches = {} if caches is not None else None
+        for name, kind, n in self._segments():
+            seg_params = params["stack"][name]
+            seg_cache = caches.get(name) if caches is not None else None
+
+            def body(carry, xs, _kind=kind):
+                xc = carry
+                p_l, c_l = xs
+                out, new_c = apply_hymba_layer(p_l, xc, positions, cfg, _kind,
+                                               cache=c_l, cache_len=cache_len)
+                return out, new_c
+
+            if cfg.remat:
+                body = jax.checkpoint(body)
+            if cfg.scan_layers and n > 1:
+                x, ys = jax.lax.scan(body, x, (seg_params, seg_cache))
+                if new_caches is not None:
+                    new_caches[name] = ys
+            else:
+                ys_list = []
+                for j in range(n):
+                    p_j = jax.tree_util.tree_map(lambda a: a[j], seg_params)
+                    c_j = (jax.tree_util.tree_map(lambda a: a[j], seg_cache)
+                           if seg_cache is not None else None)
+                    x, y = body(x, (p_j, c_j))
+                    ys_list.append(y)
+                if new_caches is not None:
+                    new_caches[name] = jax.tree_util.tree_map(
+                        lambda *a: jnp.stack(a), *ys_list)
+        return x, new_caches
+
+    def forward(self, params, batch):
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        M = cfg.num_meta_tokens
+        x = nn.embed_tokens(params["embed"], tokens, cfg)
+        meta = jnp.broadcast_to(
+            params["meta_tokens"].astype(x.dtype)[None], (B, M, cfg.d_model))
+        x = jnp.concatenate([meta, x], axis=1)
+        positions = jnp.arange(S + M)[None, :].astype(jnp.int32)
+        x, _ = self._trunk(params, x, positions, None, None)
+        x = x[:, M:]
+        x = nn.rms_norm(x, params["ln_f"], cfg.norm_eps)
+        return nn.unembed(params["embed"], x, cfg), jnp.zeros((), jnp.float32)
+
+    def loss_fn(self, params, batch):
+        from repro.models.transformer import chunked_ce_loss
+        cfg = self.cfg
+        logits_unused, _ = None, None
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        M = cfg.num_meta_tokens
+        x = nn.embed_tokens(params["embed"], tokens, cfg)
+        meta = jnp.broadcast_to(
+            params["meta_tokens"].astype(x.dtype)[None], (B, M, cfg.d_model))
+        x = jnp.concatenate([meta, x], axis=1)
+        positions = jnp.arange(S + M)[None, :].astype(jnp.int32)
+        x, _ = self._trunk(params, x, positions, None, None)
+        x = x[:, M:]
+        x = nn.rms_norm(x, params["ln_f"], cfg.norm_eps)
+        loss, metrics = chunked_ce_loss(params["embed"], x, batch["targets"],
+                                        cfg, batch.get("loss_mask"))
+        metrics["loss"] = loss
+        return loss, metrics
+
+    def decode_step(self, params, cache, tokens, cache_len, **_):
+        """cache_len counts meta tokens + generated tokens."""
+        cfg = self.cfg
+        x = nn.embed_tokens(params["embed"], tokens, cfg)
+        pos = jnp.broadcast_to((cache_len - 1)[None, None],
+                               tokens.shape).astype(jnp.int32)
+        x, new_caches = self._trunk(params, x, pos, cache, cache_len)
+        x = nn.rms_norm(x, params["ln_f"], cfg.norm_eps)
+        return nn.unembed(params["embed"], x, cfg), new_caches
+
+    # ---- cache -------------------------------------------------------------
+    def _layer_cache_struct(self, batch: int, max_len: int, dtype):
+        cfg = self.cfg
+        di = _d_inner(cfg)
+        kv = (batch, max_len, cfg.num_kv_heads, cfg.head_dim)
+        return {
+            "attn": {"k": jax.ShapeDtypeStruct(kv, jnp.dtype(dtype)),
+                     "v": jax.ShapeDtypeStruct(kv, jnp.dtype(dtype))},
+            "conv": jax.ShapeDtypeStruct(
+                (batch, cfg.conv_kernel - 1, di), jnp.dtype(dtype)),
+            "ssm": jax.ShapeDtypeStruct((batch, di, cfg.ssm_state),
+                                        jnp.float32),
+        }
+
+    def abstract_cache(self, batch: int, max_len: int, dtype="bfloat16"):
+        out = {}
+        for name, kind, n in self._segments():
+            st = self._layer_cache_struct(batch, max_len, dtype)
+            out[name] = jax.tree_util.tree_map(
+                lambda s: jax.ShapeDtypeStruct((n,) + s.shape, s.dtype), st)
+        return out
+
+    def cache_axes(self, batch: int, max_len: int):
+        def ax(path_sds):
+            return None
+        out = {}
+        for name, kind, n in self._segments():
+            out[name] = {
+                "attn": {"k": ("layers", "batch", "act_kv_seq", "kv", None),
+                         "v": ("layers", "batch", "act_kv_seq", "kv", None)},
+                "conv": ("layers", "batch", None, "ffn"),
+                "ssm": ("layers", "batch", "ffn", None),
+            }
+        return out
+
+    def init_cache(self, batch: int, max_len: int, dtype="bfloat16"):
+        return jax.tree_util.tree_map(
+            lambda s: jnp.zeros(s.shape, s.dtype),
+            self.abstract_cache(batch, max_len, dtype))

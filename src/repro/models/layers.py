@@ -1,0 +1,142 @@
+"""Shared neural layers: norms, rotary embeddings (incl. M-RoPE), MLPs, embeddings."""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.param import P, bias, dense, norm_scale, zeros_init
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6,
+             zero_centered: bool = False) -> jax.Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    s = (1.0 + scale) if zero_centered else scale
+    return (y * s).astype(dt)
+
+
+def layer_norm(x: jax.Array, scale: jax.Array, b: jax.Array,
+               eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    return ((x32 - mu) * jax.lax.rsqrt(var + eps) * scale + b).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# rotary position embeddings
+# ---------------------------------------------------------------------------
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    """(head_dim/2,) inverse frequencies."""
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotate pairs. x: (..., S, H, D); positions: broadcastable to (..., S)."""
+    d = x.shape[-1]
+    inv = rope_freqs(d, theta)                                  # (D/2,)
+    ang = positions[..., None].astype(jnp.float32) * inv        # (..., S, D/2)
+    ang = ang[..., None, :]                                     # (..., S, 1, D/2)
+    sin, cos = jnp.sin(ang), jnp.cos(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x: jax.Array, positions: jax.Array, theta: float,
+                sections: Tuple[int, int, int]) -> jax.Array:
+    """Multimodal RoPE (Qwen2-VL): the D/2 frequency lanes are partitioned into
+    temporal/height/width sections, each rotated by its own position stream.
+
+    x: (B, S, H, D); positions: (3, B, S) int32.
+    """
+    d = x.shape[-1]
+    inv = rope_freqs(d, theta)                                  # (D/2,)
+    sec = jnp.concatenate([
+        jnp.full((s,), i, jnp.int32) for i, s in enumerate(sections)
+    ])                                                          # (D/2,)
+    # pick, per frequency lane, which position stream drives it
+    pos = positions.astype(jnp.float32)                         # (3, B, S)
+    pos_per_lane = jnp.take(pos, sec, axis=0)                   # (D/2, B, S)
+    ang = jnp.einsum("fbs,f->bsf", pos_per_lane, inv)           # (B, S, D/2)
+    ang = ang[:, :, None, :]                                    # (B, S, 1, D/2)
+    sin, cos = jnp.sin(ang), jnp.cos(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(n: int, d: int) -> jax.Array:
+    """Whisper-style fixed sinusoidal table (n, d)."""
+    pos = jnp.arange(n, dtype=jnp.float32)[:, None]
+    inv = jnp.exp(-jnp.log(10000.0) * jnp.arange(d // 2, dtype=jnp.float32)
+                  / max(d // 2 - 1, 1))
+    ang = pos * inv[None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+def describe_mlp(cfg: ModelConfig, d_ff: int) -> dict:
+    d = cfg.d_model
+    if cfg.mlp_type in ("swiglu", "geglu"):
+        return {
+            "wi_gate": dense(d, d_ff, "embed", "ffn"),
+            "wi_up": dense(d, d_ff, "embed", "ffn"),
+            "wo": dense(d_ff, d, "ffn", "embed"),
+        }
+    return {  # relu2 / gelu: plain 2-matrix MLP
+        "wi": dense(d, d_ff, "embed", "ffn"),
+        "wo": dense(d_ff, d, "ffn", "embed"),
+    }
+
+
+def apply_mlp(params: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    dt = x.dtype
+    if cfg.mlp_type in ("swiglu", "geglu"):
+        g = x @ params["wi_gate"].astype(dt)
+        u = x @ params["wi_up"].astype(dt)
+        act = jax.nn.silu(g) if cfg.mlp_type == "swiglu" else jax.nn.gelu(g)
+        h = act * u
+        return h @ params["wo"].astype(dt)
+    h = x @ params["wi"].astype(dt)
+    if cfg.mlp_type == "relu2":
+        h = jnp.square(jax.nn.relu(h))
+    else:
+        h = jax.nn.gelu(h)
+    return h @ params["wo"].astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# embeddings / unembedding
+# ---------------------------------------------------------------------------
+def describe_embedding(cfg: ModelConfig) -> dict:
+    out = {"embedding": P((cfg.padded_vocab, cfg.d_model), ("vocab", "embed"),
+                          init=None)}
+    if not cfg.tie_embeddings:
+        out["lm_head"] = dense(cfg.d_model, cfg.padded_vocab, "embed", "vocab")
+    return out
+
+
+def embed_tokens(params: dict, tokens: jax.Array, cfg: ModelConfig) -> jax.Array:
+    x = jnp.take(params["embedding"], tokens, axis=0).astype(jnp.dtype(cfg.dtype))
+    if cfg.embed_scale:
+        x = x * jnp.asarray(jnp.sqrt(cfg.d_model), x.dtype)
+    return x
+
+
+def unembed(params: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    if cfg.tie_embeddings:
+        w = params["embedding"].astype(x.dtype)
+        return x @ w.T
+    return x @ params["lm_head"].astype(x.dtype)

@@ -1,0 +1,136 @@
+"""Parameter descriptor trees.
+
+Model ``describe_*`` functions build nested dicts whose leaves are ``P``
+descriptors: shape + logical sharding axes + initializer.  From one
+descriptor tree we derive, with a single source of truth:
+
+* ``materialize``      — real parameter arrays (smoke tests / examples),
+* ``abstract``         — ShapeDtypeStructs (dry-run, no allocation),
+* ``logical_axes``     — same-structure tree of logical-axis tuples, mapped
+                         to mesh ``PartitionSpec`` by ``distributed.sharding``.
+
+Logical axis vocabulary (see distributed/sharding.py for the mesh mapping):
+  "embed"   — d_model-like dims            (usually unsharded / fsdp)
+  "ffn"     — MLP hidden dims              (→ model axis)
+  "heads"   — attention-head dims          (→ model axis when shard_heads)
+  "kv"      — kv-head dims
+  "vocab"   — vocabulary dims              (→ model axis)
+  "experts" — MoE expert dim               (→ model axis, EP)
+  "layers"  — stacked-scan layer dim       (never sharded)
+  "fsdp"    — dim to shard over the data axis (ZeRO-3 style, large models)
+  None      — replicated
+"""
+from __future__ import annotations
+
+import hashlib
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Callable, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+Initializer = Callable[[jax.Array, Tuple[int, ...], Any], jax.Array]
+
+
+def _normal_init(stddev: float) -> Initializer:
+    def init(key, shape, dtype):
+        return (jax.random.normal(key, shape, jnp.float32) * stddev).astype(dtype)
+    return init
+
+
+def zeros_init(key, shape, dtype):
+    return jnp.zeros(shape, dtype)
+
+
+def ones_init(key, shape, dtype):
+    return jnp.ones(shape, dtype)
+
+
+@dataclass(frozen=True)
+class P:
+    """One parameter leaf descriptor."""
+
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]
+    init: Initializer = None  # default: fan-in scaled normal
+    dtype: Optional[str] = None  # override param dtype (e.g. norms in fp32)
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+    def initializer(self) -> Initializer:
+        if self.init is not None:
+            return self.init
+        fan_in = self.shape[0] if len(self.shape) > 1 else self.shape[-1]
+        return _normal_init(1.0 / np.sqrt(max(fan_in, 1)))
+
+
+def dense(d_in: int, d_out: int, in_ax: Optional[str], out_ax: Optional[str],
+          stddev: Optional[float] = None) -> P:
+    init = _normal_init(stddev) if stddev is not None else None
+    return P((d_in, d_out), (in_ax, out_ax), init)
+
+
+def norm_scale(d: int, ax: Optional[str] = "embed") -> P:
+    return P((d,), (ax,), ones_init, dtype="float32")
+
+
+def bias(d: int, ax: Optional[str]) -> P:
+    return P((d,), (ax,), zeros_init)
+
+
+def is_desc(x) -> bool:
+    return isinstance(x, P)
+
+
+def tree_map_desc(fn, tree):
+    return jax.tree_util.tree_map(fn, tree, is_leaf=is_desc)
+
+
+def stack_layers(tree, n: int):
+    """Prepend a scanned 'layers' dim to every leaf of a per-layer tree."""
+    def add(p: P) -> P:
+        return P((n,) + p.shape, ("layers",) + p.axes, p.init, p.dtype)
+    return tree_map_desc(add, tree)
+
+
+def logical_axes(tree):
+    return tree_map_desc(lambda p: p.axes, tree)
+
+
+def abstract(tree, param_dtype: str = "float32"):
+    def mk(p: P):
+        return jax.ShapeDtypeStruct(p.shape, jnp.dtype(p.dtype or param_dtype))
+    return tree_map_desc(mk, tree)
+
+
+def _path_key(root: jax.Array, path: str) -> jax.Array:
+    h = int.from_bytes(hashlib.sha256(path.encode()).digest()[:4], "little")
+    return jax.random.fold_in(root, h)
+
+
+def materialize(key: jax.Array, tree, param_dtype: str = "float32"):
+    """Instantiate real parameters (deterministic per-path RNG)."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree, is_leaf=is_desc)
+    leaves = []
+    for path, p in flat:
+        pstr = "/".join(str(k) for k in path)
+        dt = jnp.dtype(p.dtype or param_dtype)
+        leaves.append(p.initializer()(_path_key(key, pstr), p.shape, dt))
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def count_params(tree) -> int:
+    flat = jax.tree_util.tree_leaves(tree, is_leaf=is_desc)
+    return sum(int(np.prod(p.shape)) for p in flat)
+
+
+def param_bytes(tree, param_dtype: str = "float32") -> int:
+    flat = jax.tree_util.tree_leaves(tree, is_leaf=is_desc)
+    total = 0
+    for p in flat:
+        total += int(np.prod(p.shape)) * jnp.dtype(p.dtype or param_dtype).itemsize
+    return total

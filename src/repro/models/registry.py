@@ -1,0 +1,20 @@
+"""Model registry: build the right model class for a config."""
+from __future__ import annotations
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+
+def build_model(cfg: ModelConfig, **kw):
+    if cfg.family in ("dense", "moe", "vlm"):
+        from repro.models.transformer import TransformerLM
+        return TransformerLM(cfg, **kw)
+    if cfg.family == "ssm":
+        from repro.models.xlstm import XLSTMModel
+        return XLSTMModel(cfg)
+    if cfg.family == "hybrid":
+        from repro.models.hymba import HymbaModel
+        return HymbaModel(cfg)
+    if cfg.family == "audio":
+        from repro.models.encdec import EncDecModel
+        return EncDecModel(cfg)
+    raise ValueError(f"unknown family {cfg.family!r}")

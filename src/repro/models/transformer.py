@@ -1,0 +1,337 @@
+"""Decoder-LM assembly for dense / MoE / VLM families.
+
+Layer stacks are *segmented*: contiguous runs of identically-structured layers
+(same attention kind, same MLP kind) become one ``lax.scan`` over stacked
+parameters (small HLO, fast compile at 80 layers); non-uniform patterns
+(gemma3's 5:1 local:global, deepseek's dense-first) split into multiple
+segments.  Short segments unroll.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.distributed.sharding import logical_constraint
+from repro.models import attention as attn
+from repro.models import layers as nn
+from repro.models import moe as moe_mod
+from repro.models.param import (P, abstract, materialize, logical_axes,
+                                norm_scale, stack_layers)
+
+Z_LOSS = 1e-4
+LOSS_SEQ_CHUNKS = 4
+
+
+# ---------------------------------------------------------------------------
+# layer kinds & segments
+# ---------------------------------------------------------------------------
+def layer_kind_list(cfg: ModelConfig) -> List[str]:
+    if cfg.layer_kinds is not None:
+        return list(cfg.layer_kinds)
+    return ["full"] * cfg.num_layers
+
+
+def segments(cfg: ModelConfig) -> List[Tuple[str, int]]:
+    """[(kind, count), ...] contiguous runs."""
+    kinds = layer_kind_list(cfg)
+    segs: List[Tuple[str, int]] = []
+    for k in kinds:
+        if segs and segs[-1][0] == k:
+            segs[-1] = (k, segs[-1][1] + 1)
+        else:
+            segs.append((k, 1))
+    return segs
+
+
+def _kind_props(cfg: ModelConfig, kind: str) -> Dict[str, Any]:
+    """Structural properties of a layer kind."""
+    window = 0
+    if kind == "local":
+        window = cfg.window_size
+    elif kind == "swa":
+        window = cfg.window_size
+    is_moe = cfg.is_moe and kind != "dense"
+    return {"window": window, "is_moe": is_moe}
+
+
+# ---------------------------------------------------------------------------
+# one transformer layer
+# ---------------------------------------------------------------------------
+def describe_layer(cfg: ModelConfig, kind: str) -> dict:
+    props = _kind_props(cfg, kind)
+    d = cfg.d_model
+    desc = {
+        "ln_attn": norm_scale(d),
+        "ln_mlp": norm_scale(d),
+        "attn": attn.describe_attention(cfg),
+    }
+    if props["is_moe"]:
+        desc["moe"] = moe_mod.describe_moe(cfg)
+    else:
+        desc["mlp"] = nn.describe_mlp(cfg, cfg.d_ff)
+    return desc
+
+
+def apply_layer(params: dict, x: jax.Array, positions, cfg: ModelConfig,
+                kind: str, *, cache=None, cache_len=None,
+                mrope_positions=None, moe_impl: str = "dropping",
+                ) -> Tuple[jax.Array, Optional[dict], jax.Array]:
+    props = _kind_props(cfg, kind)
+    zero_c = cfg.family == "dense" and cfg.embed_scale  # gemma: zero-centered
+    h = nn.rms_norm(x, params["ln_attn"], cfg.norm_eps, zero_centered=zero_c)
+    if cfg.use_mla:
+        a_out, new_cache = attn.apply_mla(params["attn"], h, positions, cfg,
+                                          cache=cache, cache_len=cache_len)
+    else:
+        a_out, new_cache = attn.apply_attention(
+            params["attn"], h, positions, cfg, window=props["window"],
+            cache=cache, cache_len=cache_len, mrope_positions=mrope_positions)
+    x = x + a_out
+    x = logical_constraint(x, "batch", "seq", "embed")
+    h = nn.rms_norm(x, params["ln_mlp"], cfg.norm_eps, zero_centered=zero_c)
+    aux = jnp.zeros((), jnp.float32)
+    if props["is_moe"]:
+        m_out, aux = moe_mod.apply_moe(params["moe"], h, cfg, impl=moe_impl)
+    else:
+        m_out = nn.apply_mlp(params["mlp"], h, cfg)
+    x = x + m_out
+    x = logical_constraint(x, "batch", "seq", "embed")
+    return x, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# segmented stack
+# ---------------------------------------------------------------------------
+def describe_stack(cfg: ModelConfig) -> dict:
+    out = {}
+    for i, (kind, n) in enumerate(segments(cfg)):
+        layer = describe_layer(cfg, kind)
+        out[f"seg{i}_{kind}"] = stack_layers(layer, n)
+    return out
+
+
+def _seg_entries(cfg: ModelConfig):
+    for i, (kind, n) in enumerate(segments(cfg)):
+        yield f"seg{i}_{kind}", kind, n
+
+
+def apply_stack(params: dict, x: jax.Array, positions, cfg: ModelConfig,
+                *, caches=None, cache_len=None, mrope_positions=None,
+                moe_impl: str = "dropping",
+                ) -> Tuple[jax.Array, Optional[dict], jax.Array]:
+    """Run all segments. caches: {seg_name: stacked cache} or None."""
+    aux_total = jnp.zeros((), jnp.float32)
+    new_caches = {} if caches is not None else None
+
+    for seg_name, kind, n in _seg_entries(cfg):
+        seg_params = params[seg_name]
+        seg_cache = caches.get(seg_name) if caches is not None else None
+
+        def body(carry, xs, _kind=kind):
+            xc, aux = carry
+            p_l, c_l = xs
+            out, new_c, a = apply_layer(
+                p_l, xc, positions, cfg, _kind, cache=c_l,
+                cache_len=cache_len, mrope_positions=mrope_positions,
+                moe_impl=moe_impl)
+            return (out, aux + a), new_c
+
+        if cfg.remat:
+            body = jax.checkpoint(body)
+
+        use_scan = cfg.scan_layers and n > 1
+        if use_scan:
+            (x, aux_total), ys = jax.lax.scan(
+                body, (x, aux_total), (seg_params, seg_cache))
+            if new_caches is not None:
+                new_caches[seg_name] = ys
+        else:
+            ys_list = []
+            for j in range(n):
+                p_j = jax.tree_util.tree_map(lambda a: a[j], seg_params)
+                c_j = (jax.tree_util.tree_map(lambda a: a[j], seg_cache)
+                       if seg_cache is not None else None)
+                (x, aux_total), y = body((x, aux_total), (p_j, c_j))
+                ys_list.append(y)
+            if new_caches is not None:
+                new_caches[seg_name] = jax.tree_util.tree_map(
+                    lambda *a: jnp.stack(a), *ys_list)
+    return x, new_caches, aux_total
+
+
+# ---------------------------------------------------------------------------
+# whole LM
+# ---------------------------------------------------------------------------
+class TransformerLM:
+    """Dense / MoE / VLM decoder LM."""
+
+    def __init__(self, cfg: ModelConfig, moe_impl: str = None):
+        self.cfg = cfg
+        import os
+        self.moe_impl = moe_impl or os.environ.get("REPRO_MOE_IMPL",
+                                                   "dropping")
+
+    # ---- parameters -------------------------------------------------------
+    def describe(self) -> dict:
+        cfg = self.cfg
+        return {
+            "embed": nn.describe_embedding(cfg),
+            "stack": describe_stack(cfg),
+            "ln_f": norm_scale(cfg.d_model),
+        }
+
+    def init(self, key) -> dict:
+        return materialize(key, self.describe(), self.cfg.param_dtype)
+
+    def abstract_params(self) -> dict:
+        return abstract(self.describe(), self.cfg.param_dtype)
+
+    def param_axes(self) -> dict:
+        return logical_axes(self.describe())
+
+    # ---- forward ----------------------------------------------------------
+    def _trunk_in(self, params, batch) -> Tuple[jax.Array, jax.Array, Any]:
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        x = nn.embed_tokens(params["embed"], tokens, cfg)
+        B, S = tokens.shape
+        positions = jnp.arange(S)[None, :].astype(jnp.int32)
+        mrope_positions = None
+        if cfg.family == "vlm":
+            pe = batch.get("patch_embeds")
+            if pe is not None:
+                npatch = pe.shape[1]
+                x = jnp.concatenate([pe.astype(x.dtype), x[:, npatch:]], axis=1)
+            mrope_positions = batch.get("mrope_positions")
+        x = logical_constraint(x, "batch", "seq", "embed")
+        return x, positions, mrope_positions
+
+    def forward(self, params: dict, batch: dict) -> Tuple[jax.Array, jax.Array]:
+        """Full-sequence forward. Returns (logits (B,S,V), aux_loss)."""
+        cfg = self.cfg
+        x, positions, mrope = self._trunk_in(params, batch)
+        x, _, aux = apply_stack(params["stack"], x, positions, cfg,
+                                mrope_positions=mrope, moe_impl=self.moe_impl)
+        x = nn.rms_norm(x, params["ln_f"], cfg.norm_eps,
+                        zero_centered=cfg.embed_scale)
+        logits = nn.unembed(params["embed"], x, cfg)
+        logits = logical_constraint(logits, "batch", "seq", "vocab")
+        return logits, aux
+
+    def loss_fn(self, params: dict, batch: dict) -> Tuple[jax.Array, dict]:
+        cfg = self.cfg
+        x, positions, mrope = self._trunk_in(params, batch)
+        x, _, aux = apply_stack(params["stack"], x, positions, cfg,
+                                mrope_positions=mrope, moe_impl=self.moe_impl)
+        x = nn.rms_norm(x, params["ln_f"], cfg.norm_eps,
+                        zero_centered=cfg.embed_scale)
+        loss, metrics = chunked_ce_loss(params["embed"], x, batch["targets"],
+                                        cfg, loss_mask=batch.get("loss_mask"))
+        total = loss + aux
+        metrics["aux_loss"] = aux
+        metrics["loss"] = total
+        return total, metrics
+
+    # ---- decode -----------------------------------------------------------
+    def decode_step(self, params: dict, cache: dict, tokens: jax.Array,
+                    cache_len: jax.Array, *, mrope_positions=None,
+                    ) -> Tuple[jax.Array, dict]:
+        """tokens: (B,1) new token; cache_len: valid length incl. new token."""
+        cfg = self.cfg
+        x = nn.embed_tokens(params["embed"], tokens, cfg)
+        positions = (cache_len - 1)[None, None] if cache_len.ndim == 0 \
+            else cache_len[:, None] - 1
+        positions = jnp.broadcast_to(positions, tokens.shape).astype(jnp.int32)
+        if cfg.mrope and mrope_positions is None:
+            # generated tokens sit in the text segment: all three position
+            # streams advance together
+            mrope_positions = jnp.broadcast_to(positions[None],
+                                               (3,) + tuple(tokens.shape))
+        x = logical_constraint(x, "batch", None, "embed")
+        x, new_caches, _ = apply_stack(
+            params["stack"], x, positions, cfg, caches=cache,
+            cache_len=(cache_len if cache_len.ndim == 0 else cache_len[0]),
+            mrope_positions=mrope_positions, moe_impl=self.moe_impl)
+        x = nn.rms_norm(x, params["ln_f"], cfg.norm_eps,
+                        zero_centered=cfg.embed_scale)
+        logits = nn.unembed(params["embed"], x, cfg)
+        return logits, new_caches
+
+    # ---- caches ------------------------------------------------------------
+    def _cache_shape(self, batch: int, max_len: int):
+        cfg = self.cfg
+        if cfg.use_mla:
+            base = {"c_kv": (batch, max_len, cfg.kv_lora_rank),
+                    "k_pe": (batch, max_len, cfg.qk_rope_head_dim)}
+            axes = {"c_kv": ("batch", "act_kv_seq", None),
+                    "k_pe": ("batch", "act_kv_seq", None)}
+        else:
+            shp = (batch, max_len, cfg.num_kv_heads, cfg.head_dim)
+            base = {"k": shp, "v": shp}
+            axes = {"k": ("batch", "act_kv_seq", "kv", None),
+                    "v": ("batch", "act_kv_seq", "kv", None)}
+        return base, axes
+
+    def abstract_cache(self, batch: int, max_len: int, dtype="bfloat16"):
+        base, _ = self._cache_shape(batch, max_len)
+        out = {}
+        for seg_name, kind, n in _seg_entries(self.cfg):
+            out[seg_name] = {k: jax.ShapeDtypeStruct((n,) + s, jnp.dtype(dtype))
+                             for k, s in base.items()}
+        return out
+
+    def cache_axes(self, batch: int, max_len: int):
+        _, axes = self._cache_shape(batch, max_len)
+        out = {}
+        for seg_name, kind, n in _seg_entries(self.cfg):
+            out[seg_name] = {k: ("layers",) + a for k, a in axes.items()}
+        return out
+
+    def init_cache(self, batch: int, max_len: int, dtype="bfloat16"):
+        return jax.tree_util.tree_map(
+            lambda sds: jnp.zeros(sds.shape, sds.dtype),
+            self.abstract_cache(batch, max_len, dtype))
+
+
+# ---------------------------------------------------------------------------
+# loss
+# ---------------------------------------------------------------------------
+def chunked_ce_loss(embed_params: dict, x: jax.Array, targets: jax.Array,
+                    cfg: ModelConfig, loss_mask: Optional[jax.Array] = None,
+                    n_chunks: int = LOSS_SEQ_CHUNKS) -> Tuple[jax.Array, dict]:
+    """Cross-entropy + z-loss, computed in sequence chunks to bound the
+    fp32 logits working set.  Padded-vocab slots are masked out."""
+    B, S, d = x.shape
+    V = cfg.padded_vocab
+    n_chunks = max(1, min(n_chunks, S))
+    while S % n_chunks:
+        n_chunks -= 1
+    Sc = S // n_chunks
+    xc = jnp.moveaxis(x.reshape(B, n_chunks, Sc, d), 1, 0)
+    tc = jnp.moveaxis(targets.reshape(B, n_chunks, Sc), 1, 0)
+    if loss_mask is None:
+        loss_mask = jnp.ones((B, S), jnp.float32)
+    mc = jnp.moveaxis(loss_mask.reshape(B, n_chunks, Sc), 1, 0)
+    vocab_valid = (jnp.arange(V) < cfg.vocab_size)
+
+    def chunk(carry, xs):
+        loss_sum, z_sum, count = carry
+        xcj, tcj, mcj = xs
+        logits = nn.unembed(embed_params, xcj, cfg).astype(jnp.float32)
+        logits = jnp.where(vocab_valid[None, None, :], logits, -1e30)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, tcj[..., None], axis=-1)[..., 0]
+        nll = (lse - gold) * mcj
+        z = jnp.square(lse) * mcj
+        return (loss_sum + nll.sum(), z_sum + z.sum(), count + mcj.sum()), None
+
+    (loss_sum, z_sum, count), _ = jax.lax.scan(
+        chunk, (jnp.zeros((), jnp.float32),) * 3, (xc, tc, mc))
+    count = jnp.maximum(count, 1.0)
+    ce = loss_sum / count
+    zl = Z_LOSS * z_sum / count
+    return ce + zl, {"ce": ce, "z_loss": zl, "tokens": count}

@@ -1,0 +1,246 @@
+"""xLSTM LM: interleaved mLSTM (matrix memory) and sLSTM (scalar memory) blocks.
+
+Block structure follows arXiv:2405.04517:
+  mLSTM block: pre-LN → up-proj 2·pf·d → [conv → q,k → mLSTM(v from pre-conv)]
+               gated by SiLU(z) → group-norm → down-proj, residual.
+  sLSTM block: pre-LN → 4-gate recurrent cell (block-diag recurrence) →
+               group-norm → gated FFN (pf 4/3), residual.
+
+State (the "KV cache" for decode shapes) is O(1) in sequence length:
+  mLSTM: (C, n, m) matrix memory + conv tail;  sLSTM: (c, n, m, h).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import logical_constraint
+from repro.models import layers as nn
+from repro.models import ssm
+from repro.models.param import (P, abstract, dense as dense_p, logical_axes,
+                                materialize, norm_scale, zeros_init)
+
+
+def _mlstm_dims(cfg: ModelConfig) -> Tuple[int, int, int]:
+    di = int(cfg.proj_factor * cfg.d_model)
+    H = cfg.num_heads
+    return di, H, di // H
+
+
+def describe_mlstm_block(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    di, H, Dh = _mlstm_dims(cfg)
+    K = cfg.conv_kernel
+    return {
+        "ln": norm_scale(d),
+        "w_up": P((d, 2 * di), ("embed", "ffn")),
+        "conv_w": P((K, di), (None, "ffn"), init=lambda k, s, t:
+                    (jax.random.normal(k, s) * 0.1).astype(t)),
+        "conv_b": P((di,), ("ffn",), init=zeros_init),
+        "wq": P((di, di), ("ffn", None)),
+        "wk": P((di, di), ("ffn", None)),
+        "wv": P((di, di), ("ffn", "ffn")),
+        "w_i": P((di, H), ("ffn", None), init=zeros_init),
+        "b_i": P((H,), (None,), init=zeros_init),
+        "w_f": P((di, H), ("ffn", None), init=zeros_init),
+        "b_f": P((H,), (None,),
+                 init=lambda k, s, t: jnp.full(s, 3.0, t)),  # open forget gates
+        "gn": norm_scale(di, "ffn"),
+        "w_down": P((di, d), ("ffn", "embed")),
+    }
+
+
+def apply_mlstm_block(params: dict, x: jax.Array, cfg: ModelConfig,
+                      state: Optional[dict] = None, *, chunkwise: bool = True,
+                      ) -> Tuple[jax.Array, Optional[dict]]:
+    B, S, d = x.shape
+    di, H, Dh = _mlstm_dims(cfg)
+    dt = x.dtype
+    h = nn.rms_norm(x, params["ln"], cfg.norm_eps)
+    up = h @ params["w_up"].astype(dt)                  # (B,S,2di)
+    inner, z = up[..., :di], up[..., di:]
+    conv_state = state.get("conv") if state else None
+    c_out, new_conv = ssm.causal_conv1d(inner, params["conv_w"],
+                                        params["conv_b"], conv_state)
+    c_act = jax.nn.silu(c_out)
+    q = (c_act @ params["wq"].astype(dt)).reshape(B, S, H, Dh)
+    k = (c_act @ params["wk"].astype(dt)).reshape(B, S, H, Dh)
+    v = (inner @ params["wv"].astype(dt)).reshape(B, S, H, Dh)
+    i_pre = c_act @ params["w_i"].astype(dt) + params["b_i"].astype(dt)
+    f_pre = c_act @ params["w_f"].astype(dt) + params["b_f"].astype(dt)
+    cell_state = state.get("cell") if state else None
+    if S == 1 or not chunkwise:
+        hseq, new_cell = ssm.mlstm_sequential(q, k, v, i_pre, f_pre, cell_state)
+    else:
+        pad = (-S) % ssm.MLSTM_CHUNK
+        if pad:
+            zpad = lambda a: jnp.pad(a, [(0, 0), (0, pad)] +
+                                     [(0, 0)] * (a.ndim - 2))
+            # padded steps: f_pre huge (keep state), i_pre -inf-ish (no write)
+            q2, k2, v2 = zpad(q), zpad(k), zpad(v)
+            i2 = jnp.pad(i_pre, ((0, 0), (0, pad), (0, 0)),
+                         constant_values=-1e9)
+            f2 = jnp.pad(f_pre, ((0, 0), (0, pad), (0, 0)),
+                         constant_values=30.0)
+            hseq, new_cell = ssm.mlstm_chunkwise(q2, k2, v2, i2, f2, cell_state)
+            hseq = hseq[:, :S]
+        else:
+            hseq, new_cell = ssm.mlstm_chunkwise(q, k, v, i_pre, f_pre,
+                                                 cell_state)
+    hflat = hseq.reshape(B, S, di)
+    hflat = nn.rms_norm(hflat, params["gn"], cfg.norm_eps)
+    gated = hflat * jax.nn.silu(z)
+    out = gated @ params["w_down"].astype(dt)
+    new_state = ({"conv": new_conv, "cell": new_cell}
+                 if state is not None else None)
+    return x + out, new_state
+
+
+def describe_slstm_block(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    H = cfg.num_heads
+    Dh = d // H
+    ffn = max(64, int(4 * d / 3) // 64 * 64)
+    return {
+        "ln": norm_scale(d),
+        "w_in": P((d, H, Dh, 4), ("embed", None, None, None)),
+        "b_in": P((H, Dh, 4), (None, None, None), init=zeros_init),
+        "r_z": P((H, Dh, Dh), (None, None, None), init=zeros_init),
+        "r_i": P((H, Dh, Dh), (None, None, None), init=zeros_init),
+        "r_f": P((H, Dh, Dh), (None, None, None), init=zeros_init),
+        "r_o": P((H, Dh, Dh), (None, None, None), init=zeros_init),
+        "gn": norm_scale(d),
+        "ffn_gate": dense_p(d, ffn, "embed", "ffn"),
+        "ffn_up": dense_p(d, ffn, "embed", "ffn"),
+        "ffn_down": dense_p(ffn, d, "ffn", "embed"),
+    }
+
+
+def apply_slstm_block(params: dict, x: jax.Array, cfg: ModelConfig,
+                      state=None) -> Tuple[jax.Array, Optional[object]]:
+    B, S, d = x.shape
+    H = cfg.num_heads
+    Dh = d // H
+    dt = x.dtype
+    h = nn.rms_norm(x, params["ln"], cfg.norm_eps)
+    gates = jnp.einsum("bsd,dhef->bshef", h, params["w_in"].astype(dt))
+    gates = gates + params["b_in"].astype(dt)
+    rw = {k: params[f"r_{k}"] for k in ("z", "i", "f", "o")}
+    cell_state = state.get("cell") if state else None
+    hseq, new_cell = ssm.slstm_parallel(gates, rw, cell_state)
+    hflat = hseq.reshape(B, S, d).astype(dt)
+    hflat = nn.rms_norm(hflat, params["gn"], cfg.norm_eps)
+    g = hflat @ params["ffn_gate"].astype(dt)
+    u = hflat @ params["ffn_up"].astype(dt)
+    out = (jax.nn.gelu(g) * u) @ params["ffn_down"].astype(dt)
+    new_state = {"cell": new_cell} if state is not None else None
+    return x + out, new_state
+
+
+class XLSTMModel:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.kinds = list(cfg.layer_kinds or ["mlstm"] * cfg.num_layers)
+
+    def describe(self) -> dict:
+        cfg = self.cfg
+        blocks = {}
+        for i, kind in enumerate(self.kinds):
+            desc = (describe_slstm_block(cfg) if kind == "slstm"
+                    else describe_mlstm_block(cfg))
+            blocks[f"block{i}_{kind}"] = desc
+        return {"embed": nn.describe_embedding(cfg), "blocks": blocks,
+                "ln_f": norm_scale(cfg.d_model)}
+
+    def init(self, key):
+        return materialize(key, self.describe(), self.cfg.param_dtype)
+
+    def abstract_params(self):
+        return abstract(self.describe(), self.cfg.param_dtype)
+
+    def param_axes(self):
+        return logical_axes(self.describe())
+
+    def _trunk(self, params, x, states):
+        cfg = self.cfg
+        new_states = {} if states is not None else None
+        for i, kind in enumerate(self.kinds):
+            name = f"block{i}_{kind}"
+            st = states.get(name) if states is not None else None
+            fn = apply_slstm_block if kind == "slstm" else apply_mlstm_block
+            x, new_st = fn(params["blocks"][name], x, cfg, st)
+            if new_states is not None:
+                new_states[name] = new_st
+            x = logical_constraint(x, "batch", "seq", "embed")
+        return x, new_states
+
+    def forward(self, params, batch):
+        cfg = self.cfg
+        x = nn.embed_tokens(params["embed"], batch["tokens"], cfg)
+        x, _ = self._trunk(params, x, None)
+        x = nn.rms_norm(x, params["ln_f"], cfg.norm_eps)
+        return nn.unembed(params["embed"], x, cfg), jnp.zeros((), jnp.float32)
+
+    def loss_fn(self, params, batch):
+        from repro.models.transformer import chunked_ce_loss
+        cfg = self.cfg
+        x = nn.embed_tokens(params["embed"], batch["tokens"], cfg)
+        x, _ = self._trunk(params, x, None)
+        x = nn.rms_norm(x, params["ln_f"], cfg.norm_eps)
+        loss, metrics = chunked_ce_loss(params["embed"], x, batch["targets"],
+                                        cfg, batch.get("loss_mask"))
+        metrics["loss"] = loss
+        return loss, metrics
+
+    def decode_step(self, params, cache, tokens, cache_len, **_):
+        cfg = self.cfg
+        x = nn.embed_tokens(params["embed"], tokens, cfg)
+        x, new_states = self._trunk(params, x, cache)
+        x = nn.rms_norm(x, params["ln_f"], cfg.norm_eps)
+        return nn.unembed(params["embed"], x, cfg), new_states
+
+    # ---- recurrent state ("cache") ----------------------------------------
+    def _state_struct(self, batch: int, kind: str):
+        cfg = self.cfg
+        if kind == "slstm":
+            H, Dh = cfg.num_heads, cfg.d_model // cfg.num_heads
+            s = (batch, H, Dh)
+            return {"cell": tuple(jax.ShapeDtypeStruct(s, jnp.float32)
+                                  for _ in range(4))}
+        di, H, Dh = _mlstm_dims(cfg)
+        return {
+            "conv": jax.ShapeDtypeStruct((batch, cfg.conv_kernel - 1, di),
+                                         jnp.dtype(cfg.dtype)),
+            "cell": (jax.ShapeDtypeStruct((batch, H, Dh, Dh), jnp.float32),
+                     jax.ShapeDtypeStruct((batch, H, Dh), jnp.float32),
+                     jax.ShapeDtypeStruct((batch, H), jnp.float32)),
+        }
+
+    def abstract_cache(self, batch: int, max_len: int, dtype="bfloat16"):
+        return {f"block{i}_{k}": self._state_struct(batch, k)
+                for i, k in enumerate(self.kinds)}
+
+    def cache_axes(self, batch: int, max_len: int):
+        def ax(sds):
+            return ("batch",) + (None,) * (len(sds.shape) - 1)
+        return jax.tree_util.tree_map(ax, self.abstract_cache(batch, max_len))
+
+    def init_cache(self, batch: int, max_len: int, dtype="bfloat16"):
+        def zero(sds):
+            if sds.shape[-1:] == (self.cfg.num_heads,):
+                pass
+            return jnp.zeros(sds.shape, sds.dtype)
+        tree = jax.tree_util.tree_map(zero, self.abstract_cache(batch, max_len))
+        # m-stabilizers start at -inf
+        for name in tree:
+            cell = tree[name]["cell"]
+            if len(cell) == 3:  # mLSTM (C, n, m)
+                tree[name]["cell"] = (cell[0], cell[1],
+                                      jnp.full_like(cell[2], -jnp.inf))
+            elif len(cell) == 4:  # sLSTM (c, n, m, h)
+                tree[name]["cell"] = (cell[0], cell[1],
+                                      jnp.full_like(cell[2], -jnp.inf), cell[3])
+        return tree

@@ -1,0 +1,147 @@
+"""Fault-tolerant training loop.
+
+Wires together: model + optimizer + deterministic data pipeline +
+Proteus-backed checkpointing + the failure policy.  The loop survives
+crashes (restore + cursor replay), stragglers (deterministic redo) and
+checkpoint corruption (checksum fallback) — all exercised by tests with an
+injected FailurePlan.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.core.layouts import LayoutMode, LayoutParams
+from repro.data.pipeline import TokenPipeline
+from repro.train.failure import FailureLog, FailurePlan
+from repro.train.optimizer import AdamW
+from repro.train.train_step import make_train_step
+
+
+@dataclass
+class LoopConfig:
+    steps: int = 20
+    ckpt_every: int = 5
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    layout_mode: LayoutMode = LayoutMode.NODE_LOCAL  # N-N checkpoint default
+    n_bb_nodes: int = 8
+    microbatches: int = 1
+    log_every: int = 1
+
+
+@dataclass
+class LoopResult:
+    losses: List[float] = field(default_factory=list)
+    final_step: int = 0
+    failure_log: FailureLog = field(default_factory=FailureLog)
+
+
+def run_training(model, cfg, batch_size: int, seq_len: int,
+                 loop_cfg: LoopConfig, optimizer: Optional[AdamW] = None,
+                 failure_plan: Optional[FailurePlan] = None,
+                 seed: int = 0) -> LoopResult:
+    optimizer = optimizer or AdamW(warmup_steps=5, total_steps=loop_cfg.steps)
+    failure_plan = failure_plan or FailurePlan()
+    log = FailureLog()
+
+    params = model.init(jax.random.PRNGKey(seed))
+    opt_state = optimizer.init(params)
+    pipeline = TokenPipeline(cfg, batch_size, seq_len, seed=seed)
+    ckpt = CheckpointManager(
+        loop_cfg.ckpt_dir,
+        LayoutParams(mode=loop_cfg.layout_mode, n_nodes=loop_cfg.n_bb_nodes),
+        async_save=True)
+    train_step = jax.jit(make_train_step(model, optimizer,
+                                         microbatches=loop_cfg.microbatches))
+
+    result = LoopResult()
+    step = 0
+    while step < loop_cfg.steps:
+        event = failure_plan.at(step)
+
+        if event == "crash":
+            log.crashes += 1
+            failure_plan.events.pop(step, None)  # the node came back up
+            # host dies: in-memory state is gone → restore newest checkpoint
+            ckpt.wait()
+            restored = _restore_latest(
+                ckpt, (params, opt_state, jnp.zeros((2,), jnp.int32)), log)
+            if restored is not None:
+                (params, opt_state, cursor), ck_step = restored
+                pipeline.restore_cursor(tuple(int(c) for c in
+                                              np.asarray(cursor)))
+                step = ck_step
+                log.restores += 1
+            else:  # no checkpoint yet: cold restart
+                params = model.init(jax.random.PRNGKey(seed))
+                opt_state = optimizer.init(params)
+                pipeline.restore_cursor((0, 0))
+                step = 0
+            continue
+
+        if event == "corrupt_ckpt":
+            log.corruptions += 1
+            _corrupt_newest_chunk(ckpt)
+
+        batch_np = pipeline.next_batch()
+        batch = {k: jnp.asarray(v) for k, v in batch_np.items()}
+
+        params2, opt2, metrics = train_step(params, opt_state, batch)
+        loss = float(metrics["loss"])
+
+        if event == "straggler":
+            # deadline exceeded: deterministic redo of the same step
+            log.stragglers += 1
+            log.redone_steps.append(step)
+            params2, opt2, metrics2 = train_step(params, opt_state, batch)
+            redo_loss = float(metrics2["loss"])
+            assert abs(redo_loss - loss) < 1e-5, "redo must be deterministic"
+            loss = redo_loss
+
+        params, opt_state = params2, opt2
+        result.losses.append(loss)
+        step += 1
+
+        if step % loop_cfg.ckpt_every == 0:
+            ckpt.save(step, (params, opt_state,
+                             jnp.asarray(pipeline.cursor(), jnp.int32)))
+    ckpt.wait()
+    result.final_step = step
+    result.failure_log = log
+    return result
+
+
+def _restore_latest(ckpt: CheckpointManager, like_state, log: FailureLog):
+    """Restore the newest checkpoint, falling back past corrupted ones."""
+    steps = sorted({int(p.stem.split("_")[1])
+                    for p in ckpt.dir.glob("ckpt_*.json")}, reverse=True)
+    for s in steps:
+        try:
+            state, sstep = ckpt.restore(s, like_state, verify=True)
+            return state, sstep
+        except IOError:
+            log.fallback_restores += 1
+            continue
+    return None
+
+
+def _corrupt_newest_chunk(ckpt: CheckpointManager) -> None:
+    """Bit-flip one stored chunk of the newest checkpoint (fault injection)."""
+    ckpt.wait()
+    steps = sorted({int(p.stem.split("_")[1])
+                    for p in ckpt.dir.glob("ckpt_*.json")}, reverse=True)
+    if not steps:
+        return
+    for node in ckpt.store.nodes:
+        for key, raw in list(node.items()):
+            if len(raw) >= 4:
+                b = bytearray(raw)
+                b[0] ^= 0xFF
+                node[key] = bytes(b)
+                return

@@ -1,0 +1,103 @@
+"""AdamW optimizer (pure JAX, sharding-aware state).
+
+Optimizer moments mirror the parameter tree, so they inherit the parameter
+PartitionSpecs (ZeRO-style: fsdp-sharded params ⇒ fsdp-sharded moments).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    mu: Any
+    nu: Any
+
+
+@dataclass(frozen=True)
+class AdamW:
+    learning_rate: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+
+    # ---- schedule -----------------------------------------------------------
+    def lr_at(self, step: jax.Array) -> jax.Array:
+        s = step.astype(jnp.float32)
+        warm = s / max(1, self.warmup_steps)
+        prog = jnp.clip((s - self.warmup_steps) /
+                        max(1, self.total_steps - self.warmup_steps), 0., 1.)
+        cos = self.min_lr_frac + (1 - self.min_lr_frac) * \
+            0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return self.learning_rate * jnp.minimum(warm, cos)
+
+    # ---- state --------------------------------------------------------------
+    def init(self, params) -> AdamWState:
+        zeros = jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        zeros2 = jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        return AdamWState(jnp.zeros((), jnp.int32), zeros, zeros2)
+
+    def abstract_state(self, abstract_params) -> AdamWState:
+        z = jax.tree_util.tree_map(
+            lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32),
+            abstract_params)
+        z2 = jax.tree_util.tree_map(
+            lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32),
+            abstract_params)
+        return AdamWState(jax.ShapeDtypeStruct((), jnp.int32), z, z2)
+
+    def state_axes(self, param_axes) -> AdamWState:
+        """Logical axes for the optimizer state (mirrors params)."""
+        return AdamWState((), param_axes,
+                          jax.tree_util.tree_map(lambda a: a, param_axes))
+
+    # ---- update -------------------------------------------------------------
+    def update(self, grads, state: AdamWState, params
+               ) -> Tuple[Any, AdamWState, dict]:
+        # global-norm clip
+        gsq = sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                  for g in jax.tree_util.tree_leaves(grads))
+        gnorm = jnp.sqrt(gsq)
+        scale = jnp.minimum(1.0, self.grad_clip / (gnorm + 1e-9))
+        step = state.step + 1
+        lr = self.lr_at(step)
+        b1c = 1 - self.b1 ** step.astype(jnp.float32)
+        b2c = 1 - self.b2 ** step.astype(jnp.float32)
+
+        def upd(g, m, v, p):
+            g = g.astype(jnp.float32) * scale
+            m = self.b1 * m + (1 - self.b1) * g
+            v = self.b2 * v + (1 - self.b2) * jnp.square(g)
+            mh = m / b1c
+            vh = v / b2c
+            delta = mh / (jnp.sqrt(vh) + self.eps)
+            delta = delta + self.weight_decay * p.astype(jnp.float32)
+            return (-lr * delta).astype(p.dtype), m, v
+
+        flat_g, treedef = jax.tree_util.tree_flatten(grads)
+        flat_m = treedef.flatten_up_to(state.mu)
+        flat_v = treedef.flatten_up_to(state.nu)
+        flat_p = treedef.flatten_up_to(params)
+        out = [upd(g, m, v, p)
+               for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+        updates = treedef.unflatten([o[0] for o in out])
+        mu = treedef.unflatten([o[1] for o in out])
+        nu = treedef.unflatten([o[2] for o in out])
+        metrics = {"grad_norm": gnorm, "lr": lr}
+        return updates, AdamWState(step, mu, nu), metrics
+
+
+def apply_updates(params, updates):
+    return jax.tree_util.tree_map(lambda p, u: p + u.astype(p.dtype),
+                                  params, updates)

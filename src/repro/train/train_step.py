@@ -1,0 +1,85 @@
+"""train_step / serve_step factories (the jitted production steps)."""
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.train.optimizer import AdamW, AdamWState, apply_updates
+
+
+def make_train_step(model, optimizer: AdamW,
+                    compressor=None,
+                    microbatches: int = 1) -> Callable:
+    """Returns train_step(params, opt_state, batch) -> (params, opt_state,
+    metrics).
+
+    ``microbatches > 1`` runs gradient accumulation over equal batch slices
+    (sequential lax.scan — the PP/large-batch memory lever).
+    ``compressor`` (distributed/compression.py) is applied to gradients
+    before the optimizer (error-feedback state rides in its own slot).
+    """
+    grad_fn = jax.value_and_grad(model.loss_fn, has_aux=True)
+
+    def single(params, batch):
+        (loss, metrics), grads = grad_fn(params, batch)
+        return grads, metrics
+
+    def accumulated(params, batch):
+        def slice_mb(x, i):
+            mb = x.shape[0] // microbatches
+            return jax.lax.dynamic_slice_in_dim(x, i * mb, mb, axis=0)
+
+        def body(carry, i):
+            acc = carry
+            mb_batch = jax.tree_util.tree_map(lambda x: slice_mb(x, i), batch)
+            g, m = single(params, mb_batch)
+            acc = jax.tree_util.tree_map(jnp.add, acc, g)
+            return acc, m
+
+        zeros = jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        acc, ms = jax.lax.scan(body, zeros, jnp.arange(microbatches))
+        grads = jax.tree_util.tree_map(lambda g: g / microbatches, acc)
+        metrics = jax.tree_util.tree_map(lambda m: m[-1], ms)
+        return grads, metrics
+
+    def train_step(params, opt_state: AdamWState, batch):
+        if microbatches > 1:
+            grads, metrics = accumulated(params, batch)
+        else:
+            grads, metrics = single(params, batch)
+        if compressor is not None:
+            grads = compressor(grads)
+        updates, opt_state, opt_metrics = optimizer.update(
+            grads, opt_state, params)
+        params = apply_updates(params, updates)
+        metrics = {**metrics, **opt_metrics}
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(model) -> Callable:
+    """Full-sequence forward (inference-prefill shapes)."""
+
+    def prefill_step(params, batch):
+        logits, _aux = model.forward(params, batch)
+        # return only the last-position logits (next-token) to bound output
+        return logits[:, -1, :]
+
+    return prefill_step
+
+
+def make_serve_step(model) -> Callable:
+    """One-token decode against a KV cache (decode/long-context shapes)."""
+
+    def serve_step(params, cache, tokens, cache_len):
+        logits, new_cache = model.decode_step(params, cache, tokens,
+                                              cache_len)
+        next_tok = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+        return next_tok, new_cache
+
+    return serve_step

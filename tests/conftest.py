@@ -1,0 +1,10 @@
+# NOTE: deliberately NO xla_force_host_platform_device_count here — smoke
+# tests and benches must see 1 device (dry-run sets 512 in its own process;
+# multi-device engine tests spawn subprocesses).
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.RandomState(0)

@@ -1,0 +1,138 @@
+"""Attention numerics: online-softmax == naive, windowed masks, MLA decode."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import attention as attn
+
+RNG = np.random.RandomState(0)
+
+
+def _naive(q, k, v, causal=True, window=0, sink=0):
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / math.sqrt(q.shape[-1])
+    S = q.shape[1]
+    qpos = jnp.arange(S)[:, None]
+    kpos = jnp.arange(S)[None, :]
+    mask = kpos <= qpos if causal else jnp.ones((S, S), bool)
+    if window:
+        wmask = kpos > qpos - window - 1
+        if sink:
+            wmask = wmask | (kpos < sink)
+        mask = mask & wmask
+    s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32))
+
+
+@pytest.mark.parametrize("S,block", [(128, 32), (200, 64), (96, 96)])
+def test_online_softmax_matches_naive(S, block):
+    B, H, D = 2, 3, 16
+    q = jnp.asarray(RNG.randn(B, S, H, D), jnp.float32)
+    k = jnp.asarray(RNG.randn(B, S, H, D), jnp.float32)
+    v = jnp.asarray(RNG.randn(B, S, H, D), jnp.float32)
+    out = attn.online_softmax_attention(q, k, v, causal=True, q_offset=0,
+                                        scale=1 / math.sqrt(D),
+                                        block_kv=block)
+    ref = _naive(q, k, v)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)
+
+
+@pytest.mark.parametrize("window,sink", [(16, 0), (32, 0), (16, 8)])
+def test_windowed_matches_naive_mask(window, sink):
+    B, S, H, D = 2, 128, 2, 16
+    q = jnp.asarray(RNG.randn(B, S, H, D), jnp.float32)
+    k = jnp.asarray(RNG.randn(B, S, H, D), jnp.float32)
+    v = jnp.asarray(RNG.randn(B, S, H, D), jnp.float32)
+    out = attn.windowed_attention(q, k, v, window=window,
+                                  scale=1 / math.sqrt(D), block_q=32,
+                                  sink_len=sink)
+    ref = _naive(q, k, v, window=window, sink=sink)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)
+
+
+def test_decode_matches_prefill_last_position():
+    """Decoding token t against the cache == full prefill at position t."""
+    from repro.configs import all_configs
+    cfg = all_configs()["gemma-7b"].reduced()
+    from repro.models.param import materialize
+    desc = attn.describe_attention(cfg)
+    params = materialize(jax.random.PRNGKey(1), desc)
+    B, S = 2, 16
+    x = jnp.asarray(RNG.randn(B, S, cfg.d_model), jnp.float32)
+    pos = jnp.arange(S)[None]
+    full, _ = attn.apply_attention(params, x, pos, cfg)
+    # replay through decode: feed tokens one at a time
+    cache = {"k": jnp.zeros((B, S, cfg.num_kv_heads, cfg.head_dim)),
+             "v": jnp.zeros((B, S, cfg.num_kv_heads, cfg.head_dim))}
+    outs = []
+    for t in range(S):
+        xt = x[:, t:t + 1]
+        post = jnp.full((B, 1), t, jnp.int32)
+        o, cache = attn.apply_attention(params, xt, post, cfg, cache=cache,
+                                        cache_len=jnp.asarray(t + 1))
+        outs.append(o)
+    dec = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(full),
+                               atol=3e-3, rtol=1e-2)
+
+
+def test_mla_decode_matches_prefill():
+    from repro.configs import all_configs
+    cfg = all_configs()["deepseek-v2-lite-16b"].reduced()
+    from repro.models.param import materialize
+    params = materialize(jax.random.PRNGKey(2),
+                         attn.describe_attention(cfg))
+    B, S = 2, 12
+    x = jnp.asarray(RNG.randn(B, S, cfg.d_model) * 0.3, jnp.float32)
+    pos = jnp.arange(S)[None]
+    full, _ = attn.apply_mla(params, x, pos, cfg)
+    cache = {k: jnp.zeros(v.shape, jnp.float32) for k, v in
+             {"c_kv": jnp.zeros((B, S, cfg.kv_lora_rank)),
+              "k_pe": jnp.zeros((B, S, cfg.qk_rope_head_dim))}.items()}
+    outs = []
+    for t in range(S):
+        o, cache = attn.apply_mla(params, x[:, t:t + 1],
+                                  jnp.full((B, 1), t, jnp.int32), cfg,
+                                  cache=cache, cache_len=jnp.asarray(t + 1))
+        outs.append(o)
+    dec = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(full),
+                               atol=3e-3, rtol=1e-2)
+
+
+def test_gqa_repeat_layout():
+    k = jnp.arange(2 * 4 * 2 * 3).reshape(2, 4, 2, 3)
+    r = attn._repeat_kv(k, 2)
+    assert r.shape == (2, 4, 4, 3)
+    np.testing.assert_array_equal(np.asarray(r[:, :, 0]),
+                                  np.asarray(r[:, :, 1]))  # consecutive
+
+
+@pytest.mark.parametrize("window,sink,Bq", [(16, 0, 32), (32, 8, 32),
+                                            (16, 8, 16)])
+def test_windowed_parallel_matches_naive(window, sink, Bq):
+    """§Perf-optimized batched-block windowed attention == masked naive."""
+    B, S, H, D = 2, 128, 2, 16
+    q = jnp.asarray(RNG.randn(B, S, H, D), jnp.float32)
+    k = jnp.asarray(RNG.randn(B, S, H, D), jnp.float32)
+    v = jnp.asarray(RNG.randn(B, S, H, D), jnp.float32)
+    out = attn.windowed_attention_parallel(q, k, v, window=window,
+                                           scale=1 / math.sqrt(D),
+                                           block_q=Bq, sink_len=sink)
+    ref = _naive(q, k, v, window=window, sink=sink)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)
+
+
+def test_windowed_parallel_matches_sequential_impl():
+    B, S, H, D = 1, 96, 2, 8
+    q = jnp.asarray(RNG.randn(B, S, H, D), jnp.float32)
+    k = jnp.asarray(RNG.randn(B, S, H, D), jnp.float32)
+    v = jnp.asarray(RNG.randn(B, S, H, D), jnp.float32)
+    a = attn.windowed_attention(q, k, v, window=24, scale=0.3, block_q=32)
+    b = attn.windowed_attention_parallel(q, k, v, window=24, scale=0.3,
+                                         block_q=32)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-5)

@@ -1,0 +1,98 @@
+"""Burst-buffer engine: data integrity across all four layouts (+property)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import burst_buffer as bb
+from repro.core.layouts import LayoutMode, LayoutParams
+
+N, Q, W = 8, 5, 8
+
+
+def _write_read_roundtrip(mode, ph, cid, payload, readers_perm):
+    params = LayoutParams(mode=mode, n_nodes=N)
+    state = bb.init_state(N, cap=256, words=W, mcap=256)
+    valid = jnp.ones(ph.shape, bool)
+    state = bb.forward_write(state, params, ph, cid, payload, valid)
+    out, found = bb.forward_read(state, params, ph[readers_perm],
+                                 cid[readers_perm], valid)
+    return out, found
+
+
+@pytest.mark.parametrize("mode", list(LayoutMode))
+def test_integrity_same_and_cross_reader(mode, rng):
+    ph = jnp.asarray(rng.randint(1, 1 << 20, (N, Q)), jnp.int32)
+    cid = jnp.asarray(rng.randint(0, 4, (N, Q)), jnp.int32)
+    payload = jnp.asarray(rng.randint(0, 9999, (N, Q, W)), jnp.int32)
+    for perm in (np.arange(N), rng.permutation(N)):
+        out, found = _write_read_roundtrip(mode, ph, cid, payload, perm)
+        assert bool(found.all()), mode
+        assert np.array_equal(np.asarray(out), np.asarray(payload)[perm])
+
+
+@pytest.mark.parametrize("mode", list(LayoutMode))
+def test_missing_chunks_not_found(mode, rng):
+    params = LayoutParams(mode=mode, n_nodes=N)
+    state = bb.init_state(N, cap=64, words=W, mcap=64)
+    ph = jnp.asarray(rng.randint(1, 1 << 20, (N, Q)), jnp.int32)
+    cid = jnp.zeros((N, Q), jnp.int32)
+    out, found = bb.forward_read(state, params, ph, cid,
+                                 jnp.ones((N, Q), bool))
+    assert not bool(found.any())
+    assert not np.asarray(out).any()
+
+
+@pytest.mark.parametrize("mode", list(LayoutMode))
+def test_metadata_lifecycle(mode, rng):
+    params = LayoutParams(mode=mode, n_nodes=N)
+    state = bb.init_state(N, cap=64, words=W, mcap=128)
+    ph = jnp.asarray(rng.randint(1, 1 << 20, (N, Q)), jnp.int32)
+    valid = jnp.ones((N, Q), bool)
+    zeros = jnp.zeros((N, Q), jnp.int32)
+    neg = jnp.full((N, Q), -1, jnp.int32)
+
+    create = jnp.full((N, Q), bb.OP_CREATE, jnp.int32)
+    state, fnd, _, _ = bb.meta_op(state, params, create, ph,
+                                  zeros + 7, neg, valid)
+    assert bool(fnd.all())
+    stat = jnp.full((N, Q), bb.OP_STAT, jnp.int32)
+    state, fnd, size, _ = bb.meta_op(state, params, stat, ph, zeros, neg,
+                                     valid)
+    assert bool(fnd.all())
+    assert (np.asarray(size) == 7).all()
+    rm = jnp.full((N, Q), bb.OP_REMOVE, jnp.int32)
+    state, fnd, _, _ = bb.meta_op(state, params, rm, ph, zeros, neg, valid)
+    assert bool(fnd.all())
+    state, fnd, _, _ = bb.meta_op(state, params, stat, ph, zeros, neg, valid)
+    assert not bool(fnd.any())
+
+
+def test_capacity_overflow_counted(rng):
+    params = LayoutParams(mode=LayoutMode.NODE_LOCAL, n_nodes=N)
+    state = bb.init_state(N, cap=3, words=W, mcap=256)
+    ph = jnp.asarray(rng.randint(1, 1 << 20, (N, Q)), jnp.int32)
+    cid = jnp.asarray(np.arange(Q)[None].repeat(N, 0), jnp.int32)
+    payload = jnp.ones((N, Q, W), jnp.int32)
+    state = bb.forward_write(state, params, ph, cid, payload,
+                             jnp.ones((N, Q), bool))
+    assert (np.asarray(state.dropped) >= Q - 3).all()
+
+
+@given(st.integers(1, 3), st.integers(0, 2 ** 20))
+@settings(max_examples=12, deadline=None)
+def test_property_newest_version_wins(mode_offset, base_hash):
+    """Duplicate writes: the newest payload must be returned."""
+    mode = LayoutMode((mode_offset % 4) + 1)
+    params = LayoutParams(mode=mode, n_nodes=N)
+    state = bb.init_state(N, cap=64, words=W, mcap=64)
+    ph = jnp.full((N, 1), base_hash % (1 << 20) + 1, jnp.int32)
+    cid = jnp.zeros((N, 1), jnp.int32)
+    valid = jnp.zeros((N, 1), bool).at[0, 0].set(True)  # one writer
+    v1 = jnp.full((N, 1, W), 111, jnp.int32)
+    v2 = jnp.full((N, 1, W), 222, jnp.int32)
+    state = bb.forward_write(state, params, ph, cid, v1, valid)
+    state = bb.forward_write(state, params, ph, cid, v2, valid)
+    out, found = bb.forward_read(state, params, ph, cid, valid)
+    assert bool(found[0, 0])
+    assert (np.asarray(out)[0, 0] == 222).all()

@@ -1,0 +1,90 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (interpret mode)."""
+import math
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.chunk_pack.ops import pack_chunks
+from repro.kernels.chunk_pack.ref import pack_chunks_ref
+from repro.kernels.chunk_router.ops import route_chunks
+from repro.kernels.chunk_router.ref import route_chunks_ref
+from repro.kernels.fletcher.ops import fletcher_checksum
+from repro.kernels.fletcher.ref import fletcher_ref
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+
+RNG = np.random.RandomState(7)
+
+
+@pytest.mark.parametrize("B,S,H,D", [(2, 128, 2, 64), (1, 256, 4, 64),
+                                     (2, 96, 3, 80), (1, 512, 1, 128)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention_sweep(B, S, H, D, dtype, causal):
+    q = jnp.asarray(RNG.randn(B, S, H, D), dtype)
+    k = jnp.asarray(RNG.randn(B, S, H, D), dtype)
+    v = jnp.asarray(RNG.randn(B, S, H, D), dtype)
+    out = flash_attention(q, k, v, causal=causal, block_q=64, block_k=64)
+    tb = lambda a: a.transpose(0, 2, 1, 3).reshape(B * H, S, D)
+    ref = attention_ref(tb(q), tb(k), tb(v), scale=1 / math.sqrt(D),
+                        causal=causal)
+    ref = ref.reshape(B, H, S, D).transpose(0, 2, 1, 3)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), atol=tol,
+                               rtol=tol)
+
+
+@pytest.mark.parametrize("n", [8, 100, 1024, 4097])
+@pytest.mark.parametrize("mode", [1, 2, 3, 4])
+@pytest.mark.parametrize("nodes", [8, 64])
+def test_chunk_router_sweep(n, mode, nodes):
+    ph = jnp.asarray(RNG.randint(1, 2 ** 30, n), jnp.int32)
+    cid = jnp.asarray(RNG.randint(0, 64, n), jnp.int32)
+    cl = jnp.asarray(RNG.randint(0, nodes, n), jnp.int32)
+    d, c = route_chunks(ph, cid, cl, mode=mode, n_nodes=nodes)
+    dr, cr = route_chunks_ref(ph, cid, cl, mode=mode, n_nodes=nodes)
+    np.testing.assert_array_equal(np.asarray(d), np.asarray(dr))
+    np.testing.assert_array_equal(np.asarray(c), np.asarray(cr))
+    assert int(c.sum()) == n
+
+
+@pytest.mark.parametrize("n,m,w", [(16, 16, 8), (100, 333, 16), (512, 64, 4)])
+@pytest.mark.parametrize("dtype", [jnp.int32, jnp.float32])
+def test_chunk_pack_sweep(n, m, w, dtype):
+    payload = jnp.asarray(RNG.randn(n, w) * 100, dtype)
+    idx = jnp.asarray(RNG.randint(0, n, m), jnp.int32)
+    out = pack_chunks(payload, idx)
+    np.testing.assert_array_equal(np.asarray(out),
+                                  np.asarray(pack_chunks_ref(payload, idx)))
+
+
+@pytest.mark.parametrize("n", [1, 9, 1023, 1024, 1025, 10000])
+def test_fletcher_sweep(n):
+    x = jnp.asarray(RNG.randint(-2 ** 31, 2 ** 31 - 1, n, dtype=np.int64),
+                    jnp.int32)
+    np.testing.assert_array_equal(np.asarray(fletcher_checksum(x)),
+                                  fletcher_ref(np.asarray(x)))
+
+
+def test_fletcher_detects_single_bitflip():
+    x = np.asarray(RNG.randint(0, 1000, 1000), np.int32)
+    base = fletcher_ref(x)
+    x2 = x.copy()
+    x2[123] ^= 1
+    assert not np.array_equal(fletcher_ref(x2), base)
+    # order sensitivity (classic sum-only checksums miss swaps)
+    x3 = x.copy()
+    x3[[10, 20]] = x3[[20, 10]]
+    assert not np.array_equal(fletcher_ref(x3), base)
+
+
+def test_fletcher_float_inputs():
+    x = jnp.asarray(RNG.randn(257), jnp.float32)
+    cs1 = fletcher_checksum(x)
+    cs2 = fletcher_checksum(x)
+    assert np.array_equal(np.asarray(cs1), np.asarray(cs2))
+    y = x.at[0].set(x[0] + 1e-6)
+    assert not np.array_equal(np.asarray(fletcher_checksum(y)),
+                              np.asarray(cs1))

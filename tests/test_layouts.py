@@ -1,0 +1,92 @@
+"""Routing-triplet unit + property tests (hypothesis)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.layouts import (LayoutMode, LayoutParams, MODE_TRAITS,
+                                f_data, f_meta_d, f_meta_f, mix_hash,
+                                str_hash)
+
+
+@given(st.text(max_size=64))
+@settings(max_examples=100, deadline=None)
+def test_str_hash_range(s):
+    h = str_hash(s)
+    assert 0 <= h < 2 ** 31
+
+
+@given(st.lists(st.integers(0, 2 ** 31 - 1), min_size=1, max_size=64),
+       st.integers(2, 64))
+@settings(max_examples=60, deadline=None)
+def test_f_data_in_range_all_modes(hashes, n):
+    ph = np.asarray(hashes, np.int32)
+    cid = np.arange(len(hashes), dtype=np.int32)
+    client = np.full(len(hashes), 1, np.int32)
+    for mode in LayoutMode:
+        p = LayoutParams(mode=mode, n_nodes=n)
+        d = f_data(p, ph, cid, client)
+        assert ((d >= 0) & (d < n)).all()
+        m = f_meta_f(p, ph, client)
+        limit = p.n_md_servers if mode == LayoutMode.CENTRAL_META else n
+        assert ((m >= 0) & (m < limit)).all()
+
+
+def test_mode1_everything_local():
+    p = LayoutParams(mode=LayoutMode.NODE_LOCAL, n_nodes=16)
+    ph = np.arange(100, dtype=np.int32)
+    cid = np.zeros(100, np.int32)
+    for rank in (0, 7, 15):
+        client = np.full(100, rank, np.int32)
+        assert (f_data(p, ph, cid, client) == rank).all()
+        assert (f_meta_f(p, ph, client) == rank).all()
+        assert (f_meta_d(p, ph, client) == rank).all()
+
+
+def test_mode2_metadata_confined_to_subset():
+    p = LayoutParams(mode=LayoutMode.CENTRAL_META, n_nodes=32,
+                     metadata_server_ratio=0.125)
+    assert p.n_md_servers == 4
+    ph = np.random.RandomState(0).randint(0, 2 ** 30, 1000).astype(np.int32)
+    owners = f_meta_f(p, ph, np.zeros(1000, np.int32))
+    assert set(np.unique(owners)) <= set(range(4))
+    # data still spread over all nodes
+    dests = f_data(p, ph, np.zeros(1000, np.int32), np.zeros(1000, np.int32))
+    assert len(np.unique(dests)) > 16
+
+
+def test_mode3_uniform_spread():
+    p = LayoutParams(mode=LayoutMode.DIST_HASH, n_nodes=16)
+    rng = np.random.RandomState(1)
+    ph = rng.randint(0, 2 ** 30, 20000).astype(np.int32)
+    cid = rng.randint(0, 8, 20000).astype(np.int32)
+    d = f_data(p, ph, cid, np.zeros(20000, np.int32))
+    counts = np.bincount(d, minlength=16)
+    assert counts.min() > 0.7 * counts.mean()
+    assert counts.max() < 1.3 * counts.mean()
+
+
+def test_mode4_write_local_meta_global():
+    p = LayoutParams(mode=LayoutMode.HYBRID, n_nodes=16)
+    ph = np.arange(50, dtype=np.int32)
+    cid = np.zeros(50, np.int32)
+    client = np.full(50, 3, np.int32)
+    assert (f_data(p, ph, cid, client) == 3).all()            # write local
+    # read redirection via data_loc
+    loc = np.full(50, 9, np.int32)
+    assert (f_data(p, ph, cid, client, data_loc=loc) == 9).all()
+    owners = f_meta_f(p, ph, client)
+    assert len(np.unique(owners)) > 4                          # hashed global
+
+
+def test_mix_hash_deterministic_and_avalanchey():
+    a = np.arange(1000, dtype=np.int32)
+    h1 = mix_hash(np, a, a + 1)
+    h2 = mix_hash(np, a, a + 1)
+    assert (h1 == h2).all()
+    # changing chunk id changes most destinations
+    h3 = mix_hash(np, a, a + 2)
+    assert (h1 != h3).mean() > 0.95
+
+
+def test_mode_traits_cover_all_modes():
+    assert set(MODE_TRAITS) == set(LayoutMode)

@@ -1,0 +1,97 @@
+"""Recurrent-cell math: chunkwise == sequential (property), mamba, conv."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models import ssm
+
+RNG = np.random.RandomState(0)
+
+
+@pytest.mark.parametrize("S,chunk", [(64, 64), (128, 32), (96, 16)])
+def test_mlstm_chunkwise_matches_sequential(S, chunk):
+    B, H, D = 2, 2, 8
+    q = jnp.asarray(RNG.randn(B, S, H, D), jnp.float32)
+    k = jnp.asarray(RNG.randn(B, S, H, D), jnp.float32)
+    v = jnp.asarray(RNG.randn(B, S, H, D), jnp.float32)
+    i_pre = jnp.asarray(RNG.randn(B, S, H) * 0.5, jnp.float32)
+    f_pre = jnp.asarray(RNG.randn(B, S, H) + 2.0, jnp.float32)
+    h_seq, st_seq = ssm.mlstm_sequential(q, k, v, i_pre, f_pre)
+    h_chk, st_chk = ssm.mlstm_chunkwise(q, k, v, i_pre, f_pre, chunk=chunk)
+    np.testing.assert_allclose(np.asarray(h_chk), np.asarray(h_seq),
+                               atol=2e-4, rtol=1e-3)
+    for a, b in zip(st_seq, st_chk):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-4,
+                                   rtol=1e-3)
+
+
+@given(st.integers(0, 1000))
+@settings(max_examples=10, deadline=None)
+def test_mlstm_chunkwise_property(seed):
+    r = np.random.RandomState(seed)
+    B, S, H, D = 1, 32, 1, 4
+    args = [jnp.asarray(r.randn(B, S, H, D), jnp.float32) for _ in range(3)]
+    i_pre = jnp.asarray(r.randn(B, S, H), jnp.float32)
+    f_pre = jnp.asarray(r.randn(B, S, H) + 1, jnp.float32)
+    h1, _ = ssm.mlstm_sequential(*args, i_pre, f_pre)
+    h2, _ = ssm.mlstm_chunkwise(*args, i_pre, f_pre, chunk=8)
+    np.testing.assert_allclose(np.asarray(h1), np.asarray(h2), atol=5e-4,
+                               rtol=5e-3)
+
+
+def test_mlstm_decode_continuation():
+    """Running [0:S] then one step == running [0:S+1]."""
+    B, S, H, D = 1, 16, 2, 4
+    mk = lambda *s: jnp.asarray(RNG.randn(*s), jnp.float32)
+    q, k, v = mk(B, S + 1, H, D), mk(B, S + 1, H, D), mk(B, S + 1, H, D)
+    i_pre, f_pre = mk(B, S + 1, H), mk(B, S + 1, H) + 2
+    h_all, _ = ssm.mlstm_sequential(q, k, v, i_pre, f_pre)
+    h_pre, state = ssm.mlstm_sequential(q[:, :S], k[:, :S], v[:, :S],
+                                        i_pre[:, :S], f_pre[:, :S])
+    h_one, _ = ssm.mlstm_step(q[:, S:], k[:, S:], v[:, S:],
+                              i_pre[:, S:], f_pre[:, S:], state)
+    np.testing.assert_allclose(np.asarray(h_one[:, 0]),
+                               np.asarray(h_all[:, S]), atol=1e-5)
+
+
+@pytest.mark.parametrize("S,chunk", [(32, 32), (64, 16)])
+def test_mamba_scan_matches_loop(S, chunk):
+    B, Di, N = 2, 6, 4
+    a = jnp.asarray(RNG.uniform(0.5, 1.0, (B, S, Di, N)), jnp.float32)
+    b = jnp.asarray(RNG.randn(B, S, Di, N) * 0.1, jnp.float32)
+    hs, h_last = ssm.mamba_scan(a, b, chunk=chunk)
+    # reference loop
+    h = np.zeros((B, Di, N), np.float32)
+    ref = []
+    for t in range(S):
+        h = np.asarray(a[:, t]) * h + np.asarray(b[:, t])
+        ref.append(h.copy())
+    ref = np.stack(ref, axis=1)
+    np.testing.assert_allclose(np.asarray(hs), ref, atol=1e-4, rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(h_last), ref[:, -1], atol=1e-4,
+                               rtol=1e-3)
+
+
+def test_causal_conv_continuation():
+    B, S, Di, K = 2, 24, 5, 4
+    x = jnp.asarray(RNG.randn(B, S, Di), jnp.float32)
+    w = jnp.asarray(RNG.randn(K, Di) * 0.3, jnp.float32)
+    b = jnp.zeros((Di,))
+    full, _ = ssm.causal_conv1d(x, w, b)
+    first, state = ssm.causal_conv1d(x[:, :16], w, b)
+    second, _ = ssm.causal_conv1d(x[:, 16:], w, b, conv_state=state)
+    np.testing.assert_allclose(
+        np.asarray(jnp.concatenate([first, second], axis=1)),
+        np.asarray(full), atol=1e-5)
+
+
+def test_slstm_runs_and_is_finite():
+    B, S, H, Dh = 2, 20, 2, 8
+    gates = jnp.asarray(RNG.randn(B, S, H, Dh, 4), jnp.float32)
+    rw = {k: jnp.asarray(RNG.randn(H, Dh, Dh) * 0.1, jnp.float32)
+          for k in ("z", "i", "f", "o")}
+    h, state = ssm.slstm_parallel(gates, rw)
+    assert h.shape == (B, S, H, Dh)
+    assert np.isfinite(np.asarray(h)).all()

