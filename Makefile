@@ -1,0 +1,18 @@
+PY := PYTHONPATH=src python
+
+.PHONY: test test-fast examples bb-dryrun
+
+# full tier-1 suite (~minutes: includes model smoke + subprocess mesh tests)
+test:
+	$(PY) -m pytest -q
+
+# quick pre-commit subset: skips the >30 s `slow`-marked tests
+test-fast:
+	$(PY) -m pytest -q -m "not slow"
+
+examples:
+	$(PY) examples/quickstart.py
+	$(PY) examples/proteus_layout_demo.py
+
+bb-dryrun:
+	$(PY) -m repro.launch.dryrun --bb --out results/dryrun

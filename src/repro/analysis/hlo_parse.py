@@ -40,6 +40,21 @@ _TRAFFIC_OPS = {"fusion", "dot", "convolution", "copy", "dynamic-slice",
                 "custom-call"} | set(COLLECTIVE_OPS)
 
 
+def xla_cost_dict(cost) -> dict:
+    """Normalize ``compiled.cost_analysis()`` across JAX versions.
+
+    Older JAX returned a flat dict; current JAX returns a list with one dict
+    per computation.  Accepts either (or a compiled object) and returns a
+    plain {metric: float} dict, keeping only numeric entries.
+    """
+    if hasattr(cost, "cost_analysis"):
+        cost = cost.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return {k: float(v) for k, v in dict(cost).items()
+            if isinstance(v, (int, float))}
+
+
 def shape_bytes(type_str: str) -> int:
     """Total bytes of all array shapes appearing in a type string."""
     total = 0

@@ -26,10 +26,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.layouts import LayoutMode, LayoutParams, str_hash
+from repro.core.layouts import route_data, str_hash
+from repro.core.policy import LayoutPolicy, as_policy
 from repro.kernels.fletcher.ref import fletcher_ref
 
 CHUNK_WORDS = 1 << 16     # 256 KiB chunks
+CKPT_SCOPE = "ckpt"       # scope prefix of all checkpoint paths
 
 
 def _flatten_state(state) -> Tuple[List[Tuple[str, np.ndarray]], Any]:
@@ -67,44 +69,67 @@ class CheckpointMeta:
 
 
 class BurstBufferStore:
-    """In-memory BB-backed object store: chunks are routed by the selected
-    layout's f_data and kept per-node (dict per node emulating the node-local
-    tier; the mesh engine provides the collective-backed variant)."""
+    """In-memory BB-backed object store: chunks are routed by the policy's
+    per-scope mode via ``route_data`` and kept per-node (dict per node
+    emulating the node-local tier; ``BBClient`` with a mesh backend provides
+    the collective-backed variant).
 
-    def __init__(self, params: LayoutParams):
-        self.params = params
+    Paths enter as strings; scope → mode resolution happens here at the
+    client boundary, so one store can hold e.g. HYBRID-routed checkpoint
+    chunks next to DIST_HASH-routed shared data."""
+
+    def __init__(self, policy):
+        self.policy = as_policy(policy)
         self.nodes: List[Dict[Tuple[int, int], bytes]] = [
-            {} for _ in range(params.n_nodes)]
+            {} for _ in range(self.policy.n_nodes)]
 
-    def put(self, path_hash: int, chunk_id: int, data: bytes,
+    def _dest(self, path: str, chunk_id: int, client: int) -> int:
+        mode = np.full(1, int(self.policy.mode_for_path(path)), np.int32)
+        return int(route_data(mode, self.policy.n_nodes,
+                              np.array([str_hash(path)]),
+                              np.array([chunk_id]), np.array([client]))[0])
+
+    def put(self, path: str, chunk_id: int, data: bytes,
             client: int) -> int:
-        from repro.core.layouts import f_data
-        dest = int(f_data(self.params, np.array([path_hash]),
-                          np.array([chunk_id]), np.array([client]))[0])
-        self.nodes[dest][(path_hash, chunk_id)] = data
+        dest = self._dest(path, chunk_id, client)
+        self.nodes[dest][(str_hash(path), chunk_id)] = data
         return dest
 
-    def get(self, path_hash: int, chunk_id: int, client: int
+    def get(self, path: str, chunk_id: int, client: int
             ) -> Optional[bytes]:
-        from repro.core.layouts import f_data
-        dest = int(f_data(self.params, np.array([path_hash]),
-                          np.array([chunk_id]), np.array([client]))[0])
-        hit = self.nodes[dest].get((path_hash, chunk_id))
+        dest = self._dest(path, chunk_id, client)
+        key = (str_hash(path), chunk_id)
+        hit = self.nodes[dest].get(key)
         if hit is not None:
             return hit
         for node in self.nodes:  # stranded-data fallback (Modes 1/4)
-            if (path_hash, chunk_id) in node:
-                return node[(path_hash, chunk_id)]
+            if key in node:
+                return node[key]
         return None
 
 
 class CheckpointManager:
-    def __init__(self, directory: str, layout: LayoutParams,
-                 async_save: bool = True, keep: int = 3):
+    def __init__(self, directory: str, layout,
+                 async_save: bool = True, keep: int = 3,
+                 scope: Optional[str] = None):
+        """``layout``: a LayoutPolicy (per-scope heterogeneous plan) or a
+        legacy single-mode LayoutParams.
+
+        ``scope`` is the path prefix checkpoint chunks are stored under —
+        it must match the policy scope that should govern checkpoint
+        traffic (e.g. "/bb/ckpt" for a selector-produced plan).  When
+        omitted, a policy scope whose last segment starts with "ckpt" is
+        used if one exists, else the bare "ckpt" prefix (which resolves to
+        the policy default)."""
         self.dir = Path(directory)
         self.dir.mkdir(parents=True, exist_ok=True)
-        self.layout = layout
-        self.store = BurstBufferStore(layout)
+        self.layout = as_policy(layout)
+        if scope is None:
+            cands = [s for s, _ in self.layout.scopes
+                     if s.rstrip("/").rsplit("/", 1)[-1].startswith("ckpt")]
+            scope = cands[0] if cands else CKPT_SCOPE
+        self.scope = scope.rstrip("/")
+        self.store = BurstBufferStore(self.layout)
         self.async_save = async_save
         self.keep = keep
         self._pending: Optional[threading.Thread] = None
@@ -130,9 +155,10 @@ class CheckpointManager:
 
     def _save_sync(self, step: int, host_state) -> None:
         flat, _ = _flatten_state(host_state)
-        meta = CheckpointMeta(step=step, layout_mode=int(self.layout.mode))
+        scope_mode = self.layout.mode_for_path(f"{self.scope}/{step}")
+        meta = CheckpointMeta(step=step, layout_mode=int(scope_mode))
         for key, arr in flat:
-            ph = str_hash(f"ckpt/{step}/{key}")
+            path = f"{self.scope}/{step}/{key}"
             words = np.frombuffer(arr.tobytes(), dtype=np.int32) \
                 if arr.nbytes % 4 == 0 else np.frombuffer(
                     arr.tobytes() + b"\0" * (4 - arr.nbytes % 4), np.int32)
@@ -142,7 +168,7 @@ class CheckpointManager:
             for cid in range(0, max(1, -(-len(words) // CHUNK_WORDS))):
                 seg = words[cid * CHUNK_WORDS:(cid + 1) * CHUNK_WORDS]
                 cs = fletcher_ref(seg)
-                self.store.put(ph, cid, seg.tobytes(), client=cid %
+                self.store.put(path, cid, seg.tobytes(), client=cid %
                                self.layout.n_nodes)
                 meta.chunks.append({"key": key, "chunk_id": cid,
                                     "checksum": [int(cs[0]), int(cs[1])],
@@ -181,8 +207,8 @@ class CheckpointManager:
             info = meta.leaves[key]
             parts = []
             for ch in sorted(by_key[key], key=lambda c: c["chunk_id"]):
-                ph = str_hash(f"ckpt/{step}/{key}")
-                raw = self.store.get(ph, ch["chunk_id"],
+                raw = self.store.get(f"{self.scope}/{step}/{key}",
+                                     ch["chunk_id"],
                                      client=ch["chunk_id"] %
                                      self.layout.n_nodes)
                 if raw is None:

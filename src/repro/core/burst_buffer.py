@@ -8,9 +8,15 @@ leading ``N`` (node) axis — so the identical code runs
 * under ``shard_map`` on a real mesh (production / dry-run): the exchange is
   ``jax.lax.all_to_all`` over the ``node`` axis (see mesh_engine.py).
 
-Request routing goes through the layout triplet (layouts.py): every batch of
-I/O requests is vector-routed, bucketized per destination, exchanged, applied
-to node-local tables, and replies travel the same path back.  Mode semantics:
+Request routing goes through the vectorized routing triplet (layouts.py):
+every batch of I/O requests carries a **per-request mode array** (resolved
+from path scopes by a ``LayoutPolicy`` — see policy.py), is vector-routed by
+masked select over all four mode formulas, bucketized per destination,
+exchanged, applied to node-local tables, and replies travel the same path
+back.  A single exchange round therefore serves a *mixed-mode* batch: the
+Mode-1/4 local fast path, hashed routing, and the hybrid two-phase read are
+mask-combined paths over the same bucketize/exchange plumbing.  Mode
+semantics:
 
 * Mode 1: all routing → self.  Reads of remote data must broadcast-search
   (the paper's "stranded local data" penalty — structurally visible here).
@@ -18,17 +24,28 @@ to node-local tables, and replies travel the same path back.  Mode semantics:
 * Mode 3: everything consistent-hashed (fail-safe baseline).
 * Mode 4: writes land locally; hashed metadata records data_location_rank;
   reads do a two-phase lookup (meta owner → data owner).
+
+The policy is trace-time static, so the engine still specializes in Python
+on ``policy.modes_present()``: a pure Mode-1/4 policy keeps the
+zero-exchange local write path, and policies that cannot contain Mode 4 skip
+the two-phase read entirely.  ``LayoutPolicy.uniform(m)`` thereby reproduces
+the old single-mode engine bit-for-bit (tests/test_policy.py pins this
+against seed-engine digests).
+
+Prefer the ``BBClient`` facade (client.py) over calling these functions
+directly — it owns the mode resolution, the exchange wiring and the
+``node_ids`` plumbing for both the stacked and the shard_map mesh backends.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
-from functools import partial
 from typing import Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.layouts import LayoutMode, LayoutParams, f_data, f_meta_f
+from repro.core.layouts import LayoutMode, route_data, route_meta
+from repro.core.policy import LayoutPolicy, as_policy
 
 EMPTY = jnp.int32(-1)
 
@@ -156,6 +173,30 @@ def _lookup_chunks(state: BBState, keys: jax.Array, valid: jax.Array
     return payload, found
 
 
+def _alloc_meta_slots(mk: jax.Array, new_mask: jax.Array
+                      ) -> Tuple[jax.Array, jax.Array]:
+    """Assign each new entry a distinct EMPTY slot (ascending, per row).
+
+    mk: (N, mcap) key table; new_mask: (N, m) entries to place.
+    Returns (slot (N, m) — ``mcap`` for entries that don't fit, fits (N, m)).
+
+    Slots freed by REMOVE are reused.  With an unfragmented table the empty
+    slots are exactly [count, mcap), so this degenerates to the historical
+    append-cursor allocation bit-for-bit.
+    """
+    N, mcap = mk.shape
+    empty = mk == EMPTY
+    n_empty = empty.sum(axis=1).astype(jnp.int32)                  # (N,)
+    # ascending indices of empty slots first, occupied pushed to the back
+    empty_idx = jnp.argsort(jnp.where(empty, jnp.arange(mcap)[None, :],
+                                      mcap), axis=1).astype(jnp.int32)
+    rank = jnp.cumsum(new_mask.astype(jnp.int32), axis=1) - 1      # (N, m)
+    fits = new_mask & (rank < n_empty[:, None])
+    slot = jnp.take_along_axis(empty_idx,
+                               jnp.clip(rank, 0, mcap - 1), axis=1)
+    return jnp.where(fits, slot, mcap), fits
+
+
 def _meta_apply(state: BBState, op: jax.Array, key: jax.Array,
                 size: jax.Array, loc: jax.Array, valid: jax.Array
                 ) -> Tuple[BBState, jax.Array, jax.Array, jax.Array]:
@@ -174,22 +215,17 @@ def _meta_apply(state: BBState, op: jax.Array, key: jax.Array,
         idx = jnp.argmax(eq, axis=2)
         return fnd, idx
 
-    mk, ms, ml, mc = (state.meta_key, state.meta_size, state.meta_loc,
-                      state.meta_count)
+    mk, ms, ml = state.meta_key, state.meta_size, state.meta_loc
     dropped = state.dropped
 
     # CREATE (skip if exists — idempotent create)
     c_ok = valid & (op == OP_CREATE)
     exists, _ = find(mk, key, c_ok)
     c_new = c_ok & ~exists
-    rank = jnp.cumsum(c_new.astype(jnp.int32), axis=1) - 1
-    slot = mc[:, None] + rank
-    fits = c_new & (slot < mcap)
-    slot = jnp.where(fits, slot, mcap)
+    slot, fits = _alloc_meta_slots(mk, c_new)
     mk = mk.at[rows, slot].set(jnp.where(fits, key, EMPTY), mode="drop")
     ms = ms.at[rows, slot].set(jnp.where(fits, size, 0), mode="drop")
     ml = ml.at[rows, slot].set(jnp.where(fits, loc, EMPTY), mode="drop")
-    mc = mc + fits.sum(axis=1).astype(jnp.int32)
     dropped = dropped + (c_new & ~fits).sum(axis=1).astype(jnp.int32)
 
     # UPDATE (size := max(size, new); loc := new if >= 0).
@@ -198,15 +234,11 @@ def _meta_apply(state: BBState, op: jax.Array, key: jax.Array,
     u_ok = valid & (op == OP_UPDATE)
     fnd_u0, _ = find(mk, key, u_ok)
     missing = u_ok & ~fnd_u0
-    rank_m = jnp.cumsum(missing.astype(jnp.int32), axis=1) - 1
-    slot_m = mc[:, None] + rank_m
-    fits_m = missing & (slot_m < mcap)
-    slot_m = jnp.where(fits_m, slot_m, mcap)
+    slot_m, fits_m = _alloc_meta_slots(mk, missing)
     mk = mk.at[rows, slot_m].set(jnp.where(fits_m, key, EMPTY), mode="drop")
     ms = ms.at[rows, slot_m].set(jnp.where(fits_m, jnp.zeros_like(size), 0),
                                  mode="drop")
     ml = ml.at[rows, slot_m].set(jnp.where(fits_m, loc, EMPTY), mode="drop")
-    mc = mc + fits_m.sum(axis=1).astype(jnp.int32)
     dropped = dropped + (missing & ~fits_m).sum(axis=1).astype(jnp.int32)
 
     fnd_u, idx_u = find(mk, key, u_ok)
@@ -223,10 +255,18 @@ def _meta_apply(state: BBState, op: jax.Array, key: jax.Array,
     r_size = jnp.where(fnd_s, jnp.take_along_axis(ms, idx_s, axis=1), -1)
     r_loc = jnp.where(fnd_s, jnp.take_along_axis(ml, idx_s, axis=1), -1)
 
-    # REMOVE
+    # REMOVE — clear the whole record (key, size, loc), not just the key:
+    # a blanked-key slot with stale size/loc could leak into a later STAT
+    # after re-CREATE, and never reclaiming slots leaked capacity.
     r_ok = valid & (op == OP_REMOVE)
     fnd_r, idx_r = find(mk, key, r_ok)
-    mk = mk.at[rows, jnp.where(fnd_r, idx_r, mcap)].set(EMPTY, mode="drop")
+    rm_slot = jnp.where(fnd_r, idx_r, mcap)
+    mk = mk.at[rows, rm_slot].set(EMPTY, mode="drop")
+    ms = ms.at[rows, rm_slot].set(0, mode="drop")
+    ml = ml.at[rows, rm_slot].set(EMPTY, mode="drop")
+
+    # live-entry count (removal reclaims; allocation reuses freed slots)
+    mc = (mk != EMPTY).sum(axis=1).astype(jnp.int32)
 
     found = (valid & (op == OP_CREATE) & True) | fnd_u | fnd_s | fnd_r
     new_state = BBState(state.data, state.data_keys, state.data_count,
@@ -237,23 +277,50 @@ def _meta_apply(state: BBState, op: jax.Array, key: jax.Array,
 # ---------------------------------------------------------------------------
 # client-visible batched operations
 # ---------------------------------------------------------------------------
-def forward_write(state: BBState, params: LayoutParams, path_hash: jax.Array,
+LOCAL_WRITE_MODES = frozenset({LayoutMode.NODE_LOCAL, LayoutMode.HYBRID})
+
+
+def _client_ranks(L: int, node_ids: Optional[jax.Array]) -> jax.Array:
+    return (jnp.arange(L, dtype=jnp.int32) if node_ids is None
+            else node_ids.astype(jnp.int32))[:, None]
+
+
+def _mode_array(policy: LayoutPolicy, mode: Optional[jax.Array],
+                ref: jax.Array) -> jax.Array:
+    """Per-request mode array; defaults to the policy's uniform default."""
+    if mode is None:
+        return jnp.full(ref.shape, int(policy.default_mode), jnp.int32)
+    return jnp.asarray(mode).astype(jnp.int32)
+
+
+def forward_write(state: BBState, layout, path_hash: jax.Array,
                   chunk_id: jax.Array, payload: jax.Array, valid: jax.Array,
+                  mode: Optional[jax.Array] = None,
                   exchange: Callable = stacked_exchange,
                   node_ids: Optional[jax.Array] = None) -> BBState:
     """Each node writes a batch of chunks. path_hash/chunk_id/valid: (L, q);
     payload: (L, q, w).  L is the local node count (N stacked, 1 under
-    shard_map); ``node_ids`` are the global ranks of the local nodes."""
-    N = params.n_nodes
+    shard_map); ``node_ids`` are the global ranks of the local nodes.
+
+    ``layout`` is a LayoutPolicy (or legacy LayoutParams); ``mode`` is the
+    per-request mode array (policy default when omitted).  Requests of
+    different modes share one bucketize/exchange round.  Mode values MUST
+    be members of ``policy.modes_present()`` — the engine specializes its
+    fast paths on that static set (``BBClient`` enforces this)."""
+    policy = as_policy(layout)
+    N = policy.n_nodes
     L = state.data.shape[0]
-    client = (jnp.arange(L, dtype=jnp.int32) if node_ids is None
-              else node_ids.astype(jnp.int32))[:, None]
-    dest = f_data(params, path_hash, chunk_id, client, xp=jnp)
+    client = _client_ranks(L, node_ids)
+    mode = _mode_array(policy, mode, path_hash)
+    dest = route_data(mode, N, path_hash, chunk_id, client, xp=jnp)
     keys = jnp.stack([path_hash, chunk_id], axis=-1)
-    if params.mode in (LayoutMode.NODE_LOCAL, LayoutMode.HYBRID):
-        # pure local write: no exchange at all (the Mode-1/4 fast path)
+    if policy.modes_present() <= LOCAL_WRITE_MODES:
+        # every possible mode writes locally: no exchange at all
+        # (the Mode-1/4 fast path, decided statically from the policy)
         state = _append_chunks(state, keys, payload, valid)
     else:
+        # mask-combined path: local-mode requests route to self through the
+        # same exchange, hashed modes to their owners — one round for all
         buckets, hit = bucketize(dest, valid, N,
                                  {"keys": keys, "payload": payload})
         rk = exchange(buckets["keys"])            # (L, N_src, q, 2)
@@ -265,50 +332,53 @@ def forward_write(state: BBState, params: LayoutParams, path_hash: jax.Array,
     # metadata: create/update file entries at their owners
     op = jnp.where(chunk_id == 0, OP_CREATE, OP_UPDATE)
     # mode 4 records the data location (writer rank) in the metadata
-    loc = (jnp.broadcast_to(client, dest.shape)
-           if params.mode == LayoutMode.HYBRID else
-           jnp.full_like(dest, -1))
-    state, _, _, _ = meta_op(state, params, op, path_hash,
-                             chunk_id + 1, loc, valid, exchange, node_ids)
+    loc = jnp.where(mode == LayoutMode.HYBRID,
+                    jnp.broadcast_to(client, dest.shape),
+                    jnp.full_like(dest, -1))
+    state, _, _, _ = meta_op(state, policy, op, path_hash,
+                             chunk_id + 1, loc, valid, mode, exchange,
+                             node_ids)
     return state
 
 
-def forward_read(state: BBState, params: LayoutParams, path_hash: jax.Array,
+def forward_read(state: BBState, layout, path_hash: jax.Array,
                  chunk_id: jax.Array, valid: jax.Array,
+                 mode: Optional[jax.Array] = None,
                  exchange: Callable = stacked_exchange,
                  node_ids: Optional[jax.Array] = None
                  ) -> Tuple[jax.Array, jax.Array]:
     """Each node reads a batch of chunks → (payload (L, q, w), found (L, q))."""
-    N = params.n_nodes
+    policy = as_policy(layout)
+    N = policy.n_nodes
     L = state.data.shape[0]
-    q = path_hash.shape[1]
-    client = (jnp.arange(L, dtype=jnp.int32) if node_ids is None
-              else node_ids.astype(jnp.int32))[:, None]
+    client = _client_ranks(L, node_ids)
+    mode = _mode_array(policy, mode, path_hash)
+    present = policy.modes_present()
     keys = jnp.stack([path_hash, chunk_id], axis=-1)
 
-    if params.mode == LayoutMode.HYBRID:
-        # phase 1: metadata lookup for data_location_rank
+    data_loc = None
+    if LayoutMode.HYBRID in present:
+        # phase 1 (hybrid requests only): metadata lookup for
+        # data_location_rank; other modes ride along as invalid slots
         _, found_m, _, loc = meta_op(
-            state, params, jnp.full_like(path_hash, OP_STAT), path_hash,
+            state, policy, jnp.full_like(path_hash, OP_STAT), path_hash,
             jnp.zeros_like(path_hash), jnp.full_like(path_hash, -1),
-            valid, exchange, node_ids)
-        dest = f_data(params, path_hash, chunk_id, client, data_loc=loc,
-                      xp=jnp)
-        dest = jnp.where(found_m & (loc >= 0), dest, client)
-    elif params.mode == LayoutMode.NODE_LOCAL:
-        dest = jnp.broadcast_to(client, path_hash.shape)
-    else:
-        dest = f_data(params, path_hash, chunk_id, client, xp=jnp)
+            valid & (mode == LayoutMode.HYBRID), mode, exchange, node_ids)
+        data_loc = jnp.where(found_m & (loc >= 0), loc,
+                             jnp.broadcast_to(client, path_hash.shape))
+    dest = route_data(mode, N, path_hash, chunk_id, client,
+                      data_loc=data_loc, xp=jnp)
 
     payload, found = _routed_lookup(state, dest, keys, valid, exchange, N)
 
-    if params.mode in (LayoutMode.NODE_LOCAL, LayoutMode.HYBRID):
-        # Stranded-data fallback: broadcast-search all nodes for misses.
-        # Mode 1: any cross-node read is stranded (the paper's structural
-        # penalty).  Mode 4: file-granular data_location_rank cannot resolve
-        # multi-writer shared files; residual chunks are searched (costed as
-        # a redirect penalty in the simulator).
-        miss = valid & ~found
+    if present & LOCAL_WRITE_MODES:
+        # Stranded-data fallback: broadcast-search all nodes for Mode-1/4
+        # misses.  Mode 1: any cross-node read is stranded (the paper's
+        # structural penalty).  Mode 4: file-granular data_location_rank
+        # cannot resolve multi-writer shared files; residual chunks are
+        # searched (costed as a redirect penalty in the simulator).
+        miss = valid & ~found & ((mode == LayoutMode.NODE_LOCAL) |
+                                 (mode == LayoutMode.HYBRID))
         bpay, bfound = _broadcast_lookup(state, keys, miss, exchange, N)
         payload = jnp.where(bfound[..., None], bpay, payload)
         found = found | bfound
@@ -348,20 +418,23 @@ def _broadcast_lookup(state, keys, valid, exchange, N):
     return jnp.where(found_any[..., None], payload, 0), found_any & valid
 
 
-def meta_op(state: BBState, params: LayoutParams, op: jax.Array,
+def meta_op(state: BBState, layout, op: jax.Array,
             path_hash: jax.Array, size: jax.Array, loc: jax.Array,
-            valid: jax.Array, exchange: Callable = stacked_exchange,
+            valid: jax.Array, mode: Optional[jax.Array] = None,
+            exchange: Callable = stacked_exchange,
             node_ids: Optional[jax.Array] = None
             ) -> Tuple[BBState, jax.Array, jax.Array, jax.Array]:
-    """Batched metadata operations routed to their owner nodes.
+    """Batched metadata operations routed to their per-request-mode owners.
 
     Returns (state, found (L,q), size (L,q), loc (L,q))."""
-    N = params.n_nodes
+    policy = as_policy(layout)
+    N = policy.n_nodes
     L = state.data.shape[0]
     q = path_hash.shape[1]
-    client = (jnp.arange(L, dtype=jnp.int32) if node_ids is None
-              else node_ids.astype(jnp.int32))[:, None]
-    owner = f_meta_f(params, path_hash, client, xp=jnp)
+    client = _client_ranks(L, node_ids)
+    mode = _mode_array(policy, mode, path_hash)
+    owner = route_meta(mode, N, policy.n_md_servers, path_hash, client,
+                       xp=jnp)
     buckets, hit = bucketize(
         owner, valid, N,
         {"op": op, "key": path_hash, "size": size, "loc": loc})

@@ -4,7 +4,9 @@ from __future__ import annotations
 from typing import Dict, List
 
 from repro.core.layouts import LayoutMode
-from repro.core.simulator import Hardware, DEFAULT_HW, simulate
+from repro.core.policy import LayoutPolicy
+from repro.core.simulator import (Hardware, DEFAULT_HW, best_scope_modes,
+                                  simulate)
 from repro.core.workloads import Workload, build_workloads
 
 
@@ -13,6 +15,20 @@ def oracle_mode(workload: Workload, hw: Hardware = DEFAULT_HW,
     times = {m: simulate(workload, m, workload.n_nodes, hw, seed).total_s
              for m in LayoutMode}
     return min(times, key=times.get)
+
+
+def oracle_policy(workload: Workload, hw: Hardware = DEFAULT_HW,
+                  seed: int = 0) -> LayoutPolicy:
+    """Per-scope oracle: exhaustive search per scope group → LayoutPolicy.
+
+    For single-scope workloads this degenerates to ``oracle_mode``; for
+    heterogeneous workloads it is the layout a single mode cannot reach.
+    """
+    scope_modes = best_scope_modes(workload, workload.n_nodes, hw, seed)
+    default = (scope_modes.pop("") if "" in scope_modes
+               else oracle_mode(workload, hw, seed))
+    return LayoutPolicy.from_scopes(scope_modes, n_nodes=workload.n_nodes,
+                                    default=default)
 
 
 def oracle_table(n_nodes: int = 32, hw: Hardware = DEFAULT_HW

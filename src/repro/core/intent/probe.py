@@ -143,19 +143,21 @@ def _engine_replay(workload, rs: RuntimeStats, n_nodes: int = 8,
     must match what the data plane performs (checked in tests).
     """
     import jax.numpy as jnp
-    from repro.core import burst_buffer as bb
-    from repro.core.layouts import LayoutMode, LayoutParams
+    from repro.core.client import BBClient, BBRequest
+    from repro.core.layouts import LayoutMode
+    from repro.core.policy import LayoutPolicy
 
-    params = LayoutParams(mode=LayoutMode.DIST_HASH, n_nodes=n_nodes)
-    state = bb.init_state(n_nodes, cap=256, words=8, mcap=256)
+    client = BBClient(LayoutPolicy.uniform(LayoutMode.DIST_HASH, n_nodes),
+                      cap=256, words=8, mcap=256)
     rng = np.random.RandomState(3)
     for ph in workload.phases[:2]:
-        ph_hash = jnp.asarray(rng.randint(1, 1 << 20, (n_nodes, q)), jnp.int32)
-        cid = jnp.asarray(rng.randint(0, 4, (n_nodes, q)), jnp.int32)
-        payload = jnp.asarray(rng.randint(0, 99, (n_nodes, q, 8)), jnp.int32)
-        valid = jnp.ones((n_nodes, q), bool)
+        req = BBRequest(
+            path_hash=jnp.asarray(rng.randint(1, 1 << 20, (n_nodes, q)),
+                                  jnp.int32),
+            chunk_id=jnp.asarray(rng.randint(0, 4, (n_nodes, q)), jnp.int32),
+            payload=jnp.asarray(rng.randint(0, 99, (n_nodes, q, 8)),
+                                jnp.int32))
         if ph.kind in ("bw", "iops") and ph.op != "read":
-            state = bb.forward_write(state, params, ph_hash, cid, payload,
-                                     valid)
+            client.write(req)
         else:
-            bb.forward_read(state, params, ph_hash, cid, valid)
+            client.read(req)

@@ -1,8 +1,15 @@
-"""End-to-end layout selection: extract → probe → reason → decide (§III-A)."""
+"""End-to-end layout selection: extract → probe → reason → decide (§III-A).
+
+With per-scope phases in a workload, the pipeline additionally reasons over
+each scope's phase group and emits a *heterogeneous plan* — e.g. checkpoint
+scope → HYBRID, shared-read scope → DIST_HASH — materialized as a
+``LayoutPolicy`` via ``LayoutDecision.layout_policy``.
+"""
 from __future__ import annotations
 
-from dataclasses import dataclass
-from typing import Optional
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Dict, Optional
 
 from repro.core.intent.context import HybridContext
 from repro.core.intent.probe import run_probe
@@ -11,6 +18,7 @@ from repro.core.intent.reasoner import (Decision, KnowledgeReasoner,
                                         LLMBackend, parse_decision)
 from repro.core.intent.static_extractor import extract_static
 from repro.core.layouts import LayoutMode, LayoutParams
+from repro.core.policy import LayoutPolicy
 from repro.core.workloads import Workload
 
 
@@ -22,16 +30,24 @@ class LayoutDecision:
     decision: Decision
     prompt: str
     context_json: str
+    # heterogeneous plan: scope → mode (empty for single-scope workloads)
+    scope_modes: Dict[str, LayoutMode] = field(default_factory=dict)
+    scope_decisions: Dict[str, Decision] = field(default_factory=dict)
 
     def layout_params(self, n_nodes: int) -> LayoutParams:
+        """Legacy single-mode view (ignores any per-scope plan)."""
         return LayoutParams(mode=self.mode, n_nodes=n_nodes)
 
+    def layout_policy(self, n_nodes: int) -> LayoutPolicy:
+        """The decision as an executable per-scope LayoutPolicy; the
+        whole-job mode is the fail-safe default for unscoped paths."""
+        return LayoutPolicy.from_scopes(self.scope_modes, n_nodes=n_nodes,
+                                        default=self.mode)
 
-def select_layout(workload: Workload, *, use_runtime: bool = True,
-                  use_app_ref: bool = True, use_mode_know: bool = True,
-                  backend: Optional[LLMBackend] = None,
-                  probe_seed: int = 0) -> LayoutDecision:
-    """The full Proteus decision pipeline for one job."""
+
+def _decide_one(workload: Workload, *, use_runtime: bool, use_app_ref: bool,
+                use_mode_know: bool, backend: Optional[LLMBackend],
+                probe_seed: int):
     static = extract_static(workload.source_code, workload.job_script)
     runtime = run_probe(workload, seed=probe_seed) if use_runtime else None
     ctx = HybridContext(app=workload.app, static=static, runtime=runtime,
@@ -44,5 +60,39 @@ def select_layout(workload: Workload, *, use_runtime: bool = True,
         reasoner = KnowledgeReasoner(use_app_ref=use_app_ref,
                                      use_mode_know=use_mode_know)
         decision = reasoner.reason(ctx)
-    return LayoutDecision(workload.name, decision.mode, decision.confidence,
-                          decision, prompt, ctx.to_json())
+    return decision, prompt, ctx
+
+
+def select_layout(workload: Workload, *, use_runtime: bool = True,
+                  use_app_ref: bool = True, use_mode_know: bool = True,
+                  backend: Optional[LLMBackend] = None,
+                  probe_seed: int = 0) -> LayoutDecision:
+    """The full Proteus decision pipeline for one job.
+
+    The whole-job decision is unchanged from the single-mode pipeline; when
+    the workload's phases carry distinct path scopes, each scope's phase
+    group is additionally reasoned over in isolation, yielding the per-scope
+    assignments of the heterogeneous plan.
+    """
+    kw = dict(use_runtime=use_runtime, use_app_ref=use_app_ref,
+              use_mode_know=use_mode_know, backend=backend,
+              probe_seed=probe_seed)
+    decision, prompt, ctx = _decide_one(workload, **kw)
+    result = LayoutDecision(workload.name, decision.mode, decision.confidence,
+                            decision, prompt, ctx.to_json())
+
+    scopes = sorted({p.scope for p in workload.phases if p.scope})
+    if len(scopes) == 1 and all(p.scope == scopes[0]
+                                for p in workload.phases):
+        # one scope covering every phase: the whole-job decision IS the plan
+        result.scope_modes[scopes[0]] = decision.mode
+        result.scope_decisions[scopes[0]] = decision
+    else:
+        for scope in scopes:
+            sub = dataclasses.replace(
+                workload, phases=[p for p in workload.phases
+                                  if p.scope == scope])
+            d, _, _ = _decide_one(sub, **kw)
+            result.scope_modes[scope] = d.mode
+            result.scope_decisions[scope] = d
+    return result

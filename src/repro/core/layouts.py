@@ -74,53 +74,76 @@ class LayoutParams:
 
 
 # ---------------------------------------------------------------------------
-# routing triplet — vectorized over request batches
+# routing triplet — vectorized over request batches AND over modes
+#
+# ``route_*`` take a *per-request mode array* and dispatch by masked select
+# over all four mode formulas (jit-safe: no Python branching on traced
+# values).  This is what lets one engine exchange round serve a mixed-mode
+# batch under a heterogeneous LayoutPolicy.  The per-mode candidate formulas
+# are identical to the pre-policy single-mode branches, so a uniform mode
+# array reproduces the old behavior bit-for-bit.
 # ---------------------------------------------------------------------------
+def route_data(mode, n_nodes, path_hash, chunk_id, client_rank,
+               data_loc=None, xp=np):
+    """Data-placement routing with a per-request ``mode`` array.
+
+    Mode 1 → writer-local; Modes 2/3 → consistent hash of (path, chunk);
+    Mode 4 → ``data_loc`` when given (the metadata-recorded
+    data_location_rank on reads; writers resolve locally:
+    ``pathhost_[path]`` = writer's rank).
+    """
+    mode = xp.asarray(mode)
+    ph = xp.asarray(path_hash)
+    local = xp.broadcast_to(xp.asarray(client_rank),
+                            ph.shape).astype(xp.int32)
+    hashed = (mix_hash(xp, ph, chunk_id) % n_nodes).astype(xp.int32)
+    placed = (local if data_loc is None
+              else xp.asarray(data_loc).astype(xp.int32))
+    uses_hash = ((mode == LayoutMode.CENTRAL_META) |
+                 (mode == LayoutMode.DIST_HASH))
+    return xp.where(mode == LayoutMode.NODE_LOCAL, local,
+                    xp.where(uses_hash, hashed, placed)).astype(xp.int32)
+
+
+def route_meta(mode, n_nodes, n_md_servers, key_hash, client_rank, xp=np):
+    """Metadata-owner routing (file or directory key) per-request mode.
+
+    Mode 1 → client-local; Mode 2 → hash into the md-server subset;
+    Modes 3/4 → hash over all nodes.
+    """
+    mode = xp.asarray(mode)
+    kh = xp.asarray(key_hash).astype(xp.int32)
+    local = xp.broadcast_to(xp.asarray(client_rank),
+                            kh.shape).astype(xp.int32)
+    central = (kh % n_md_servers).astype(xp.int32)
+    hashed = (kh % n_nodes).astype(xp.int32)
+    return xp.where(mode == LayoutMode.NODE_LOCAL, local,
+                    xp.where(mode == LayoutMode.CENTRAL_META, central,
+                             hashed)).astype(xp.int32)
+
+
+def _uniform_mode(params: LayoutParams, ref, xp):
+    return xp.full(xp.asarray(ref).shape, int(params.mode), xp.int32)
+
+
 def f_data(params: LayoutParams, path_hash, chunk_id, client_rank,
            data_loc=None, xp=np):
-    """Data-placement routing: destination node per chunk.
-
-    Mode 4: writers resolve locally (``pathhost_[path]`` = writer's rank);
-    readers pass ``data_loc`` (the metadata-recorded data_location_rank).
-    """
-    m = params.mode
-    N = params.n_nodes
-    if m == LayoutMode.NODE_LOCAL:
-        return xp.broadcast_to(xp.asarray(client_rank),
-                               xp.asarray(path_hash).shape).astype(xp.int32)
-    if m in (LayoutMode.CENTRAL_META, LayoutMode.DIST_HASH):
-        return (mix_hash(xp, path_hash, chunk_id) % N).astype(xp.int32)
-    # HYBRID
-    if data_loc is not None:
-        return xp.asarray(data_loc).astype(xp.int32)
-    return xp.broadcast_to(xp.asarray(client_rank),
-                           xp.asarray(path_hash).shape).astype(xp.int32)
+    """Single-mode data routing (legacy triplet API over ``route_data``)."""
+    return route_data(_uniform_mode(params, path_hash, xp), params.n_nodes,
+                      path_hash, chunk_id, client_rank, data_loc=data_loc,
+                      xp=xp)
 
 
 def f_meta_f(params: LayoutParams, path_hash, client_rank, xp=np):
-    """File-metadata owner node."""
-    m = params.mode
-    if m == LayoutMode.NODE_LOCAL:
-        return xp.broadcast_to(xp.asarray(client_rank),
-                               xp.asarray(path_hash).shape).astype(xp.int32)
-    if m == LayoutMode.CENTRAL_META:
-        return (xp.asarray(path_hash).astype(xp.int32)
-                % params.n_md_servers).astype(xp.int32)
-    return (xp.asarray(path_hash).astype(xp.int32)
-            % params.n_nodes).astype(xp.int32)
+    """File-metadata owner node (legacy triplet API over ``route_meta``)."""
+    return route_meta(_uniform_mode(params, path_hash, xp), params.n_nodes,
+                      params.n_md_servers, path_hash, client_rank, xp=xp)
 
 
 def f_meta_d(params: LayoutParams, dir_hash, client_rank, xp=np):
-    """Directory-metadata owner (scope) node."""
-    m = params.mode
-    if m == LayoutMode.NODE_LOCAL:
-        return xp.broadcast_to(xp.asarray(client_rank),
-                               xp.asarray(dir_hash).shape).astype(xp.int32)
-    if m == LayoutMode.CENTRAL_META:
-        return (xp.asarray(dir_hash).astype(xp.int32)
-                % params.n_md_servers).astype(xp.int32)
-    return (xp.asarray(dir_hash).astype(xp.int32)
-            % params.n_nodes).astype(xp.int32)
+    """Directory-metadata owner (legacy triplet API over ``route_meta``)."""
+    return route_meta(_uniform_mode(params, dir_hash, xp), params.n_nodes,
+                      params.n_md_servers, dir_hash, client_rank, xp=xp)
 
 
 # ---------------------------------------------------------------------------

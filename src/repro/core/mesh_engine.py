@@ -2,22 +2,27 @@
 
 The stacked engine (burst_buffer.py) runs unchanged per-node under
 ``shard_map``: the node axis is sharded 1-per-device, global ranks come from
-``axis_index`` and the exchange becomes ``lax.all_to_all`` over the ``node``
-axis.  This is the production data plane used by the checkpoint manager and
-the BB dry-run.
+``axis_index`` and the exchange becomes ``jax.lax.all_to_all`` over the
+``node`` axis.  This is the production data plane behind the mesh backend of
+``BBClient`` (client.py) — construct ``BBClient(policy, mesh)`` rather than
+calling ``build_mesh_ops`` directly.
+
+Migration note: the pre-policy ``make_mesh_ops(mesh, params)`` entry point is
+gone.  ``build_mesh_ops(mesh, policy)`` returns ops that additionally take
+the per-request ``mode`` array as their second argument, which is how a
+heterogeneous ``LayoutPolicy`` reaches the routing triplet under shard_map.
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import Tuple
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as PS
+from jax.sharding import Mesh, PartitionSpec as PS
 from jax.experimental.shard_map import shard_map
 
 from repro.core import burst_buffer as bb
-from repro.core.layouts import LayoutParams
+from repro.core.policy import LayoutPolicy, as_policy
 
 NODE_AXIS = "node"
 
@@ -35,48 +40,50 @@ def _node_ids(local_n: int) -> jax.Array:
     return base + jnp.arange(local_n, dtype=jnp.int32)
 
 
-def make_mesh_ops(mesh: Mesh, params: LayoutParams):
-    """Returns jitted (write, read, meta) ops bound to a mesh.
+def build_mesh_ops(mesh: Mesh, policy) -> Tuple:
+    """Returns jitted (write, read, meta) ops bound to a mesh + policy.
 
-    State and request arrays are sharded over the ``node`` axis on their
-    leading dim.
+    Each op takes the per-request ``mode`` array right after the state
+    (matching the stacked ops in client.py).  State and request arrays are
+    sharded over the ``node`` axis on their leading dim.
     """
+    policy = as_policy(policy)
     n_dev = mesh.shape[NODE_AXIS]
-    assert params.n_nodes % n_dev == 0
-    local_n = params.n_nodes // n_dev
-    state_spec = PS(NODE_AXIS)
+    assert policy.n_nodes % n_dev == 0
+    local_n = policy.n_nodes // n_dev
     req_spec = PS(NODE_AXIS)
 
-    def _write(state, ph, cid, payload, valid):
-        return bb.forward_write(state, params, ph, cid, payload, valid,
-                                exchange=mesh_exchange,
+    def _write(state, mode, ph, cid, payload, valid):
+        return bb.forward_write(state, policy, ph, cid, payload, valid,
+                                mode=mode, exchange=mesh_exchange,
                                 node_ids=_node_ids(local_n))
 
-    def _read(state, ph, cid, valid):
-        return bb.forward_read(state, params, ph, cid, valid,
-                               exchange=mesh_exchange,
+    def _read(state, mode, ph, cid, valid):
+        return bb.forward_read(state, policy, ph, cid, valid,
+                               mode=mode, exchange=mesh_exchange,
                                node_ids=_node_ids(local_n))
 
-    def _meta(state, op, ph, size, loc, valid):
-        return bb.meta_op(state, params, op, ph, size, loc, valid,
-                          exchange=mesh_exchange,
+    def _meta(state, mode, op, ph, size, loc, valid):
+        return bb.meta_op(state, policy, op, ph, size, loc, valid,
+                          mode=mode, exchange=mesh_exchange,
                           node_ids=_node_ids(local_n))
 
     state_specs = jax.tree_util.tree_map(
-        lambda _: state_spec, bb.init_state(1, 1, 1, 1))
+        lambda _: PS(NODE_AXIS), bb.init_state(1, 1, 1, 1))
 
     write = jax.jit(shard_map(
         _write, mesh=mesh,
-        in_specs=(state_specs, req_spec, req_spec, req_spec, req_spec),
+        in_specs=(state_specs, req_spec, req_spec, req_spec, req_spec,
+                  req_spec),
         out_specs=state_specs, check_rep=False))
     read = jax.jit(shard_map(
         _read, mesh=mesh,
-        in_specs=(state_specs, req_spec, req_spec, req_spec),
+        in_specs=(state_specs, req_spec, req_spec, req_spec, req_spec),
         out_specs=(req_spec, req_spec), check_rep=False))
     meta = jax.jit(shard_map(
         _meta, mesh=mesh,
         in_specs=(state_specs, req_spec, req_spec, req_spec, req_spec,
-                  req_spec),
+                  req_spec, req_spec),
         out_specs=(state_specs, req_spec, req_spec, req_spec),
         check_rep=False))
     return write, read, meta

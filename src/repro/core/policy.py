@@ -1,0 +1,142 @@
+"""Per-scope layout policy: path scopes → ``LayoutMode`` (layout heterogeneity).
+
+The paper's headline contribution is *enabling layout heterogeneity*, yet a
+single ``LayoutMode`` per job forces a compromise whenever one directory wants
+Mode-1/4 locality while another wants Mode-3 hashing.  ``LayoutPolicy`` makes
+the mode a **per-scope property**: a plan maps directory/path-prefix scopes to
+modes, with a default for everything else.  The plan is compiled into a small
+``(scope_hash → mode)`` lookup table so that routing can resolve a *vector*
+of per-request modes with pure integer arithmetic — jit-safe, no Python
+branching on traced values (see ``resolve``).
+
+Two resolution surfaces:
+
+* host side (strings): ``scope_of`` / ``mode_for_path`` do longest-prefix
+  matching over the scope strings at the client boundary, where paths still
+  exist as strings;
+* device side (arrays): ``resolve`` maps precomputed scope-hash arrays to
+  mode arrays via masked select over the compiled table.
+
+``LayoutPolicy.uniform(mode, n_nodes)`` reproduces every single-mode engine
+behavior bit-for-bit (verified in tests/test_policy.py against seed-engine
+digests), so the redesign is a strict superset of the old
+``LayoutParams.mode`` API.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import cached_property
+from typing import Mapping, Optional, Tuple
+
+import numpy as np
+
+from repro.core.layouts import (DEFAULT_MODE, LayoutMode, LayoutParams,
+                                str_hash)
+
+# scope-hash value meaning "no scope matched → default mode"; str_hash is
+# 31-bit non-negative, so -1 can never collide with a real scope hash.
+SCOPE_NONE = -1
+
+
+def _norm_scope(scope: str) -> str:
+    s = scope.rstrip("/")
+    return s if s else "/"
+
+
+@dataclass(frozen=True)
+class LayoutPolicy:
+    """A per-scope layout plan, compiled into a vectorizable lookup table."""
+
+    n_nodes: int
+    default_mode: LayoutMode = DEFAULT_MODE
+    scopes: Tuple[Tuple[str, LayoutMode], ...] = ()
+    metadata_server_ratio: float = 0.125   # Mode 2: |S_md| / N
+    chunk_bytes: int = 1 << 20
+
+    # ---- constructors ------------------------------------------------------
+    @classmethod
+    def uniform(cls, mode: LayoutMode, n_nodes: int, **kw) -> "LayoutPolicy":
+        """Single-mode plan: reproduces the old ``LayoutParams(mode=…)``."""
+        return cls(n_nodes=n_nodes, default_mode=LayoutMode(mode), **kw)
+
+    @classmethod
+    def from_scopes(cls, scopes: Mapping[str, LayoutMode], n_nodes: int,
+                    default: LayoutMode = DEFAULT_MODE, **kw
+                    ) -> "LayoutPolicy":
+        items = tuple(sorted((_norm_scope(s), LayoutMode(m))
+                             for s, m in scopes.items()))
+        return cls(n_nodes=n_nodes, default_mode=LayoutMode(default),
+                   scopes=items, **kw)
+
+    # ---- derived -----------------------------------------------------------
+    @property
+    def n_md_servers(self) -> int:
+        return max(1, int(round(self.n_nodes * self.metadata_server_ratio)))
+
+    @cached_property
+    def table(self) -> Tuple[Tuple[int, int], ...]:
+        """The compiled lookup table: ((scope_hash, mode_int), …)."""
+        return tuple((str_hash(s), int(m)) for s, m in self.scopes)
+
+    def modes_present(self) -> frozenset:
+        """Static set of modes any request under this policy can carry.
+
+        The engine branches on this in *Python* (the policy is trace-time
+        static) to keep the Mode-1/4 local fast path and skip the hybrid
+        two-phase read when those modes cannot occur.
+        """
+        return frozenset({self.default_mode} | {m for _, m in self.scopes})
+
+    # ---- host-side (string) resolution ------------------------------------
+    def scope_of(self, path: str) -> Optional[str]:
+        """Longest scope prefix matching ``path`` (on segment boundaries)."""
+        best = None
+        for s, _ in self.scopes:
+            if path == s or path.startswith(s + "/") or s == "/":
+                if best is None or len(s) > len(best):
+                    best = s
+        return best
+
+    def mode_for_path(self, path: str) -> LayoutMode:
+        s = self.scope_of(path)
+        if s is None:
+            return self.default_mode
+        return dict(self.scopes)[s]
+
+    def scope_hash_of(self, path: str) -> int:
+        """Scope hash for one path — feed arrays of these to ``resolve``."""
+        s = self.scope_of(path)
+        return SCOPE_NONE if s is None else str_hash(s)
+
+    # ---- device-side (array) resolution ------------------------------------
+    def resolve(self, scope_hash, xp=np):
+        """Vectorized (scope_hash array) → (mode array), jit-safe.
+
+        Masked select over the compiled table; unmatched hashes fall back to
+        ``default_mode`` (the paper's fail-safe semantics).
+        """
+        sh = xp.asarray(scope_hash).astype(xp.int32)
+        out = xp.full(sh.shape, int(self.default_mode), xp.int32)
+        for h, m in self.table:
+            out = xp.where(sh == h, xp.asarray(m, xp.int32), out)
+        return out.astype(xp.int32)
+
+    def mode_array(self, shape, xp=np):
+        """Uniform default-mode array of ``shape`` (no scope information)."""
+        return xp.full(shape, int(self.default_mode), xp.int32)
+
+
+def as_policy(layout) -> LayoutPolicy:
+    """Coerce ``LayoutPolicy`` | ``LayoutParams`` | ``LayoutMode`` → policy.
+
+    Migration shim: pre-redesign call sites constructed ``LayoutParams``; the
+    engine and the checkpoint manager accept either.
+    """
+    if isinstance(layout, LayoutPolicy):
+        return layout
+    if isinstance(layout, LayoutParams):
+        return LayoutPolicy(
+            n_nodes=layout.n_nodes, default_mode=layout.mode,
+            metadata_server_ratio=layout.metadata_server_ratio,
+            chunk_bytes=layout.chunk_bytes)
+    raise TypeError(f"cannot interpret {layout!r} as a LayoutPolicy")

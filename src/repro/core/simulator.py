@@ -70,6 +70,7 @@ class Phase:
     meta_mix: Dict[str, float] = field(default_factory=dict)
     written_by: str = "self"  # "self" | "other" | "shared" (who wrote the data)
     cross_rank: float = 0.0   # fraction of stats targeting other ranks' files
+    scope: str = ""           # path scope ("" → the layout's default mode)
 
 
 @dataclass
@@ -318,9 +319,27 @@ def simulate_phase(phase: Phase, mode: LayoutMode, n_nodes: int,
     return _meta_phase(phase, mode, n_nodes, hw, rng)
 
 
-def simulate(workload, mode: LayoutMode, n_nodes: int,
+def _phase_mode(layout, phase: Phase) -> LayoutMode:
+    """Resolve one phase's mode: uniform LayoutMode, a LayoutPolicy, or a
+    {scope: mode} mapping — phases cost against *their scope's* mode."""
+    if isinstance(layout, LayoutMode):
+        return layout
+    if isinstance(layout, dict):
+        from repro.core.layouts import DEFAULT_MODE
+        return LayoutMode(layout.get(phase.scope,
+                                     layout.get("", DEFAULT_MODE)))
+    # LayoutPolicy (duck-typed to avoid importing policy at module scope)
+    if phase.scope:
+        return layout.mode_for_path(phase.scope)
+    return layout.default_mode
+
+
+def simulate(workload, layout, n_nodes: int,
              hw: Hardware = DEFAULT_HW, seed: int = 0) -> WorkloadResult:
-    results = [simulate_phase(p, mode, n_nodes, hw, seed + i)
+    """Model a workload under ``layout``: a single ``LayoutMode``, a
+    per-scope ``LayoutPolicy``, or a ``{scope: mode}`` mapping."""
+    results = [simulate_phase(p, _phase_mode(layout, p), n_nodes, hw,
+                              seed + i)
                for i, p in enumerate(workload.phases)]
     return WorkloadResult(total_s=sum(r.time_s for r in results),
                           phases=results)
@@ -328,7 +347,29 @@ def simulate(workload, mode: LayoutMode, n_nodes: int,
 
 def best_mode(workload, n_nodes: int, hw: Hardware = DEFAULT_HW,
               seed: int = 0) -> LayoutMode:
-    """The oracle: exhaustive execution over all four layouts."""
+    """The oracle: exhaustive execution over all four uniform layouts."""
     times = {m: simulate(workload, m, n_nodes, hw, seed).total_s
              for m in LayoutMode}
     return min(times, key=times.get)
+
+
+def best_scope_modes(workload, n_nodes: int, hw: Hardware = DEFAULT_HW,
+                     seed: int = 0) -> Dict[str, LayoutMode]:
+    """Per-scope oracle: the best mode for each scope's phase group.
+
+    This is the heterogeneity headroom a single-mode layout cannot reach —
+    a LayoutPolicy built from this table is never slower than ``best_mode``.
+    """
+    # seed each phase by its GLOBAL index, exactly as simulate() does, so
+    # the per-scope optimum is taken against the same noise the realized
+    # policy simulation will see (guarantees policy ≤ best uniform mode)
+    by_scope: Dict[str, list] = {}
+    for i, p in enumerate(workload.phases):
+        by_scope.setdefault(p.scope, []).append((i, p))
+    out = {}
+    for scope, phases in by_scope.items():
+        times = {m: sum(simulate_phase(p, m, n_nodes, hw, seed + i).time_s
+                        for i, p in phases)
+                 for m in LayoutMode}
+        out[scope] = min(times, key=times.get)
+    return out

@@ -476,3 +476,33 @@ def workload_by_name(name: str, n_nodes: int = 32) -> Workload:
         if w.name == name:
             return w
     raise KeyError(name)
+
+
+# ---------------------------------------------------------------------------
+# heterogeneous-scope workload (layout-heterogeneity demo + tests)
+# ---------------------------------------------------------------------------
+_HETERO_SRC = _FIO_CKPT_SRC + _FIO_META_SRC
+
+
+def heterogeneous_workload(n_nodes: int = 32) -> Workload:
+    """A job whose directories want *different* layouts: an N-N checkpoint
+    burst under ``/bb/ckpt`` (locality wins) interleaved with a massive
+    shared small-file phase under ``/bb/shared`` (hashing wins).  No single
+    ``LayoutMode`` serves both — the structural mismatch ``LayoutPolicy``
+    exists to eliminate."""
+    gb = 1024.0
+    return Workload(
+        "MIX", "A",
+        "Heterogeneous: N-N checkpoint scope + shared small-file scope",
+        [Phase("bw", op="write", topology="NN", pattern="seq",
+               total_mib=n_nodes * 4 * gb, req_kib=4096, scope="/bb/ckpt"),
+         Phase("meta", n_ops=800_000, dir_pattern="shared",
+               meta_mix={"create": 0.7, "stat": 0.3}, scope="/bb/shared"),
+         Phase("iops", op="read", pattern="random", req_kib=4,
+               n_ops=600_000, written_by="other", scope="/bb/shared"),
+         Phase("bw", op="write", topology="NN", pattern="seq",
+               total_mib=n_nodes * 4 * gb, req_kib=4096, scope="/bb/ckpt")],
+        _HETERO_SRC,
+        _script("MIX", n_nodes, 8,
+                "mix_job --ckpt /bb/ckpt --data /bb/shared"),
+        n_nodes)

@@ -17,7 +17,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint.manager import CheckpointManager
-from repro.core.layouts import LayoutMode, LayoutParams
+from repro.core.layouts import LayoutMode
+from repro.core.policy import LayoutPolicy
 from repro.data.pipeline import TokenPipeline
 from repro.train.failure import FailureLog, FailurePlan
 from repro.train.optimizer import AdamW
@@ -30,9 +31,17 @@ class LoopConfig:
     ckpt_every: int = 5
     ckpt_dir: str = "/tmp/repro_ckpt"
     layout_mode: LayoutMode = LayoutMode.NODE_LOCAL  # N-N checkpoint default
+    # full per-scope plan (e.g. from LayoutDecision.layout_policy);
+    # overrides layout_mode/n_bb_nodes when set
+    layout_policy: Optional[LayoutPolicy] = None
     n_bb_nodes: int = 8
     microbatches: int = 1
     log_every: int = 1
+
+    @property
+    def bb_policy(self) -> LayoutPolicy:
+        return self.layout_policy or LayoutPolicy.uniform(
+            self.layout_mode, self.n_bb_nodes)
 
 
 @dataclass
@@ -53,10 +62,8 @@ def run_training(model, cfg, batch_size: int, seq_len: int,
     params = model.init(jax.random.PRNGKey(seed))
     opt_state = optimizer.init(params)
     pipeline = TokenPipeline(cfg, batch_size, seq_len, seed=seed)
-    ckpt = CheckpointManager(
-        loop_cfg.ckpt_dir,
-        LayoutParams(mode=loop_cfg.layout_mode, n_nodes=loop_cfg.n_bb_nodes),
-        async_save=True)
+    ckpt = CheckpointManager(loop_cfg.ckpt_dir, loop_cfg.bb_policy,
+                             async_save=True)
     train_step = jax.jit(make_train_step(model, optimizer,
                                          microbatches=loop_cfg.microbatches))
 

@@ -1,0 +1,81 @@
+"""Deterministic fallback for ``hypothesis`` when it isn't installed.
+
+The tier-1 suite must collect and run everywhere, including minimal
+containers without the hypothesis package (satellite: no new deps may be
+installed).  This shim implements the tiny subset the tests use —
+``given`` / ``settings`` / ``strategies.integers|lists|text`` — as a
+seeded-random example runner, so the property tests still execute a
+meaningful number of cases instead of being skipped wholesale.
+
+Usage in tests:
+
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ImportError:          # pragma: no cover - env dependent
+        from _minihyp import given, settings, strategies as st
+
+When real hypothesis is available it is preferred automatically by the
+try/except import at each call site.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import string
+
+_MAX_ATTR = "_minihyp_max_examples"
+_DEFAULT_EXAMPLES = 20
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self.draw = draw
+
+
+class strategies:  # mimics `hypothesis.strategies` as imported `as st`
+    @staticmethod
+    def integers(min_value=0, max_value=1 << 30):
+        return _Strategy(lambda r: r.randint(min_value, max_value))
+
+    @staticmethod
+    def lists(elements, min_size=0, max_size=10):
+        return _Strategy(lambda r: [elements.draw(r) for _ in
+                                    range(r.randint(min_size, max_size))])
+
+    @staticmethod
+    def text(alphabet=string.printable, min_size=0, max_size=10):
+        return _Strategy(lambda r: "".join(
+            r.choice(alphabet) for _ in range(r.randint(min_size,
+                                                        max_size))))
+
+
+def settings(max_examples=_DEFAULT_EXAMPLES, deadline=None, **_kw):
+    def deco(fn):
+        setattr(fn, _MAX_ATTR, max_examples)
+        return fn
+    return deco
+
+
+def given(*strats, **kw_strats):
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, _MAX_ATTR,
+                        getattr(fn, _MAX_ATTR, _DEFAULT_EXAMPLES))
+            rng = random.Random(0xB0B)
+            for _ in range(n):
+                drawn = [s.draw(rng) for s in strats]
+                named = {k: s.draw(rng) for k, s in kw_strats.items()}
+                fn(*args, *drawn, **named, **kwargs)
+        # hide the strategy-filled parameters from pytest's fixture
+        # resolution (functools.wraps exposes them via __wrapped__)
+        del wrapper.__wrapped__
+        n_drawn = len(strats) + len(kw_strats)
+        params = [p for p in
+                  inspect.signature(fn).parameters.values()][:-n_drawn] \
+            if n_drawn else list(
+                inspect.signature(fn).parameters.values())
+        wrapper.__signature__ = inspect.Signature(params)
+        return wrapper
+    return deco

@@ -2,7 +2,10 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:          # pragma: no cover - env dependent
+    from _minihyp import given, settings, strategies as st
 
 from repro.core import burst_buffer as bb
 from repro.core.layouts import LayoutMode, LayoutParams
@@ -66,6 +69,43 @@ def test_metadata_lifecycle(mode, rng):
     assert bool(fnd.all())
     state, fnd, _, _ = bb.meta_op(state, params, stat, ph, zeros, neg, valid)
     assert not bool(fnd.any())
+
+
+@pytest.mark.parametrize("mode", list(LayoutMode))
+def test_remove_clears_record_and_reclaims_slot(mode, rng):
+    """Regression: REMOVE must clear size/loc and free the slot — stale
+    metadata must not survive a remove → re-create cycle, and repeated
+    create/remove cycles must not leak capacity."""
+    params = LayoutParams(mode=mode, n_nodes=N)
+    # mcap exactly fits ONE generation of entries even if a mode (e.g. the
+    # Mode-2 md-server subset) concentrates them all on a single node —
+    # leaked slots from earlier remove cycles would therefore overflow
+    state = bb.init_state(N, cap=64, words=W, mcap=N * Q)
+    ph = jnp.asarray(rng.randint(1, 1 << 20, (N, Q)), jnp.int32)
+    valid = jnp.ones((N, Q), bool)
+    zeros = jnp.zeros((N, Q), jnp.int32)
+    neg = jnp.full((N, Q), -1, jnp.int32)
+    create = jnp.full((N, Q), bb.OP_CREATE, jnp.int32)
+    stat = jnp.full((N, Q), bb.OP_STAT, jnp.int32)
+    rm = jnp.full((N, Q), bb.OP_REMOVE, jnp.int32)
+
+    for cycle in range(3):   # > mcap/Q cycles: leaked slots would overflow
+        state, fnd, _, _ = bb.meta_op(state, params, create, ph, zeros + 7,
+                                      zeros + 3, valid)
+        assert bool(fnd.all()), cycle
+        state, fnd, _, _ = bb.meta_op(state, params, rm, ph, zeros, neg,
+                                      valid)
+        assert bool(fnd.all()), cycle
+        assert int(state.meta_count.sum()) == 0, cycle
+    assert int(state.dropped.sum()) == 0      # slots were reclaimed
+    # stale size/loc must be gone: re-create with DIFFERENT size/loc …
+    state, _, _, _ = bb.meta_op(state, params, create, ph, zeros + 2, neg,
+                                valid)
+    state, fnd, size, loc = bb.meta_op(state, params, stat, ph, zeros, neg,
+                                       valid)
+    assert bool(fnd.all())
+    assert (np.asarray(size) == 2).all()      # not the removed entry's 7
+    assert (np.asarray(loc) == -1).all()      # not the removed entry's 3
 
 
 def test_capacity_overflow_counted(rng):

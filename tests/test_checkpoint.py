@@ -70,6 +70,56 @@ def test_elastic_restore_across_layouts():
                                       np.asarray(state["w"]))
 
 
+def test_roundtrip_under_heterogeneous_policy():
+    """A per-scope LayoutPolicy drives the store: checkpoint chunks follow
+    the ckpt scope's mode while the default stays hashed."""
+    from repro.core.policy import LayoutPolicy
+    policy = LayoutPolicy.from_scopes(
+        {"ckpt": LayoutMode.HYBRID}, n_nodes=8,
+        default=LayoutMode.DIST_HASH)
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(d, policy, async_save=False)
+        state = _state()
+        mgr.save(3, state)
+        restored, step = mgr.restore(3, state)
+        assert step == 3
+        np.testing.assert_array_equal(np.asarray(restored["w"]),
+                                      np.asarray(state["w"]))
+        np.testing.assert_array_equal(
+            np.asarray(restored["nested"]["m"]).view(np.uint16),
+            np.asarray(state["nested"]["m"]).view(np.uint16))
+
+
+def test_selector_style_scope_applies_to_checkpoints():
+    """Regression: a selector-produced plan uses workload path scopes like
+    '/bb/ckpt' — the manager must store under that scope (auto-detected)
+    so the plan's checkpoint mode actually governs checkpoint traffic."""
+    import json
+    from repro.core.policy import LayoutPolicy
+    policy = LayoutPolicy.from_scopes(
+        {"/bb/ckpt": LayoutMode.NODE_LOCAL,
+         "/bb/shared": LayoutMode.CENTRAL_META},
+        n_nodes=8, default=LayoutMode.DIST_HASH)
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(d, policy, async_save=False)
+        assert mgr.scope == "/bb/ckpt"
+        state = _state()
+        mgr.save(2, state)
+        meta = json.loads((mgr.dir / "ckpt_2.json").read_text())
+        assert meta["layout_mode"] == int(LayoutMode.NODE_LOCAL)
+        # NODE_LOCAL placement: every chunk sits on its writer's node
+        for node_id, node in enumerate(mgr.store.nodes):
+            for (_, cid) in node:
+                assert cid % 8 == node_id
+        restored, _ = mgr.restore(2, state)
+        np.testing.assert_array_equal(np.asarray(restored["w"]),
+                                      np.asarray(state["w"]))
+        # explicit override wins over auto-detection
+        mgr2 = CheckpointManager(d, policy, async_save=False,
+                                 scope="/bb/shared")
+        assert mgr2.scope == "/bb/shared"
+
+
 def test_gc_keeps_newest():
     with tempfile.TemporaryDirectory() as d:
         mgr = _mgr(d, keep=2)

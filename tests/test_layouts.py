@@ -1,7 +1,10 @@
 """Routing-triplet unit + property tests (hypothesis)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:          # pragma: no cover - env dependent
+    from _minihyp import given, settings, strategies as st
 
 from repro.core.layouts import (LayoutMode, LayoutParams, MODE_TRAITS,
                                 f_data, f_meta_d, f_meta_f, mix_hash,

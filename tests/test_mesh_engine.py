@@ -1,36 +1,39 @@
-"""shard_map engine == stacked engine, on 8 real host devices (subprocess —
-the device count must be set before jax initializes, and the main test
-process must keep seeing 1 device)."""
+"""BBClient mesh backend == stacked backend, on 8 real host devices
+(subprocess — the device count must be set before jax initializes, and the
+main test process must keep seeing 1 device)."""
 import subprocess
 import sys
 import textwrap
+
+import pytest
 
 SCRIPT = textwrap.dedent("""
     import os
     os.environ['XLA_FLAGS'] = '--xla_force_host_platform_device_count=8'
     import sys; sys.path.insert(0, 'src')
     import jax, jax.numpy as jnp, numpy as np
-    from repro.core import burst_buffer as bb
-    from repro.core.layouts import LayoutMode, LayoutParams
-    from repro.core.mesh_engine import make_mesh_ops, make_node_mesh
+    from repro.core.client import BBClient, BBRequest
+    from repro.core.layouts import LayoutMode
+    from repro.core.mesh_engine import make_node_mesh
+    from repro.core.policy import LayoutPolicy
 
     N, q, w = 8, 6, 16
     mesh = make_node_mesh(8)
     rng = np.random.RandomState(0)
     for mode in LayoutMode:
-        params = LayoutParams(mode=mode, n_nodes=N)
-        write, read, meta = make_mesh_ops(mesh, params)
-        state = bb.init_state(N, cap=128, words=w, mcap=128)
+        policy = LayoutPolicy.uniform(mode, N)
+        mc = BBClient(policy, mesh, cap=128, words=w, mcap=128)
+        sc = BBClient(policy, cap=128, words=w, mcap=128)
         ph = jnp.asarray(rng.randint(1, 10000, (N, q)), jnp.int32)
         cid = jnp.asarray(rng.randint(0, 4, (N, q)), jnp.int32)
         payload = jnp.asarray(rng.randint(0, 1000, (N, q, w)), jnp.int32)
-        valid = jnp.ones((N, q), bool)
-        s_mesh = write(state, ph, cid, payload, valid)
-        s_ref = bb.forward_write(state, params, ph, cid, payload, valid)
+        wreq = BBRequest(path_hash=ph, chunk_id=cid, payload=payload)
+        mc.write(wreq)
+        sc.write(wreq)
         perm = rng.permutation(N)
-        out_m, f_m = read(s_mesh, ph[perm], cid[perm], valid)
-        out_r, f_r = bb.forward_read(s_ref, params, ph[perm], cid[perm],
-                                     valid)
+        rreq = BBRequest(path_hash=ph[perm], chunk_id=cid[perm])
+        out_m, f_m = mc.read(rreq)
+        out_r, f_r = sc.read(rreq)
         assert np.asarray(f_m).all() and np.asarray(f_r).all(), mode
         assert np.array_equal(np.asarray(out_m), np.asarray(out_r)), mode
         assert np.array_equal(np.asarray(out_m),
@@ -39,6 +42,7 @@ SCRIPT = textwrap.dedent("""
 """)
 
 
+@pytest.mark.slow
 def test_shard_map_engine_matches_stacked():
     r = subprocess.run([sys.executable, "-c", SCRIPT], capture_output=True,
                        text=True, timeout=600, cwd=".")

@@ -7,6 +7,9 @@ import pytest
 from repro.configs import ARCH_NAMES, all_configs
 from repro.models import build_model
 
+# the per-arch sweep dominates suite wall-clock; `make test-fast` skips it
+pytestmark = pytest.mark.slow
+
 B, S = 2, 32
 KEY = jax.random.PRNGKey(0)
 

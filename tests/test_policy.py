@@ -1,0 +1,281 @@
+"""LayoutPolicy + BBClient: uniform bit-for-bit parity with the seed engine,
+per-scope resolution, and mixed-mode batches (stacked vs shard_map mesh)."""
+import hashlib
+import subprocess
+import sys
+import textwrap
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import burst_buffer as bb
+from repro.core.client import BBClient, BBRequest
+from repro.core.layouts import DEFAULT_MODE, LayoutMode, LayoutParams
+from repro.core.policy import SCOPE_NONE, LayoutPolicy, as_policy
+
+N, Q, W = 8, 5, 8
+
+# SHA-256 digests of the single-mode SEED engine's outputs (captured from
+# commit c73ffe8, pre-LayoutPolicy) for the fixed request trace below.
+# LayoutPolicy.uniform(m) must reproduce these exactly, for every mode.
+SEED_DIGESTS = {
+    1: {"state": "17741f4a74c61103b1dc1d9105261236",
+        "read": "ac274ad4bb81a2c36cd4c35757a67ff2",
+        "meta": "98fada5874a6595dd18224298d7b1e62"},
+    2: {"state": "c074204b6507057ad3fcace426659b41",
+        "read": "ac274ad4bb81a2c36cd4c35757a67ff2",
+        "meta": "98fada5874a6595dd18224298d7b1e62"},
+    3: {"state": "69d5836cb233e683fba71d3927b997d5",
+        "read": "ac274ad4bb81a2c36cd4c35757a67ff2",
+        "meta": "98fada5874a6595dd18224298d7b1e62"},
+    4: {"state": "1b4ea91373f2239492ef274b0e0afabc",
+        "read": "ac274ad4bb81a2c36cd4c35757a67ff2",
+        "meta": "b1c7a050f74a9acd615eead6cb60dbb5"},
+}
+
+
+def _digest(*arrays):
+    h = hashlib.sha256()
+    for a in arrays:
+        h.update(np.ascontiguousarray(np.asarray(a)).tobytes())
+    return h.hexdigest()[:32]
+
+
+def _seed_trace(layout):
+    rng = np.random.RandomState(42)
+    state = bb.init_state(N, cap=64, words=W, mcap=64)
+    ph = jnp.asarray(rng.randint(1, 1 << 20, (N, Q)), jnp.int32)
+    cid = jnp.asarray(rng.randint(0, 4, (N, Q)), jnp.int32)
+    payload = jnp.asarray(rng.randint(0, 9999, (N, Q, W)), jnp.int32)
+    valid = jnp.ones((N, Q), bool)
+    state = bb.forward_write(state, layout, ph, cid, payload, valid)
+    perm = rng.permutation(N)
+    rpay, rfound = bb.forward_read(state, layout, ph[perm], cid[perm], valid)
+    stat = jnp.full((N, Q), bb.OP_STAT, jnp.int32)
+    zeros = jnp.zeros((N, Q), jnp.int32)
+    neg = jnp.full((N, Q), -1, jnp.int32)
+    _, fnd, size, loc = bb.meta_op(state, layout, stat, ph, zeros, neg,
+                                   valid)
+    return {"state": _digest(state.data, state.data_keys, state.data_count,
+                             state.meta_key, state.meta_size, state.meta_loc,
+                             state.meta_count, state.dropped),
+            "read": _digest(rpay, rfound),
+            "meta": _digest(fnd, size, loc)}
+
+
+@pytest.mark.parametrize("mode", list(LayoutMode))
+def test_uniform_policy_matches_seed_engine_bit_for_bit(mode):
+    assert _seed_trace(LayoutPolicy.uniform(mode, N)) == \
+        SEED_DIGESTS[int(mode)]
+
+
+@pytest.mark.parametrize("mode", list(LayoutMode))
+def test_legacy_layout_params_still_match_seed(mode):
+    assert _seed_trace(LayoutParams(mode=mode, n_nodes=N)) == \
+        SEED_DIGESTS[int(mode)]
+
+
+# ---------------------------------------------------------------------------
+# policy resolution
+# ---------------------------------------------------------------------------
+def _hetero_policy(n=N):
+    return LayoutPolicy.from_scopes(
+        {"/bb/ckpt": LayoutMode.HYBRID, "/bb/shared": LayoutMode.DIST_HASH},
+        n_nodes=n, default=LayoutMode.CENTRAL_META)
+
+
+def test_policy_host_side_prefix_resolution():
+    p = _hetero_policy()
+    assert p.mode_for_path("/bb/ckpt/rank3/f0") == LayoutMode.HYBRID
+    assert p.mode_for_path("/bb/ckpt") == LayoutMode.HYBRID
+    assert p.mode_for_path("/bb/shared/x") == LayoutMode.DIST_HASH
+    assert p.mode_for_path("/bb/ckptX") == LayoutMode.CENTRAL_META  # not a
+    assert p.mode_for_path("/elsewhere") == LayoutMode.CENTRAL_META
+    assert p.scope_hash_of("/elsewhere") == SCOPE_NONE
+
+
+def test_policy_longest_prefix_wins():
+    p = LayoutPolicy.from_scopes(
+        {"/bb": LayoutMode.DIST_HASH, "/bb/ckpt": LayoutMode.NODE_LOCAL},
+        n_nodes=N)
+    assert p.mode_for_path("/bb/ckpt/f") == LayoutMode.NODE_LOCAL
+    assert p.mode_for_path("/bb/other") == LayoutMode.DIST_HASH
+
+
+def test_policy_vectorized_resolve_matches_host_resolution():
+    p = _hetero_policy()
+    paths = ["/bb/ckpt/a", "/bb/shared/b", "/unmatched", "/bb/ckpt/c/d"]
+    sh = np.asarray([p.scope_hash_of(x) for x in paths], np.int32)
+    modes = p.resolve(sh)
+    expect = [int(p.mode_for_path(x)) for x in paths]
+    assert modes.tolist() == expect
+    # and under jnp (jit-safe path)
+    assert np.asarray(p.resolve(jnp.asarray(sh), xp=jnp)).tolist() == expect
+
+
+def test_modes_present_and_as_policy():
+    p = _hetero_policy()
+    assert p.modes_present() == {LayoutMode.HYBRID, LayoutMode.DIST_HASH,
+                                 LayoutMode.CENTRAL_META}
+    lp = as_policy(LayoutParams(mode=LayoutMode.NODE_LOCAL, n_nodes=4))
+    assert lp.default_mode == LayoutMode.NODE_LOCAL and lp.n_nodes == 4
+    assert lp.modes_present() == {LayoutMode.NODE_LOCAL}
+    assert LayoutPolicy.uniform(DEFAULT_MODE, 8).n_md_servers == 1
+
+
+# ---------------------------------------------------------------------------
+# mixed-mode batches through one engine call
+# ---------------------------------------------------------------------------
+def _mixed_requests(client, q=6, words=W, seed=0):
+    rng = np.random.RandomState(seed)
+    paths = [[(f"/bb/ckpt/rank{r}/f{j}" if j % 2 == 0 else
+               f"/bb/shared/obj{r * q + j}") for j in range(q)]
+             for r in range(N)]
+    return client.encode(paths,
+                         chunk_id=rng.randint(0, 3, (N, q)),
+                         payload=rng.randint(0, 9999, (N, q, words)))
+
+
+def test_mixed_policy_single_batch_routes_per_scope():
+    """Two scopes, different modes, one interleaved batch, one engine call:
+    every chunk must round-trip, and placement must follow each request's
+    OWN mode (hybrid chunks written locally, hashed chunks spread)."""
+    client = BBClient(_hetero_policy(), cap=128, words=W, mcap=256)
+    req = _mixed_requests(client)
+    modes = np.asarray(client.policy.resolve(np.asarray(req.scope_hash)))
+    assert set(modes.ravel().tolist()) == {int(LayoutMode.HYBRID),
+                                           int(LayoutMode.DIST_HASH)}
+    client.write(req)
+    out, found = client.read(req)
+    assert bool(found.all())
+    assert np.array_equal(np.asarray(out), np.asarray(req.payload))
+    # hybrid (write-local) chunks must sit on their writer's node
+    keys = np.asarray(client.state.data_keys)       # (N, cap, 2)
+    ph = np.asarray(req.path_hash)
+    cid = np.asarray(req.chunk_id)
+    for r in range(N):
+        for j in range(0, 6, 2):                    # the /bb/ckpt columns
+            assert ((keys[r, :, 0] == ph[r, j]) &
+                    (keys[r, :, 1] == cid[r, j])).any(), (r, j)
+
+
+def test_mixed_policy_stat_follows_scope_mode():
+    """Metadata of Mode-2-scoped files lands on the md-server subset while
+    Mode-3-scoped files hash everywhere — in the same batch."""
+    policy = LayoutPolicy.from_scopes(
+        {"/bb/meta2": LayoutMode.CENTRAL_META},
+        n_nodes=N, default=LayoutMode.DIST_HASH)
+    client = BBClient(policy, cap=64, words=W, mcap=512)
+    q = 8
+    paths = [[(f"/bb/meta2/f{r}_{j}" if j % 2 == 0 else f"/bb/other/f{r}_{j}")
+              for j in range(q)] for r in range(N)]
+    req = client.encode(paths)
+    client.create(req)
+    found, size, loc = client.stat(req)
+    assert bool(np.asarray(found).all())
+    # central-meta entries must all live within the md-server subset
+    keys = np.asarray(client.state.meta_key)
+    n_md = policy.n_md_servers
+    ph = np.asarray(req.path_hash)
+    central = ph[:, 0::2].ravel()
+    for k in central:
+        owners = np.nonzero((keys == k).any(axis=1))[0]
+        assert len(owners) == 1 and owners[0] < n_md, (k, owners)
+
+
+def test_explicit_mode_outside_policy_rejected():
+    """An explicit req.mode outside policy.modes_present() must be refused:
+    the engine specializes fast paths on the policy's static mode set, so
+    silently accepting it would mis-route (regression for a review
+    finding: NODE_LOCAL policy + DIST_HASH override lost chunks)."""
+    client = BBClient(LayoutPolicy.uniform(LayoutMode.NODE_LOCAL, 4),
+                      cap=16, words=W, mcap=16)
+    req = BBRequest(path_hash=jnp.ones((4, 3), jnp.int32),
+                    chunk_id=jnp.zeros((4, 3), jnp.int32),
+                    payload=jnp.ones((4, 3, W), jnp.int32),
+                    mode=jnp.full((4, 3), int(LayoutMode.DIST_HASH),
+                                  jnp.int32))
+    with pytest.raises(ValueError, match="modes_present"):
+        client.write(req)
+    # an in-policy override is fine
+    req2 = dataclasses_replace_mode(req, LayoutMode.NODE_LOCAL)
+    client.write(req2)
+    out, found = client.read(req2)
+    assert bool(np.asarray(found).all())
+
+
+def dataclasses_replace_mode(req, mode):
+    import dataclasses
+    return dataclasses.replace(
+        req, mode=jnp.full(req.path_hash.shape, int(mode), jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# heterogeneous plan end-to-end: selector → policy → simulator
+# ---------------------------------------------------------------------------
+def test_selector_emits_heterogeneous_plan():
+    from repro.core.intent.selector import select_layout
+    from repro.core.simulator import simulate
+    from repro.core.workloads import heterogeneous_workload
+
+    w = heterogeneous_workload(32)
+    d = select_layout(w)
+    assert set(d.scope_modes) == {"/bb/ckpt", "/bb/shared"}
+    assert len(set(d.scope_modes.values())) == 2     # genuinely mixed
+    policy = d.layout_policy(w.n_nodes)
+    assert policy.mode_for_path("/bb/ckpt/rank0/f1") == \
+        d.scope_modes["/bb/ckpt"]
+    # phases cost against their scope's mode: the plan must beat every
+    # uniform layout on this workload (the heterogeneity headroom)
+    t_policy = simulate(w, policy, w.n_nodes).total_s
+    t_uniform = min(simulate(w, m, w.n_nodes).total_s for m in LayoutMode)
+    assert t_policy < t_uniform
+
+
+def test_oracle_policy_never_worse_than_best_mode():
+    from repro.core.intent.oracle import oracle_mode, oracle_policy
+    from repro.core.simulator import simulate
+    from repro.core.workloads import heterogeneous_workload, workload_by_name
+
+    for w in (heterogeneous_workload(32), workload_by_name("IOR-A")):
+        t_pol = simulate(w, oracle_policy(w), w.n_nodes).total_s
+        t_uni = simulate(w, oracle_mode(w), w.n_nodes).total_s
+        assert t_pol <= t_uni * 1.0001, w.name
+
+
+MESH_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ['XLA_FLAGS'] = '--xla_force_host_platform_device_count=4'
+    import sys; sys.path.insert(0, 'src'); sys.path.insert(0, 'tests')
+    import numpy as np
+    from test_policy import BBClient, _hetero_policy, _mixed_requests, W
+    from repro.core.mesh_engine import make_node_mesh
+
+    policy = _hetero_policy(n=4)
+    globals()['N'] = 4
+    import test_policy; test_policy.N = 4
+    mesh = make_node_mesh(4)
+    mc = BBClient(policy, mesh, cap=128, words=W, mcap=256)
+    sc = BBClient(policy, cap=128, words=W, mcap=256)
+    req = _mixed_requests(mc)
+    mc.write(req); sc.write(req)
+    out_m, f_m = mc.read(req)
+    out_s, f_s = sc.read(req)
+    assert np.asarray(f_m).all() and np.asarray(f_s).all()
+    assert np.array_equal(np.asarray(out_m), np.asarray(out_s))
+    assert np.array_equal(np.asarray(out_m), np.asarray(req.payload))
+    # full state parity, table for table
+    for a, b in zip(mc.state.tree_flatten()[0], sc.state.tree_flatten()[0]):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+    print('POLICY_MESH_OK')
+""")
+
+
+@pytest.mark.slow
+def test_mixed_policy_stacked_vs_mesh_parity():
+    """The SAME heterogeneous batch on a 4-device shard_map mesh backend
+    must produce identical payloads AND identical node tables."""
+    r = subprocess.run([sys.executable, "-c", MESH_SCRIPT],
+                       capture_output=True, text=True, timeout=600, cwd=".")
+    assert "POLICY_MESH_OK" in r.stdout, r.stdout + r.stderr

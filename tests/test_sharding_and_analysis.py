@@ -4,7 +4,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.analysis.hlo_parse import analyze_hlo, shape_bytes
+from repro.analysis.hlo_parse import analyze_hlo, shape_bytes, xla_cost_dict
 from repro.configs import ALL_SHAPES, all_configs
 from repro.distributed.sharding import MeshContext, default_rules
 
@@ -67,8 +67,15 @@ def test_analyzer_scales_while_loops():
     expected = 10 * 2 * 64 * 64 * 64
     assert abs(c.flops - expected) / expected < 0.05
     # XLA's own estimate counts the body once — ours must be ~10× larger
-    xla = comp.cost_analysis()["flops"]
+    # (cost_analysis returns dict or [dict] depending on JAX version)
+    xla = xla_cost_dict(comp.cost_analysis())["flops"]
     assert c.flops > 5 * xla
+
+
+def test_xla_cost_dict_normalizes_both_shapes():
+    assert xla_cost_dict({"flops": 7, "note": "x"}) == {"flops": 7.0}
+    assert xla_cost_dict([{"flops": 7.0}]) == {"flops": 7.0}
+    assert xla_cost_dict([]) == {}
 
 
 def test_analyzer_counts_collectives(tmp_path):

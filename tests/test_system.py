@@ -8,6 +8,7 @@ import tempfile
 
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.core import burst_buffer as bb
 from repro.core.intent.oracle import oracle_mode
@@ -54,6 +55,7 @@ def test_e2e_proteus_never_catastrophic():
         assert t_sel <= 1.30 * t_orc, (w.name, d.mode)
 
 
+@pytest.mark.slow
 def test_e2e_training_with_proteus_checkpointing():
     from repro.configs import all_configs
     from repro.models import build_model

@@ -70,6 +70,7 @@ def test_compression_error_feedback_unbiased(comp):
     assert err < 0.12 * scale + 0.5     # residual bounded → unbiased sum
 
 
+@pytest.mark.slow
 def test_fault_tolerant_loop_with_injected_failures():
     cfg = all_configs()["gemma3-1b"].reduced()
     model = build_model(cfg)
@@ -87,6 +88,7 @@ def test_fault_tolerant_loop_with_injected_failures():
     assert res.losses[0] > res.losses[-1]
 
 
+@pytest.mark.slow
 def test_microbatched_grad_accum_matches_full_batch():
     from repro.train.train_step import make_train_step
     cfg = all_configs()["gemma3-1b"].reduced()
