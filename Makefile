@@ -1,6 +1,6 @@
 PY := PYTHONPATH=src python
 
-.PHONY: test test-fast examples bb-dryrun
+.PHONY: test test-fast examples bb-dryrun bench
 
 # full tier-1 suite (~minutes: includes model smoke + subprocess mesh tests)
 test:
@@ -16,3 +16,9 @@ examples:
 
 bb-dryrun:
 	$(PY) -m repro.launch.dryrun --bb --out results/dryrun
+
+# exchange data-plane perf: dense vs compacted sweep + encode/kernel
+# microbenches → machine-readable BENCH_pr2.json (perf trajectory seed).
+# The full sweep lives in the `slow`-marked test_bench_quick_sweep.
+bench:
+	$(PY) benchmarks/exchange_bench.py --quick --out BENCH_pr2.json

@@ -1,0 +1,246 @@
+"""Exchange data-plane benchmark: dense O(N²·q) bucketize vs the compacted
+sort/gather plan, swept over nodes × batch × words.
+
+Each cell runs the REAL stacked engine (both backends share one request
+trace: a mixed-mode batch, half Mode-2 central-metadata and half Mode-3
+hashed, exercising write + read + stat) and reports measured wall time per
+call next to the modeled exchange footprint from
+``burst_buffer.exchange_footprint``.  Results go to a machine-readable JSON
+(``BENCH_pr2.json``) so later PRs can diff the perf trajectory.
+
+Also includes the client-boundary microbenches: memoized vs uncached path
+hashing in ``BBClient.encode``, and interpret-mode latencies of the routing
+/ histogram / pack kernels.
+
+Usage:
+    PYTHONPATH=src python benchmarks/exchange_bench.py --quick
+    PYTHONPATH=src python benchmarks/exchange_bench.py \
+        --nodes 8,16,32,64 --batch 32,64,128 --words 8,16
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from typing import Dict, List
+
+import numpy as np
+
+
+def _block(x):
+    import jax
+    jax.block_until_ready(jax.tree_util.tree_leaves(x))
+
+
+def _time_us(fn, *args, iters: int) -> float:
+    _block(fn(*args))                                  # compile
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    _block(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def _mixed_policy(n_nodes: int):
+    from repro.core.layouts import LayoutMode
+    from repro.core.policy import LayoutPolicy
+    return LayoutPolicy.from_scopes(
+        {"/bb/meta2": LayoutMode.CENTRAL_META}, n_nodes=n_nodes,
+        default=LayoutMode.DIST_HASH)
+
+
+def bench_cell(n: int, q: int, w: int, kind: str, iters: int,
+               capacity: float) -> Dict:
+    import jax.numpy as jnp
+    from repro.core import burst_buffer as bb
+    from repro.core.client import BBClient
+    from repro.core.layouts import LayoutMode
+
+    policy = _mixed_policy(n)
+    kw = {}
+    if kind == "compacted":
+        # this workload uses a distinct path per request, so metadata
+        # hash-spreads over its owners and the explicit budget below is
+        # safe; the engine's AUTO meta budget is lossless (B=q) because
+        # per-file chunk batches concentrate on one owner structurally
+        kw["meta_budget"] = bb._auto_budget(q, policy.n_md_servers,
+                                            capacity)
+    client = BBClient(policy, cap=max(256, 4 * q), words=w,
+                      mcap=max(256, 4 * q), exchange=kind,
+                      capacity=capacity, **kw)
+    rng = np.random.RandomState(0)
+    ph = jnp.asarray(rng.randint(1, 1 << 20, (n, q)), jnp.int32)
+    cid = jnp.asarray(rng.randint(0, 8, (n, q)), jnp.int32)
+    payload = jnp.asarray(rng.randint(0, 9999, (n, q, w)), jnp.int32)
+    valid = jnp.ones((n, q), bool)
+    mode = jnp.asarray(rng.choice([int(LayoutMode.CENTRAL_META),
+                                   int(LayoutMode.DIST_HASH)], (n, q)),
+                       jnp.int32)
+    op = jnp.full((n, q), bb.OP_STAT, jnp.int32)
+    zeros = jnp.zeros((n, q), jnp.int32)
+    neg = jnp.full((n, q), -1, jnp.int32)
+
+    write_us = _time_us(client._write, client.state, mode, ph, cid, payload,
+                        valid, iters=iters)
+    client.state = client._write(client.state, mode, ph, cid, payload, valid)
+    read_us = _time_us(client._read, client.state, mode, ph, cid, valid,
+                       iters=iters)
+    stat_us = _time_us(client._meta, client.state, mode, op, ph, zeros, neg,
+                       valid, iters=iters)
+    foot = bb.exchange_footprint(policy, q, w, client.exchange_config)
+    return {
+        "backend": kind, "n_nodes": n, "batch": q, "words": w,
+        "data_budget": foot["data_budget"],
+        "meta_budget": foot["meta_budget"],
+        "write_us": round(write_us, 1), "read_us": round(read_us, 1),
+        "stat_us": round(stat_us, 1),
+        "write_exchange_bytes": 4 * foot["write_elems"],
+        "read_exchange_bytes": 4 * foot["read_elems"],
+        "chunks_per_s_write": round(n * q / (write_us / 1e6)),
+    }
+
+
+def encode_bench(n_rows: int = 64, row_len: int = 32,
+                 repeats: int = 5) -> Dict:
+    """Memoized encode vs the raw per-path hashing loop it replaced."""
+    from repro.core.layouts import str_hash
+
+    policy = _mixed_policy(8)
+    paths = [[f"/bb/meta2/dir{i}/file{j}" for j in range(row_len)]
+             for i in range(n_rows)]
+    n_paths = n_rows * row_len
+
+    from repro.core.client import BBClient
+    client = BBClient(policy, cap=16, words=4, mcap=16)
+    t0 = time.perf_counter()
+    client.encode(paths)
+    cold_us = (time.perf_counter() - t0) * 1e6
+    warm = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        client.encode(paths)
+        warm.append((time.perf_counter() - t0) * 1e6)
+    t0 = time.perf_counter()
+    for row in paths:                                   # the old hot loop
+        for p in row:
+            str_hash(p)
+            policy.scope_hash_of(p)
+    uncached_us = (time.perf_counter() - t0) * 1e6
+    warm_us = min(warm)
+    return {"n_paths": n_paths, "cold_us": round(cold_us, 1),
+            "warm_us": round(warm_us, 1),
+            "uncached_loop_us": round(uncached_us, 1),
+            "steady_state_speedup": round(uncached_us / warm_us, 2)}
+
+
+def kernel_bench(iters: int = 5) -> List[Dict]:
+    """Interpret-mode kernel latencies (correctness-path cost, off-TPU)."""
+    import jax.numpy as jnp
+    from repro.kernels.chunk_pack.ops import gather_rows, pack_chunks
+    from repro.kernels.chunk_router.ops import dest_histogram, route_chunks
+
+    rng = np.random.RandomState(0)
+    n = 4096
+    ph = jnp.asarray(rng.randint(1, 1 << 30, n), jnp.int32)
+    cid = jnp.asarray(rng.randint(0, 64, n), jnp.int32)
+    cl = jnp.zeros(n, jnp.int32)
+    payload = jnp.asarray(rng.randint(0, 9999, (n, 16)), jnp.int32)
+    idx = jnp.asarray(rng.randint(-1, n, n), jnp.int32)
+    dest = jnp.asarray(rng.randint(-1, 64, n), jnp.int32)
+    rows = []
+    for name, fn, args in [
+        ("chunk_router.4096", route_chunks, (ph, cid, cl)),
+        ("dest_histogram.4096x64", dest_histogram, (dest,)),
+        ("chunk_pack.4096x16", pack_chunks, (payload, idx)),
+        ("gather_rows.4096x16", gather_rows, (payload, idx)),
+    ]:
+        kw = ({"mode": 3, "n_nodes": 64} if "router" in name
+              else {"n_bins": 64} if "histogram" in name else {})
+        us = _time_us(lambda: fn(*args, **kw), iters=iters)
+        rows.append({"kernel": name, "us_per_call": round(us, 1)})
+    return rows
+
+
+def run(nodes: List[int], batches: List[int], words: List[int],
+        iters: int, capacity: float, out: str, skip_micro: bool = False
+        ) -> Dict:
+    rows = []
+    for n in nodes:
+        for q in batches:
+            for w in words:
+                for kind in ("dense", "compacted"):
+                    row = bench_cell(n, q, w, kind, iters, capacity)
+                    rows.append(row)
+                    print(f"{kind:9s} N={n:3d} q={q:4d} w={w:3d} "
+                          f"write={row['write_us']:9.1f}us "
+                          f"read={row['read_us']:9.1f}us "
+                          f"xbytes={row['write_exchange_bytes']}")
+    # summary at the largest swept node count
+    n_max = max(nodes)
+    summary = {}
+    for q in batches:
+        for w in words:
+            d = next(r for r in rows if r["backend"] == "dense" and
+                     r["n_nodes"] == n_max and r["batch"] == q and
+                     r["words"] == w)
+            c = next(r for r in rows if r["backend"] == "compacted" and
+                     r["n_nodes"] == n_max and r["batch"] == q and
+                     r["words"] == w)
+            d_round = d["write_us"] + d["read_us"] + d["stat_us"]
+            c_round = c["write_us"] + c["read_us"] + c["stat_us"]
+            summary[f"N{n_max}_q{q}_w{w}"] = {
+                "write_speedup": round(d["write_us"] / c["write_us"], 2),
+                "read_speedup": round(d["read_us"] / c["read_us"], 2),
+                "stat_speedup": round(d["stat_us"] / c["stat_us"], 2),
+                "round_speedup": round(d_round / c_round, 2),
+                "exchange_bytes_ratio": round(
+                    d["write_exchange_bytes"] / c["write_exchange_bytes"],
+                    2),
+            }
+    result = {
+        "meta": {
+            "bench": "exchange_bench", "pr": 2,
+            "workload": "mixed-mode (Mode-2 central-meta + Mode-3 hashed) "
+                        "write/read/stat, stacked backend",
+            "capacity": capacity, "iters": iters,
+            "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
+        },
+        "rows": rows,
+        "summary": summary,
+    }
+    if not skip_micro:
+        result["encode"] = encode_bench()
+        result["kernels"] = kernel_bench()
+    with open(out, "w") as f:
+        json.dump(result, f, indent=1)
+    print(f"wrote {out}")
+    for k, v in summary.items():
+        print(f"summary {k}: {v}")
+    return result
+
+
+def main(argv=None) -> Dict:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="small sweep (8/32 nodes, q=64, w=16)")
+    ap.add_argument("--nodes", default="8,16,32,64")
+    ap.add_argument("--batch", default="32,64,128")
+    ap.add_argument("--words", default="8,16")
+    ap.add_argument("--iters", type=int, default=10)
+    ap.add_argument("--capacity", type=float, default=2.0)
+    ap.add_argument("--out", default="BENCH_pr2.json")
+    ap.add_argument("--skip-micro", action="store_true")
+    args = ap.parse_args(argv)
+    if args.quick:
+        nodes, batches, words, iters = [8, 32], [64], [16], 10
+    else:
+        nodes = [int(x) for x in args.nodes.split(",")]
+        batches = [int(x) for x in args.batch.split(",")]
+        words = [int(x) for x in args.words.split(",")]
+        iters = args.iters
+    return run(nodes, batches, words, iters, args.capacity, args.out,
+               skip_micro=args.skip_micro)
+
+
+if __name__ == "__main__":
+    main()

@@ -13,7 +13,12 @@ every batch of I/O requests carries a **per-request mode array** (resolved
 from path scopes by a ``LayoutPolicy`` — see policy.py), is vector-routed by
 masked select over all four mode formulas, bucketized per destination,
 exchanged, applied to node-local tables, and replies travel the same path
-back.  A single exchange round therefore serves a *mixed-mode* batch: the
+back.  Two exchange data planes share that structure (``ExchangeConfig``):
+the **dense** bucketize broadcast (every request materialized for every
+destination — O(N²·q) exchange volume, kept as the bit-for-bit parity
+oracle) and the **compacted** sort/gather plan (destination-ordered argsort
++ budgeted Pallas gather — O(N·q), budget overflow dropped and accounted;
+see the compacted-exchange section below and DESIGN.md §7).  A single exchange round therefore serves a *mixed-mode* batch: the
 Mode-1/4 local fast path, hashed routing, and the hybrid two-phase read are
 mask-combined paths over the same bucketize/exchange plumbing.  Mode
 semantics:
@@ -38,6 +43,7 @@ directly — it owns the mode resolution, the exchange wiring and the
 """
 from __future__ import annotations
 
+import math
 from dataclasses import dataclass
 from typing import Callable, Dict, Optional, Tuple
 
@@ -46,6 +52,8 @@ import jax.numpy as jnp
 
 from repro.core.layouts import LayoutMode, route_data, route_meta
 from repro.core.policy import LayoutPolicy, as_policy
+from repro.kernels.chunk_pack.ops import gather_rows
+from repro.kernels.chunk_router.ops import histogram_rows
 
 EMPTY = jnp.int32(-1)
 
@@ -129,6 +137,221 @@ def collect_replies(dest: jax.Array, reply_buckets: jax.Array,
     extra = (1,) * (reply_buckets.ndim - 3)
     return jnp.sum(jnp.where(hit.reshape(hit.shape + extra),
                              reply_buckets, 0), axis=1)
+
+
+# ---------------------------------------------------------------------------
+# compacted exchange: sort-based routing + budgeted gather (no N² broadcast)
+#
+# ``bucketize`` materializes every request for every destination — a dense
+# (L, n_nodes, q, ...) masked broadcast whose exchange traffic grows as
+# O(N²·q).  The compacted plan instead argsorts each node's requests into
+# destination-contiguous order, gathers payloads into per-destination
+# budgeted send buffers (the chunk_pack Pallas kernel on TPU), exchanges
+# only (L, n_nodes, B, ...) with B ≈ capacity·q/N, and scatters replies
+# back through the inverse permutation.  Requests beyond a destination's
+# budget are *dropped and accounted* (the ``dropped`` counter / found=False
+# on reads) — the same overflow semantics as table capacity.  With B = q
+# the compacted path is bit-for-bit the dense path (same receive order:
+# source-major, then original slot order), which is what the parity suite
+# pins.
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class ExchangeConfig:
+    """Static data-plane exchange selection (trace-time, hashable).
+
+    kind: "dense" (PR-1 bucketize broadcast, the parity oracle) or
+    "compacted".  ``budget``/``meta_budget`` fix the per-destination slot
+    counts; ``None`` auto-sizes them: data gets ``capacity·q/N`` (rounded
+    up to a lane-friendly multiple of 8) under hash-spread modes and the
+    lossless ``B = q`` when a mode can structurally concentrate a batch on
+    one node (local writes, hybrid reads); metadata auto is always
+    lossless — see ``meta_budget``.
+    """
+
+    kind: str = "dense"
+    budget: Optional[int] = None
+    meta_budget: Optional[int] = None
+    capacity: float = 2.0
+
+    def __post_init__(self):
+        if self.kind not in ("dense", "compacted"):
+            raise ValueError(f"unknown exchange kind {self.kind!r}; "
+                             "pass 'dense' or 'compacted'")
+
+
+DENSE = ExchangeConfig("dense")
+COMPACTED = ExchangeConfig("compacted")
+
+
+def _auto_budget(q: int, bins: int, capacity: float) -> int:
+    b = int(math.ceil(capacity * q / max(1, bins)))
+    return min(q, max(8, -(-b // 8) * 8))
+
+
+def data_budget(policy: LayoutPolicy, q: int, config: ExchangeConfig) -> int:
+    """Per-destination slot budget for the data exchange (static)."""
+    if config.budget is not None:
+        return max(1, min(q, config.budget))
+    if policy.modes_present() & LOCAL_WRITE_MODES:
+        # local writes / hybrid data_loc reads can send a whole batch to one
+        # node — concentration is structural, not hash-random, so stay exact
+        return q
+    return _auto_budget(q, policy.n_nodes, config.capacity)
+
+
+def meta_budget(policy: LayoutPolicy, q: int, config: ExchangeConfig) -> int:
+    """Per-destination slot budget for the metadata exchange (static).
+
+    Auto-sizing is lossless (``B = q``): metadata routes on ``path_hash``
+    alone, so a batch of chunks of ONE file — the canonical checkpoint
+    write — concentrates every op on a single owner no matter how many
+    nodes exist.  That is structural concentration, not hash spread, and
+    under-budgeting it silently corrupts stat() sizes.  Workloads with
+    per-request-distinct paths can opt into hash-spread sizing via an
+    explicit ``meta_budget`` (see benchmarks/exchange_bench.py).
+    """
+    if config.meta_budget is not None:
+        return max(1, min(q, config.meta_budget))
+    if config.budget is not None:
+        return max(1, min(q, config.budget))
+    return q
+
+
+def _compact_plan(dest: jax.Array, valid: jax.Array, n_nodes: int,
+                  budget: int) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Sort-based routing plan for one exchange round.
+
+    dest/valid: (L, q).  Returns
+
+    * send_idx (L, n_nodes, budget) int32 — request slot feeding each send
+      buffer position, -1 for empty budget slots;
+    * reply_idx (L, q) int32 — position of each request's reply in the
+      flattened (n_nodes·budget) reply buffer, -1 for invalid/overflowed
+      requests;
+    * overflow (L,) int32 — valid requests beyond their destination budget.
+
+    The stable argsort keeps requests of one (src, dst) pair in original
+    slot order, so the receiver sees the same source-major arrival order as
+    the dense path and table append order is preserved bit-for-bit.
+    """
+    L, q = dest.shape
+    d = jnp.where(valid, dest, n_nodes).astype(jnp.int32)
+    order = jnp.argsort(d, axis=1).astype(jnp.int32)         # stable
+    sd = jnp.take_along_axis(d, order, axis=1)
+    # per-(row, destination) histogram (the chunk_router histogram stage),
+    # vmapped over rows so the kernel's one-hot block stays (block,
+    # n_nodes+1) regardless of L — flattening rows into L·(n_nodes+1) bins
+    # would grow per-block VMEM quadratically with node count
+    counts = jax.vmap(
+        lambda row: histogram_rows(row, n_bins=n_nodes + 1))(d)
+    counts = counts[:, :n_nodes]                             # (L, n_nodes)
+    start = jnp.cumsum(counts, axis=1) - counts              # exclusive
+    take = jnp.minimum(counts, budget)
+    b = jnp.arange(budget, dtype=jnp.int32)
+    pos = start[:, :, None] + b[None, None, :]               # (L, N, B)
+    src = jnp.take_along_axis(order,
+                              jnp.clip(pos, 0, q - 1).reshape(L, -1),
+                              axis=1).reshape(L, n_nodes, budget)
+    send_idx = jnp.where(b[None, None, :] < take[:, :, None], src, -1)
+    overflow = (counts - take).sum(axis=1).astype(jnp.int32)
+    # reply side: sorted position j holds request order[j]; its reply sits
+    # at flat slot dest·B + rank-within-run when it fit the budget
+    startx = jnp.concatenate(
+        [start, jnp.zeros((L, 1), jnp.int32)], axis=1)       # bin n_nodes
+    rank = jnp.arange(q, dtype=jnp.int32)[None, :] - \
+        jnp.take_along_axis(startx, sd, axis=1)
+    slot = jnp.where((sd < n_nodes) & (rank < budget),
+                     sd * budget + rank, -1)
+    rows = jnp.broadcast_to(jnp.arange(L)[:, None], (L, q))
+    reply_idx = jnp.zeros((L, q), jnp.int32).at[rows, order].set(slot)
+    return send_idx, reply_idx, overflow
+
+
+def _compact_gather(x: jax.Array, send_idx: jax.Array) -> jax.Array:
+    """Gather request rows into send order: (L, q, ...) → (L, N, B, ...).
+
+    Empty budget slots (send_idx == -1) come back zero.  On TPU this is the
+    chunk_pack Pallas kernel over the row-flattened batch.
+    """
+    L, q = x.shape[:2]
+    nb = send_idx.shape[1] * send_idx.shape[2]
+    idx = send_idx.reshape(L, nb)
+    base = (jnp.arange(L, dtype=jnp.int32) * q)[:, None]
+    flat_idx = jnp.where(idx >= 0, idx + base, -1).reshape(-1)
+    rest = x.shape[2:]
+    w = 1
+    for dim in rest:
+        w *= dim
+    out = gather_rows(x.reshape(L * q, w), flat_idx)
+    return out.reshape((L,) + send_idx.shape[1:] + rest)
+
+
+def compact_bucketize(dest: jax.Array, valid: jax.Array, n_nodes: int,
+                      budget: int, payloads: Dict[str, jax.Array]
+                      ) -> Tuple[Dict[str, jax.Array], jax.Array,
+                                 jax.Array]:
+    """Compacted twin of ``bucketize``: budgeted send buffers, no broadcast.
+
+    dest, valid: (L, q); payloads: {name: (L, q, ...)}.  Returns
+    (buffers {name: (L, n_nodes, budget, ...)}, reply_idx (L, q),
+    overflow (L,)).  Exchange the buffers, apply at the receiver, then
+    route replies back through ``compact_collect(reply_idx, …)``.  There
+    is deliberately no separate occupancy mask: append a ones-column to a
+    payload before bucketizing — empty budget slots gather the sentinel
+    zero row, so the column arrives as the receiver-side validity mask at
+    no extra collective (see the engine call sites).
+    """
+    send_idx, reply_idx, overflow = _compact_plan(dest, valid, n_nodes,
+                                                  budget)
+    buffers = {name: _compact_gather(p, send_idx)
+               for name, p in payloads.items()}
+    return buffers, reply_idx, overflow
+
+
+def compact_collect(reply_idx: jax.Array, reply: jax.Array,
+                    fill: int = 0) -> jax.Array:
+    """Scatter replies back to request slots: (L, N, B, ...) → (L, q, ...).
+
+    Overflowed/invalid requests (reply_idx == -1) get ``fill`` — 0 for
+    payload/found, -1 for meta size/loc (the dense path's not-found value).
+    """
+    L, q = reply_idx.shape
+    flat = reply.reshape((L, reply.shape[1] * reply.shape[2]) +
+                         reply.shape[3:])
+    extra = (1,) * (flat.ndim - 2)
+    safe = jnp.clip(reply_idx, 0, flat.shape[1] - 1)
+    got = jnp.take_along_axis(flat, safe.reshape((L, q) + extra), axis=1)
+    return jnp.where((reply_idx >= 0).reshape((L, q) + extra), got, fill)
+
+
+def _add_dropped(state: BBState, extra: jax.Array) -> BBState:
+    return BBState(state.data, state.data_keys, state.data_count,
+                   state.meta_key, state.meta_size, state.meta_loc,
+                   state.meta_count, state.dropped + extra)
+
+
+def exchange_footprint(policy, q: int, words: int,
+                       config: ExchangeConfig) -> Dict[str, int]:
+    """Modeled int32 elements crossing the exchange per engine call.
+
+    Counts every exchanged buffer (requests, masks and replies) for one
+    write, one read (no broadcast fallback) and one metadata round; the
+    benchmark harness converts these to bytes.  Dense buffers carry q slots
+    per (src, dst) pair; compacted ones carry the per-destination budget.
+    """
+    policy = as_policy(policy)
+    N = policy.n_nodes
+    if config.kind == "compacted":
+        bd, bm = data_budget(policy, q, config), meta_budget(policy, q,
+                                                             config)
+    else:
+        bd = bm = q
+    pairs = N * N
+    meta = pairs * bm * (4 + 1) + pairs * bm * 3   # op/key/size/loc+mask → replies
+    write = pairs * bd * (2 + words + 1) + meta    # keys+payload+mask, then meta
+    read = pairs * bd * (2 + 1) + pairs * bd * (words + 1)
+    return {"kind": config.kind, "data_budget": bd, "meta_budget": bm,
+            "write_elems": write, "read_elems": read, "meta_elems": meta}
 
 
 # ---------------------------------------------------------------------------
@@ -297,7 +520,8 @@ def forward_write(state: BBState, layout, path_hash: jax.Array,
                   chunk_id: jax.Array, payload: jax.Array, valid: jax.Array,
                   mode: Optional[jax.Array] = None,
                   exchange: Callable = stacked_exchange,
-                  node_ids: Optional[jax.Array] = None) -> BBState:
+                  node_ids: Optional[jax.Array] = None,
+                  config: ExchangeConfig = DENSE) -> BBState:
     """Each node writes a batch of chunks. path_hash/chunk_id/valid: (L, q);
     payload: (L, q, w).  L is the local node count (N stacked, 1 under
     shard_map); ``node_ids`` are the global ranks of the local nodes.
@@ -306,18 +530,47 @@ def forward_write(state: BBState, layout, path_hash: jax.Array,
     per-request mode array (policy default when omitted).  Requests of
     different modes share one bucketize/exchange round.  Mode values MUST
     be members of ``policy.modes_present()`` — the engine specializes its
-    fast paths on that static set (``BBClient`` enforces this)."""
+    fast paths on that static set (``BBClient`` enforces this).
+
+    ``config`` picks the exchange data plane: dense bucketize broadcast or
+    the sort/gather compacted plan (budget overflow → ``dropped``)."""
     policy = as_policy(layout)
     N = policy.n_nodes
     L = state.data.shape[0]
     client = _client_ranks(L, node_ids)
     mode = _mode_array(policy, mode, path_hash)
+    # tables are int32; converting up front is the same truncation the
+    # at-set append applies, and keeps the fused compacted buffer from
+    # promoting the routing keys to a float dtype (which would round
+    # 31-bit path hashes)
+    payload = jnp.asarray(payload).astype(jnp.int32)
     dest = route_data(mode, N, path_hash, chunk_id, client, xp=jnp)
     keys = jnp.stack([path_hash, chunk_id], axis=-1)
+    meta_valid = valid
     if policy.modes_present() <= LOCAL_WRITE_MODES:
         # every possible mode writes locally: no exchange at all
         # (the Mode-1/4 fast path, decided statically from the policy)
         state = _append_chunks(state, keys, payload, valid)
+    elif config.kind == "compacted":
+        B = data_budget(policy, path_hash.shape[1], config)
+        # keys, payload and a slot-occupancy column ride one fused buffer:
+        # one gather, ONE collective (a mesh all_to_all per exchange());
+        # empty budget slots gather the sentinel zero row, so the trailing
+        # ones-column doubles as the receiver's validity mask
+        fused = jnp.concatenate(
+            [keys, payload, jnp.ones(keys.shape[:-1] + (1,), jnp.int32)],
+            axis=-1)                                # (L, q, 2+w+1)
+        buffers, reply_idx, overflow = compact_bucketize(
+            dest, valid, N, B, {"fused": fused})
+        rf = exchange(buffers["fused"])           # (L, N_src, B, 2+w+1)
+        state = _append_chunks(state, rf[..., :2].reshape(L, -1, 2),
+                               rf[..., 2:-1].reshape(L, N * B, -1),
+                               (rf[..., -1] > 0).reshape(L, -1))
+        state = _add_dropped(state, overflow)
+        # a write whose payload overflowed the data budget must not
+        # register metadata either — a phantom entry would make stat()
+        # report a chunk that read() can never return
+        meta_valid = valid & (reply_idx >= 0)
     else:
         # mask-combined path: local-mode requests route to self through the
         # same exchange, hashed modes to their owners — one round for all
@@ -336,8 +589,8 @@ def forward_write(state: BBState, layout, path_hash: jax.Array,
                     jnp.broadcast_to(client, dest.shape),
                     jnp.full_like(dest, -1))
     state, _, _, _ = meta_op(state, policy, op, path_hash,
-                             chunk_id + 1, loc, valid, mode, exchange,
-                             node_ids)
+                             chunk_id + 1, loc, meta_valid, mode, exchange,
+                             node_ids, config)
     return state
 
 
@@ -345,7 +598,8 @@ def forward_read(state: BBState, layout, path_hash: jax.Array,
                  chunk_id: jax.Array, valid: jax.Array,
                  mode: Optional[jax.Array] = None,
                  exchange: Callable = stacked_exchange,
-                 node_ids: Optional[jax.Array] = None
+                 node_ids: Optional[jax.Array] = None,
+                 config: ExchangeConfig = DENSE
                  ) -> Tuple[jax.Array, jax.Array]:
     """Each node reads a batch of chunks → (payload (L, q, w), found (L, q))."""
     policy = as_policy(layout)
@@ -363,13 +617,20 @@ def forward_read(state: BBState, layout, path_hash: jax.Array,
         _, found_m, _, loc = meta_op(
             state, policy, jnp.full_like(path_hash, OP_STAT), path_hash,
             jnp.zeros_like(path_hash), jnp.full_like(path_hash, -1),
-            valid & (mode == LayoutMode.HYBRID), mode, exchange, node_ids)
+            valid & (mode == LayoutMode.HYBRID), mode, exchange, node_ids,
+            config)
         data_loc = jnp.where(found_m & (loc >= 0), loc,
                              jnp.broadcast_to(client, path_hash.shape))
     dest = route_data(mode, N, path_hash, chunk_id, client,
                       data_loc=data_loc, xp=jnp)
 
-    payload, found = _routed_lookup(state, dest, keys, valid, exchange, N)
+    if config.kind == "compacted":
+        B = data_budget(policy, path_hash.shape[1], config)
+        payload, found = _compact_lookup(state, dest, keys, valid, exchange,
+                                         N, B)
+    else:
+        payload, found = _routed_lookup(state, dest, keys, valid, exchange,
+                                        N)
 
     if present & LOCAL_WRITE_MODES:
         # Stranded-data fallback: broadcast-search all nodes for Mode-1/4
@@ -399,6 +660,26 @@ def _routed_lookup(state, dest, keys, valid, exchange, N):
     return payload, found & valid
 
 
+def _compact_lookup(state, dest, keys, valid, exchange, N, budget):
+    """Compacted twin of ``_routed_lookup``: requests beyond a destination's
+    budget are not sent and simply come back found=False (local-mode misses
+    still reach the broadcast fallback in ``forward_read``)."""
+    L = state.data.shape[0]
+    req = jnp.concatenate(
+        [keys, jnp.ones(keys.shape[:-1] + (1,), jnp.int32)], axis=-1)
+    buffers, reply_idx, _ = compact_bucketize(
+        dest, valid, N, budget, {"req": req})
+    rk = exchange(buffers["req"])                       # (L, N_src, B, 3)
+    pay, fnd = _lookup_chunks(state, rk[..., :2].reshape(L, -1, 2),
+                              (rk[..., 2] > 0).reshape(L, -1))
+    # payload and found return fused in one reply collective
+    reply = jnp.concatenate([pay, fnd[..., None].astype(jnp.int32)],
+                            axis=-1)
+    reply = exchange(reply.reshape(L, N, budget, -1))   # back to requesters
+    out = compact_collect(reply_idx, reply)
+    return out[..., :-1], (out[..., -1] > 0) & valid
+
+
 def _broadcast_lookup(state, keys, valid, exchange, N):
     """Query every node (Mode-1 stranded-read path)."""
     L = state.data.shape[0]
@@ -422,11 +703,14 @@ def meta_op(state: BBState, layout, op: jax.Array,
             path_hash: jax.Array, size: jax.Array, loc: jax.Array,
             valid: jax.Array, mode: Optional[jax.Array] = None,
             exchange: Callable = stacked_exchange,
-            node_ids: Optional[jax.Array] = None
+            node_ids: Optional[jax.Array] = None,
+            config: ExchangeConfig = DENSE
             ) -> Tuple[BBState, jax.Array, jax.Array, jax.Array]:
     """Batched metadata operations routed to their per-request-mode owners.
 
-    Returns (state, found (L,q), size (L,q), loc (L,q))."""
+    Returns (state, found (L,q), size (L,q), loc (L,q)).  Under a compacted
+    config, ops beyond the per-owner budget are dropped: they return
+    found=False and are counted in ``dropped`` at the requesting node."""
     policy = as_policy(layout)
     N = policy.n_nodes
     L = state.data.shape[0]
@@ -435,6 +719,26 @@ def meta_op(state: BBState, layout, op: jax.Array,
     mode = _mode_array(policy, mode, path_hash)
     owner = route_meta(mode, N, policy.n_md_servers, path_hash, client,
                        xp=jnp)
+    if config.kind == "compacted":
+        B = meta_budget(policy, q, config)
+        # one fused gather+exchange for the request (the trailing
+        # ones-column is the receiver's validity mask — empty budget slots
+        # gather the sentinel zero row), one fused reply collective
+        fields = jnp.stack([op, path_hash, size, loc,
+                            jnp.ones_like(op)], axis=-1)     # (L, q, 5)
+        buffers, reply_idx, overflow = compact_bucketize(
+            owner, valid, N, B, {"fields": fields})
+        r = exchange(buffers["fields"]).reshape(L, -1, 5)
+        state, fnd, r_size, r_loc = _meta_apply(
+            state, r[..., 0], r[..., 1], r[..., 2], r[..., 3],
+            r[..., 4] > 0)
+        reply = jnp.stack([fnd.astype(jnp.int32), r_size, r_loc], axis=-1)
+        reply = exchange(reply.reshape(L, N, B, 3))
+        # fill=-1 matches the dense plane's not-found value for size/loc
+        # and still reads as found=False in the first column
+        out = compact_collect(reply_idx, reply, fill=-1)
+        state = _add_dropped(state, overflow)
+        return state, (out[..., 0] > 0) & valid, out[..., 1], out[..., 2]
     buckets, hit = bucketize(
         owner, valid, N,
         {"op": op, "key": path_hash, "size": size, "loc": loc})

@@ -16,6 +16,11 @@ Backends:
 
 Both backends run the *identical* engine code (burst_buffer.py), so results
 are element-for-element equal — asserted in tests/test_policy.py.
+Orthogonally, ``exchange="compacted"`` (default) or ``"dense"`` picks the
+exchange data plane: compacted sort/gather with static per-destination
+budgets (O(N·q) exchange volume, overflow dropped and accounted) vs the
+dense bucketize broadcast (O(N²·q), the bit-for-bit parity oracle) — see
+DESIGN.md §7 and tests/test_compacted_exchange.py.
 
 Requests are batched structs (``BBRequest``): node-major arrays shaped
 ``(n_nodes, q)``.  ``BBClient.encode`` builds one from path strings, hashing
@@ -24,6 +29,7 @@ each path and resolving its scope against the policy at the client boundary
 """
 from __future__ import annotations
 
+import functools
 from dataclasses import dataclass
 from typing import Optional, Sequence, Tuple, Union
 
@@ -55,18 +61,35 @@ class BBRequest:
     loc: Optional[jax.Array] = None
 
 
-def _build_stacked_ops(policy: LayoutPolicy):
+@functools.lru_cache(maxsize=128)
+def _stacked_ops_for(engine_key, config: bb.ExchangeConfig):
+    """Jitted stacked ops, cached per engine specialization.
+
+    Keyed on ``policy.engine_key()`` (not the policy object): scope strings
+    never reach the engine, so every client whose policy traces to the same
+    program — and every re-construction of the same client — shares one set
+    of jitted ops and XLA's trace cache, instead of retracing per instance.
+    """
+    policy = LayoutPolicy.for_engine_key(engine_key)
+
     def _write(state, mode, ph, cid, payload, valid):
         return bb.forward_write(state, policy, ph, cid, payload, valid,
-                                mode=mode)
+                                mode=mode, config=config)
 
     def _read(state, mode, ph, cid, valid):
-        return bb.forward_read(state, policy, ph, cid, valid, mode=mode)
+        return bb.forward_read(state, policy, ph, cid, valid, mode=mode,
+                               config=config)
 
     def _meta(state, mode, op, ph, size, loc, valid):
-        return bb.meta_op(state, policy, op, ph, size, loc, valid, mode=mode)
+        return bb.meta_op(state, policy, op, ph, size, loc, valid, mode=mode,
+                          config=config)
 
     return jax.jit(_write), jax.jit(_read), jax.jit(_meta)
+
+
+def _build_stacked_ops(policy: LayoutPolicy,
+                       config: bb.ExchangeConfig = bb.DENSE):
+    return _stacked_ops_for(policy.engine_key(), config)
 
 
 class BBClient:
@@ -83,36 +106,59 @@ class BBClient:
 
     def __init__(self, policy, backend: Union[str, "jax.sharding.Mesh"]
                  = "stacked", *, cap: int = 256, words: int = 16,
-                 mcap: int = 256, state: Optional[bb.BBState] = None):
+                 mcap: int = 256, state: Optional[bb.BBState] = None,
+                 exchange: str = "compacted", budget: Optional[int] = None,
+                 meta_budget: Optional[int] = None, capacity: float = 2.0):
+        """``exchange`` picks the data plane: "compacted" (default —
+        sort-based routing, budgeted Pallas gather, O(N·q) exchange bytes)
+        or "dense" (the PR-1 O(N²·q) bucketize broadcast, kept as the
+        bit-for-bit parity oracle; it also wins at tiny batches where the
+        sort/gather bookkeeping dominates).  ``budget``/``meta_budget``
+        override the static per-destination slot counts; ``capacity`` is
+        the auto-sizing headroom over the uniform-hash expectation.
+        Requests beyond a destination's budget are dropped and accounted
+        (``state.dropped``; found=False on reads)."""
         self.policy = as_policy(policy)
         self.backend = backend
         self.n_nodes = self.policy.n_nodes
         self.words = words
+        self.exchange_config = bb.ExchangeConfig(
+            kind=exchange, budget=budget, meta_budget=meta_budget,
+            capacity=capacity)
         self.state = (state if state is not None
                       else bb.init_state(self.n_nodes, cap, words, mcap))
+        self._path_codes = functools.lru_cache(maxsize=1 << 16)(
+            self._path_codes_uncached)
         if isinstance(backend, str):
             if backend != "stacked":
                 raise ValueError(f"unknown backend {backend!r}; pass "
                                  "'stacked' or a jax.sharding.Mesh")
             self._write, self._read, self._meta = _build_stacked_ops(
-                self.policy)
+                self.policy, self.exchange_config)
         else:
             from repro.core.mesh_engine import build_mesh_ops
             self._write, self._read, self._meta = build_mesh_ops(
-                backend, self.policy)
+                backend, self.policy, self.exchange_config)
 
     # ---- request construction ----------------------------------------------
+    def _path_codes_uncached(self, path: str) -> Tuple[int, int]:
+        return str_hash(path), self.policy.scope_hash_of(path)
+
     def encode(self, paths: Sequence[Sequence[str]],
                chunk_id=None, payload=None, valid=None) -> BBRequest:
         """Hash a (n_nodes, q) nest of path strings into a BBRequest.
 
         Path and scope hashes are computed once here, at the client
-        boundary; everything downstream is integer array routing.
+        boundary; everything downstream is integer array routing.  The
+        path → (hash, scope-hash) resolution is LRU-memoized per client
+        (``self._path_codes``), so steady-state batches over a stable
+        working set of paths do no per-path Python FNV loop or prefix
+        matching at all.
         """
-        ph = np.asarray([[str_hash(p) for p in row] for row in paths],
-                        np.int32)
-        sh = np.asarray([[self.policy.scope_hash_of(p) for p in row]
-                         for row in paths], np.int32)
+        rows = [[self._path_codes(p) for p in row] for row in paths]
+        # reshape keeps the trailing pair axis even for empty (q=0) rows
+        codes = np.asarray(rows, np.int32).reshape(len(rows), -1, 2)
+        ph, sh = codes[..., 0], codes[..., 1]
         return BBRequest(
             path_hash=jnp.asarray(ph),
             chunk_id=(None if chunk_id is None else jnp.asarray(

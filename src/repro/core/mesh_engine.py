@@ -28,10 +28,16 @@ NODE_AXIS = "node"
 
 
 def mesh_exchange(x: jax.Array) -> jax.Array:
-    """Per-node (L, N, q, ...) -> (L, N, q, ...) with src/dst swapped globally."""
+    """Per-node (L, N, s, ...) -> (L, N, s, ...) with src/dst swapped globally.
+
+    Slot-count agnostic: ``s`` is q dense slots or the compacted plan's
+    per-destination budget B — ``all_to_all`` only touches the (src, dst)
+    axes, which is what makes the ragged/compacted buffers exchange through
+    the identical wiring as the dense ones.
+    """
     y = jax.lax.all_to_all(x, NODE_AXIS, split_axis=1, concat_axis=0,
                            tiled=True)
-    # y: (N * L, ?, q, ...) with local leading = N, second = L
+    # y: (N * L, ?, s, ...) with local leading = N, second = L
     return jnp.swapaxes(y, 0, 1) if y.shape[0] != x.shape[0] else y
 
 
@@ -40,12 +46,15 @@ def _node_ids(local_n: int) -> jax.Array:
     return base + jnp.arange(local_n, dtype=jnp.int32)
 
 
-def build_mesh_ops(mesh: Mesh, policy) -> Tuple:
+def build_mesh_ops(mesh: Mesh, policy,
+                   config: bb.ExchangeConfig = bb.DENSE) -> Tuple:
     """Returns jitted (write, read, meta) ops bound to a mesh + policy.
 
     Each op takes the per-request ``mode`` array right after the state
     (matching the stacked ops in client.py).  State and request arrays are
-    sharded over the ``node`` axis on their leading dim.
+    sharded over the ``node`` axis on their leading dim.  ``config``
+    selects the exchange data plane (dense bucketize vs compacted
+    sort/gather); both run through the same ``mesh_exchange`` all_to_all.
     """
     policy = as_policy(policy)
     n_dev = mesh.shape[NODE_AXIS]
@@ -56,17 +65,17 @@ def build_mesh_ops(mesh: Mesh, policy) -> Tuple:
     def _write(state, mode, ph, cid, payload, valid):
         return bb.forward_write(state, policy, ph, cid, payload, valid,
                                 mode=mode, exchange=mesh_exchange,
-                                node_ids=_node_ids(local_n))
+                                node_ids=_node_ids(local_n), config=config)
 
     def _read(state, mode, ph, cid, valid):
         return bb.forward_read(state, policy, ph, cid, valid,
                                mode=mode, exchange=mesh_exchange,
-                               node_ids=_node_ids(local_n))
+                               node_ids=_node_ids(local_n), config=config)
 
     def _meta(state, mode, op, ph, size, loc, valid):
         return bb.meta_op(state, policy, op, ph, size, loc, valid,
                           mode=mode, exchange=mesh_exchange,
-                          node_ids=_node_ids(local_n))
+                          node_ids=_node_ids(local_n), config=config)
 
     state_specs = jax.tree_util.tree_map(
         lambda _: PS(NODE_AXIS), bb.init_state(1, 1, 1, 1))

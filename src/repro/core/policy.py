@@ -78,14 +78,47 @@ class LayoutPolicy:
         """The compiled lookup table: ((scope_hash, mode_int), …)."""
         return tuple((str_hash(s), int(m)) for s, m in self.scopes)
 
+    @cached_property
+    def _modes_present(self) -> frozenset:
+        return frozenset({self.default_mode} | {m for _, m in self.scopes})
+
     def modes_present(self) -> frozenset:
         """Static set of modes any request under this policy can carry.
 
         The engine branches on this in *Python* (the policy is trace-time
         static) to keep the Mode-1/4 local fast path and skip the hybrid
-        two-phase read when those modes cannot occur.
+        two-phase read when those modes cannot occur.  Cached: it is hit on
+        every engine call and at every budget resolution.
         """
-        return frozenset({self.default_mode} | {m for _, m in self.scopes})
+        return self._modes_present
+
+    def engine_key(self) -> Tuple[int, int, int, Tuple[int, ...]]:
+        """The static fields the engine actually specializes on.
+
+        Two policies with equal keys trace to identical engine programs —
+        scope *strings* only matter host-side (mode resolution happens at
+        the client boundary and reaches the engine as a mode array), so
+        ``BBClient`` caches compiled ops per key rather than per policy
+        object and repeated client construction stops retracing.
+        ``default_mode`` is part of the key: the engine falls back to it
+        when a caller passes ``mode=None``.
+        """
+        return (self.n_nodes, self.n_md_servers, int(self.default_mode),
+                tuple(sorted(int(m) for m in self.modes_present())))
+
+    @classmethod
+    def for_engine_key(cls, key: Tuple[int, int, int, Tuple[int, ...]]
+                       ) -> "LayoutPolicy":
+        """A canonical policy realizing ``engine_key() == key``.
+
+        Used as the representative closed over by cached engine ops; its
+        synthetic scope names are never string-matched by the engine.
+        """
+        n_nodes, n_md, default, modes = key
+        scopes = tuple((f"/__engine__/m{m}", LayoutMode(m))
+                       for m in modes if m != default)
+        return cls(n_nodes=n_nodes, default_mode=LayoutMode(default),
+                   scopes=scopes, metadata_server_ratio=n_md / n_nodes)
 
     # ---- host-side (string) resolution ------------------------------------
     def scope_of(self, path: str) -> Optional[str]:

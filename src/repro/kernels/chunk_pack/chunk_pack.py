@@ -5,6 +5,12 @@ The payload stays in HBM (``memory_space=ANY``); each grid step DMAs one
 output block's worth of rows through VMEM using dynamic row loads — the
 memcpy hot path of the BB client, done as a single fused gather instead of
 per-request copies.
+
+``idx`` rows may be the sentinel ``-1``: those output rows are written as
+zeros.  This is what the compacted exchange plan (burst_buffer.py) uses for
+per-destination budget slots that hold no request, and it is also how the
+kernel pads ``idx`` up to a block multiple — padding with row 0 would
+silently gather row 0 into the padded slots.
 """
 from __future__ import annotations
 
@@ -15,11 +21,17 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+SENTINEL = -1
+
 
 def _pack_kernel(idx_ref, payload_ref, out_ref, *, block: int, width: int):
     def body(r, _):
         src = idx_ref[r]
-        row = pl.load(payload_ref, (pl.dslice(src, 1), pl.dslice(0, width)))
+        ok = src >= 0
+        # clamp so the DMA address is always in-bounds; mask the row after
+        row = pl.load(payload_ref,
+                      (pl.dslice(jnp.maximum(src, 0), 1), pl.dslice(0, width)))
+        row = jnp.where(ok, row, jnp.zeros_like(row))
         pl.store(out_ref, (pl.dslice(r, 1), pl.dslice(0, width)), row)
         return 0
 
@@ -29,14 +41,14 @@ def _pack_kernel(idx_ref, payload_ref, out_ref, *, block: int, width: int):
 @functools.partial(jax.jit, static_argnames=("block", "interpret"))
 def pack_chunks_kernel(payload: jax.Array, idx: jax.Array, *,
                        block: int = 256, interpret: bool = True) -> jax.Array:
-    """payload: (n, w); idx: (m,) int32 row ids → (m, w)."""
+    """payload: (n, w); idx: (m,) int32 row ids (-1 → zero row) → (m, w)."""
     n, w = payload.shape
     m = idx.shape[0]
     block = min(block, max(1, m))
     nb = pl.cdiv(m, block)
     pad = nb * block - m
     if pad:
-        idx = jnp.pad(idx, (0, pad))
+        idx = jnp.pad(idx, (0, pad), constant_values=SENTINEL)
     out = pl.pallas_call(
         functools.partial(_pack_kernel, block=block, width=w),
         grid=(nb,),

@@ -2,11 +2,27 @@ from __future__ import annotations
 
 import jax
 
-from repro.kernels import default_interpret
+from repro.kernels import default_interpret, on_tpu
 from repro.kernels.chunk_pack.chunk_pack import pack_chunks_kernel
+from repro.kernels.chunk_pack.ref import pack_chunks_ref
 
 
 def pack_chunks(payload: jax.Array, idx: jax.Array,
                 interpret: bool = None) -> jax.Array:
+    """Run the Pallas gather kernel (interpret mode off-TPU)."""
     interpret = default_interpret() if interpret is None else interpret
     return pack_chunks_kernel(payload, idx, interpret=interpret)
+
+
+def gather_rows(payload: jax.Array, idx: jax.Array) -> jax.Array:
+    """Engine entry point for the send-order gather.
+
+    On TPU this is the compiled ``chunk_pack`` kernel; elsewhere it is the
+    bit-identical jnp oracle — interpret-mode Pallas is a correctness
+    harness, not a data path, and the serial row loop would dominate the
+    compacted exchange it exists to accelerate.  Sentinel ``idx`` rows
+    (-1) come back zero on both paths.
+    """
+    if on_tpu():
+        return pack_chunks_kernel(payload, idx, interpret=False)
+    return pack_chunks_ref(payload, idx)

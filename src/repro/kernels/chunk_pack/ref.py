@@ -1,6 +1,8 @@
-"""Oracle: jnp.take gather."""
+"""Oracle: jnp.take gather with the sentinel (-1 → zero row) semantics."""
 import jax.numpy as jnp
 
 
 def pack_chunks_ref(payload, idx):
-    return jnp.take(payload, idx, axis=0)
+    idx = jnp.asarray(idx)
+    out = jnp.take(payload, jnp.maximum(idx, 0), axis=0)
+    return jnp.where((idx >= 0)[:, None], out, jnp.zeros_like(out))

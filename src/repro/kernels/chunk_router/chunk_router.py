@@ -6,6 +6,12 @@ instead of a per-request function-pointer dispatch, whole batches of
 nodes in VMEM tiles; per-destination histogram partials come out alongside
 so the caller can size the all-to-all without a second pass.
 
+``dest_histogram_kernel`` exposes the histogram stage on its own: the
+compacted exchange plan (burst_buffer.py) computes mixed-mode destinations
+by masked select and only needs the per-destination counts to lay out its
+budgeted send buffers.  Both kernels share the same one-hot block
+reduction (``_block_counts``).
+
 Integer hashing uses int32 ops (wrapping multiply == uint32 mul mod 2^32;
 we mask to 31 bits after every step so shifts stay logical).
 """
@@ -30,6 +36,14 @@ def mix_hash_i32(a: jax.Array, b: jax.Array) -> jax.Array:
     return h & jnp.int32(MASK31)
 
 
+def _block_counts(dest: jax.Array, n_bins: int) -> jax.Array:
+    """Per-block one-hot histogram; out-of-range rows (e.g. -1) match no bin."""
+    block = dest.shape[0]
+    onehot = (dest[:, None] == jax.lax.broadcasted_iota(
+        jnp.int32, (block, n_bins), 1)).astype(jnp.int32)
+    return onehot.sum(axis=0)
+
+
 def _router_kernel(ph_ref, cid_ref, client_ref, dest_ref, counts_ref, *,
                    mode: int, n_nodes: int, n_valid: int, block: int):
     i = pl.program_id(0)
@@ -46,9 +60,7 @@ def _router_kernel(ph_ref, cid_ref, client_ref, dest_ref, counts_ref, *,
     dest_ref[...] = dest
     # per-destination histogram for this block (summed by the wrapper);
     # padding rows (dest == -1) match no bin.
-    onehot = (dest[:, None] == jax.lax.broadcasted_iota(
-        jnp.int32, (block, n_nodes), 1)).astype(jnp.int32)
-    counts_ref[0] = onehot.sum(axis=0)
+    counts_ref[0] = _block_counts(dest, n_nodes)
 
 
 @functools.partial(jax.jit,
@@ -80,3 +92,34 @@ def route_chunks_kernel(path_hash: jax.Array, chunk_id: jax.Array,
         interpret=interpret,
     )(path_hash, chunk_id, client)
     return dest[:n], counts.sum(axis=0)
+
+
+def _hist_kernel(dest_ref, counts_ref, *, n_bins: int):
+    counts_ref[0] = _block_counts(dest_ref[...], n_bins)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("n_bins", "block", "interpret"))
+def dest_histogram_kernel(dest: jax.Array, *, n_bins: int,
+                          block: int = 1024, interpret: bool = True
+                          ) -> jax.Array:
+    """(n,) int32 destinations → per-bin counts (n_bins,).
+
+    Values outside [0, n_bins) — the plan's invalid-request sentinel — are
+    counted nowhere.  Padding uses -1 for the same reason.
+    """
+    n = dest.shape[0]
+    block = min(block, max(8, n))
+    nb = pl.cdiv(n, block)
+    pad = nb * block - n
+    if pad:
+        dest = jnp.pad(dest, (0, pad), constant_values=-1)
+    counts = pl.pallas_call(
+        functools.partial(_hist_kernel, n_bins=n_bins),
+        grid=(nb,),
+        in_specs=[pl.BlockSpec((block,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((1, n_bins), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nb, n_bins), jnp.int32),
+        interpret=interpret,
+    )(dest)
+    return counts.sum(axis=0)

@@ -1,10 +1,12 @@
-"""Public routing wrapper."""
+"""Public routing wrappers."""
 from __future__ import annotations
 
 import jax
 
-from repro.kernels import default_interpret
-from repro.kernels.chunk_router.chunk_router import route_chunks_kernel
+from repro.kernels import default_interpret, on_tpu
+from repro.kernels.chunk_router.chunk_router import (dest_histogram_kernel,
+                                                    route_chunks_kernel)
+from repro.kernels.chunk_router.ref import dest_histogram_ref
 
 
 def route_chunks(path_hash: jax.Array, chunk_id: jax.Array,
@@ -13,3 +15,21 @@ def route_chunks(path_hash: jax.Array, chunk_id: jax.Array,
     interpret = default_interpret() if interpret is None else interpret
     return route_chunks_kernel(path_hash, chunk_id, client, mode=mode,
                                n_nodes=n_nodes, interpret=interpret)
+
+
+def dest_histogram(dest: jax.Array, *, n_bins: int,
+                   interpret: bool = None) -> jax.Array:
+    """Run the Pallas histogram kernel (interpret mode off-TPU)."""
+    interpret = default_interpret() if interpret is None else interpret
+    return dest_histogram_kernel(dest, n_bins=n_bins, interpret=interpret)
+
+
+def histogram_rows(dest: jax.Array, *, n_bins: int) -> jax.Array:
+    """Engine entry point for per-destination counts.
+
+    Compiled Pallas kernel on TPU, bit-identical jnp oracle elsewhere (see
+    ``gather_rows`` in chunk_pack.ops for the rationale).
+    """
+    if on_tpu():
+        return dest_histogram_kernel(dest, n_bins=n_bins, interpret=False)
+    return dest_histogram_ref(dest, n_bins=n_bins)

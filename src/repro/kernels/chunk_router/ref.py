@@ -1,4 +1,4 @@
-"""Pure-jnp oracle for chunk routing (delegates to core.layouts)."""
+"""Pure-jnp oracles for chunk routing (delegates to core.layouts)."""
 from __future__ import annotations
 
 import jax.numpy as jnp
@@ -12,3 +12,11 @@ def route_chunks_ref(path_hash, chunk_id, client, *, mode: int,
     dest = f_data(params, path_hash, chunk_id, client, xp=jnp)
     counts = jnp.bincount(dest.clip(0), weights=None, length=n_nodes)
     return dest.astype(jnp.int32), counts.astype(jnp.int32)
+
+
+def dest_histogram_ref(dest, *, n_bins: int):
+    dest = jnp.asarray(dest)
+    inb = (dest >= 0) & (dest < n_bins)
+    return jnp.bincount(jnp.where(inb, dest, 0),
+                        weights=inb.astype(jnp.int32),
+                        length=n_bins).astype(jnp.int32)

@@ -5,10 +5,12 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.kernels.chunk_pack.ops import pack_chunks
+from repro.kernels.chunk_pack.ops import gather_rows, pack_chunks
 from repro.kernels.chunk_pack.ref import pack_chunks_ref
-from repro.kernels.chunk_router.ops import route_chunks
-from repro.kernels.chunk_router.ref import route_chunks_ref
+from repro.kernels.chunk_router.ops import (dest_histogram, histogram_rows,
+                                            route_chunks)
+from repro.kernels.chunk_router.ref import (dest_histogram_ref,
+                                            route_chunks_ref)
 from repro.kernels.fletcher.ops import fletcher_checksum
 from repro.kernels.fletcher.ref import fletcher_ref
 from repro.kernels.flash_attention.ops import flash_attention
@@ -58,6 +60,41 @@ def test_chunk_pack_sweep(n, m, w, dtype):
     out = pack_chunks(payload, idx)
     np.testing.assert_array_equal(np.asarray(out),
                                   np.asarray(pack_chunks_ref(payload, idx)))
+
+
+@pytest.mark.parametrize("m", [3, 17, 256, 259])
+def test_chunk_pack_sentinel_and_pad_path(m):
+    """Sentinel idx rows (-1) must come back zero, and the block padding of
+    ``idx`` must not silently gather row 0 into the padded tail (regression:
+    the kernel used to pad with 0).  Poison row 0 so any such leak is loud.
+    """
+    n, w = 8, 4
+    payload = jnp.full((n, w), 7777, jnp.int32).at[1:].set(
+        jnp.arange(1, n, dtype=jnp.int32)[:, None] * jnp.ones((1, w),
+                                                             jnp.int32))
+    idx = jnp.asarray(RNG.randint(-1, n, m), jnp.int32)
+    idx = idx.at[0].set(-1)                            # always one sentinel
+    out = np.asarray(pack_chunks(payload, idx, interpret=True))
+    ref = np.asarray(pack_chunks_ref(payload, idx))
+    np.testing.assert_array_equal(out, ref)
+    assert (out[np.asarray(idx) < 0] == 0).all()
+    # the engine dispatch path shares the sentinel semantics
+    np.testing.assert_array_equal(np.asarray(gather_rows(payload, idx)), ref)
+
+
+@pytest.mark.parametrize("n", [8, 100, 1024, 4097])
+@pytest.mark.parametrize("n_bins", [4, 33])
+def test_dest_histogram_sweep(n, n_bins):
+    """Histogram kernel vs bincount oracle; out-of-range bins (the compact
+    plan's invalid-request sentinel) are counted nowhere."""
+    dest = jnp.asarray(RNG.randint(-1, n_bins + 2, n), jnp.int32)
+    out = np.asarray(dest_histogram(dest, n_bins=n_bins))
+    ref = np.asarray(dest_histogram_ref(dest, n_bins=n_bins))
+    np.testing.assert_array_equal(out, ref)
+    inb = (np.asarray(dest) >= 0) & (np.asarray(dest) < n_bins)
+    assert out.sum() == inb.sum()
+    np.testing.assert_array_equal(
+        np.asarray(histogram_rows(dest, n_bins=n_bins)), ref)
 
 
 @pytest.mark.parametrize("n", [1, 9, 1023, 1024, 1025, 10000])
