@@ -1,6 +1,6 @@
 PY := PYTHONPATH=src python
 
-.PHONY: test test-fast examples bb-dryrun bench
+.PHONY: test test-fast examples bb-dryrun bench docs-check
 
 # full tier-1 suite (~minutes: includes model smoke + subprocess mesh tests)
 test:
@@ -17,8 +17,13 @@ examples:
 bb-dryrun:
 	$(PY) -m repro.launch.dryrun --bb --out results/dryrun
 
-# exchange data-plane perf: dense vs compacted sweep + encode/kernel
-# microbenches → machine-readable BENCH_pr2.json (perf trajectory seed).
-# The full sweep lives in the `slow`-marked test_bench_quick_sweep.
+# exchange data-plane perf: dense vs compacted (ragged budgets) sweep +
+# carry/encode/kernel microbenches → machine-readable BENCH_pr3.json.
+# BENCH_pr2.json is the frozen PR-2 baseline (tests/test_bench_regression.py
+# diffs the two); the auto backend selector reads the newest JSON present.
 bench:
-	$(PY) benchmarks/exchange_bench.py --quick --out BENCH_pr2.json
+	$(PY) benchmarks/exchange_bench.py --quick --out BENCH_pr3.json
+
+# fail on any undocumented public symbol in the core API (tools/docs_check.py)
+docs-check:
+	python tools/docs_check.py

@@ -1,16 +1,21 @@
 """Exchange data-plane benchmark: dense O(N²·q) bucketize vs the compacted
-sort/gather plan, swept over nodes × batch × words.
+plan (ragged histogram-sized budgets by default), swept over nodes × batch
+× words.
 
 Each cell runs the REAL stacked engine (both backends share one request
 trace: a mixed-mode batch, half Mode-2 central-metadata and half Mode-3
 hashed, exercising write + read + stat) and reports measured wall time per
 call next to the modeled exchange footprint from
 ``burst_buffer.exchange_footprint``.  Results go to a machine-readable JSON
-(``BENCH_pr2.json``) so later PRs can diff the perf trajectory.
+(``BENCH_pr3.json``) so later PRs can diff the perf trajectory, the
+per-call backend auto-selection (``exchange_select``) can learn the
+measured dense/compacted crossover, and ``docs/exchange.md`` can cite the
+"which backend wins where" table (``--markdown`` prints it).
 
-Also includes the client-boundary microbenches: memoized vs uncached path
-hashing in ``BBClient.encode``, and interpret-mode latencies of the routing
-/ histogram / pack kernels.
+Also includes the carry-round microbench (uniform tight budget: lossless
+carry vs legacy drop vs single lossless round) and the client-boundary
+microbenches: memoized vs uncached path hashing in ``BBClient.encode`` and
+interpret-mode latencies of the routing / histogram / pack kernels.
 
 Usage:
     PYTHONPATH=src python benchmarks/exchange_bench.py --quick
@@ -57,17 +62,13 @@ def bench_cell(n: int, q: int, w: int, kind: str, iters: int,
     from repro.core.layouts import LayoutMode
 
     policy = _mixed_policy(n)
-    kw = {}
-    if kind == "compacted":
-        # this workload uses a distinct path per request, so metadata
-        # hash-spreads over its owners and the explicit budget below is
-        # safe; the engine's AUTO meta budget is lossless (B=q) because
-        # per-file chunk batches concentrate on one owner structurally
-        kw["meta_budget"] = bb._auto_budget(q, policy.n_md_servers,
-                                            capacity)
+    # ragged (default): budgets — data AND metadata — are sized per call
+    # from the measured per-destination histograms, so the old explicit
+    # hash-spread ``meta_budget`` workaround is gone and the plan is
+    # lossless with no carry round
     client = BBClient(policy, cap=max(256, 4 * q), words=w,
                       mcap=max(256, 4 * q), exchange=kind,
-                      capacity=capacity, **kw)
+                      capacity=capacity)
     rng = np.random.RandomState(0)
     ph = jnp.asarray(rng.randint(1, 1 << 20, (n, q)), jnp.int32)
     cid = jnp.asarray(rng.randint(0, 8, (n, q)), jnp.int32)
@@ -87,15 +88,22 @@ def bench_cell(n: int, q: int, w: int, kind: str, iters: int,
                        iters=iters)
     stat_us = _time_us(client._meta, client.state, mode, op, ph, zeros, neg,
                        valid, iters=iters)
-    foot = bb.exchange_footprint(policy, q, w, client.exchange_config)
+    # footprint of the config this cell actually ran — including the
+    # measured ragged specs the client attached per call
+    cfg = (bb.DENSE if kind == "dense"
+           else client._call_config("write", mode, ph, cid, valid))
+    foot = bb.exchange_footprint(policy, q, w, cfg)
     return {
         "backend": kind, "n_nodes": n, "batch": q, "words": w,
         "data_budget": foot["data_budget"],
         "meta_budget": foot["meta_budget"],
+        "ragged_cols": cfg.data_spec.total if cfg.data_spec else None,
+        "ragged_meta_cols": cfg.meta_spec.total if cfg.meta_spec else None,
         "write_us": round(write_us, 1), "read_us": round(read_us, 1),
         "stat_us": round(stat_us, 1),
         "write_exchange_bytes": 4 * foot["write_elems"],
         "read_exchange_bytes": 4 * foot["read_elems"],
+        "write_carry_bytes_worst": 4 * foot["write_carry_elems"],
         "chunks_per_s_write": round(n * q / (write_us / 1e6)),
     }
 
@@ -131,6 +139,47 @@ def encode_bench(n_rows: int = 64, row_len: int = 32,
             "warm_us": round(warm_us, 1),
             "uncached_loop_us": round(uncached_us, 1),
             "steady_state_speedup": round(uncached_us / warm_us, 2)}
+
+
+def carry_bench(n: int = 8, q: int = 64, w: int = 16,
+                iters: int = 5) -> Dict:
+    """Cost of the lossless carry round at a uniform tight budget.
+
+    A per-file concentrated batch (every chunk of one file per node — the
+    canonical checkpoint write) overflows a ``q//4`` uniform budget every
+    call, so the cond-gated carry round is TAKEN; comparing against the
+    legacy drop plane (same budget, ``lossless=False``) isolates what
+    losslessness costs when it actually fires, and against the single
+    lossless round (``budget=q``) what the tight budget saves/loses.
+    Ragged sizing is disabled so the uniform path is what's measured.
+    """
+    import jax.numpy as jnp
+    from repro.core.client import BBClient
+    from repro.core.policy import LayoutPolicy
+    from repro.core.layouts import LayoutMode
+
+    policy = LayoutPolicy.uniform(LayoutMode.DIST_HASH, n)
+    rng = np.random.RandomState(0)
+    ph = jnp.asarray(np.repeat(rng.randint(1, 1 << 20, (n, 1)), q, axis=1),
+                     jnp.int32)
+    cid = jnp.asarray(np.tile(np.arange(q, dtype=np.int32), (n, 1)))
+    payload = jnp.asarray(rng.randint(0, 9999, (n, q, w)), jnp.int32)
+    valid = jnp.ones((n, q), bool)
+    mode = jnp.full((n, q), int(LayoutMode.DIST_HASH), jnp.int32)
+    out = {"n_nodes": n, "batch": q, "words": w, "budget": q // 4}
+    for name, kw in [
+        ("carry_taken_us", dict(budget=q // 4, lossless=True)),
+        ("drop_us", dict(budget=q // 4, lossless=False)),
+        ("single_round_us", dict(budget=q, lossless=True)),
+    ]:
+        client = BBClient(policy, cap=4 * q, words=w, mcap=4 * q,
+                          exchange="compacted", ragged=False,
+                          meta_budget=q, **kw)
+        out[name] = round(_time_us(client._write, client.state, mode, ph,
+                                   cid, payload, valid, iters=iters), 1)
+    out["carry_overhead_vs_drop"] = round(
+        out["carry_taken_us"] / out["drop_us"], 2)
+    return out
 
 
 def kernel_bench(iters: int = 5) -> List[Dict]:
@@ -197,49 +246,93 @@ def run(nodes: List[int], batches: List[int], words: List[int],
                     d["write_exchange_bytes"] / c["write_exchange_bytes"],
                     2),
             }
+    # measured dense/compacted crossover + leave-one-out accuracy of the
+    # auto selector (each cell predicted from the table WITHOUT itself —
+    # a self-lookup would score 1.0 on any data)
+    from repro.core import exchange_select
+    crossover = exchange_select.crossover_table(rows)
+    acc = exchange_select.auto_accuracy(crossover)
+    auto_accuracy = None if acc is None else round(acc, 3)
     result = {
         "meta": {
-            "bench": "exchange_bench", "pr": 2,
+            "bench": "exchange_bench", "pr": 3,
             "workload": "mixed-mode (Mode-2 central-meta + Mode-3 hashed) "
-                        "write/read/stat, stacked backend",
+                        "write/read/stat, stacked backend, ragged budgets",
             "capacity": capacity, "iters": iters,
             "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
         },
         "rows": rows,
         "summary": summary,
+        "crossover": [list(c) for c in crossover],
+        "auto_accuracy": auto_accuracy,
     }
     if not skip_micro:
         result["encode"] = encode_bench()
         result["kernels"] = kernel_bench()
+        result["carry"] = carry_bench()
     with open(out, "w") as f:
         json.dump(result, f, indent=1)
+    # invalidate the per-process crossover cache so in-process clients
+    # constructed after this run pick from the fresh artifact
+    exchange_select.refresh()
     print(f"wrote {out}")
     for k, v in summary.items():
         print(f"summary {k}: {v}")
+    print(f"auto_accuracy (leave-one-out): {auto_accuracy} "
+          f"over {len(crossover)} cells")
     return result
+
+
+def markdown_table(result: Dict) -> str:
+    """The docs/exchange.md "which backend wins where" table from a bench
+    result dict (``--markdown`` prints it for paste-through).  Winners and
+    round times come from ``exchange_select`` so the table can never
+    diverge from what ``pick_backend`` actually selects."""
+    from repro.core import exchange_select as xs
+    lines = ["| N | q | words | dense round µs | compacted round µs | "
+             "winner | bytes ratio (d/c) |",
+             "|---|---|-------|---------------|--------------------|"
+             "--------|-------------------|"]
+    by = {}
+    for r in result["rows"]:
+        by.setdefault((r["n_nodes"], r["batch"], r["words"]),
+                      {})[r["backend"]] = r
+    for n, q, w, winner in xs.crossover_table(result["rows"]):
+        d, c = by[(n, q, w)]["dense"], by[(n, q, w)]["compacted"]
+        ratio = d["write_exchange_bytes"] / c["write_exchange_bytes"]
+        lines.append(f"| {n} | {q} | {w} | {xs.round_us(d):.0f} | "
+                     f"{xs.round_us(c):.0f} | {winner} | {ratio:.1f}× |")
+    return "\n".join(lines)
 
 
 def main(argv=None) -> Dict:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--quick", action="store_true",
-                    help="small sweep (8/32 nodes, q=64, w=16)")
+                    help="small sweep (4/8/32 nodes, q=8/64, w=16) — "
+                         "includes the tiny cells where dense wins, so the "
+                         "auto selector has a real crossover to learn")
     ap.add_argument("--nodes", default="8,16,32,64")
     ap.add_argument("--batch", default="32,64,128")
     ap.add_argument("--words", default="8,16")
     ap.add_argument("--iters", type=int, default=10)
     ap.add_argument("--capacity", type=float, default=2.0)
-    ap.add_argument("--out", default="BENCH_pr2.json")
+    ap.add_argument("--out", default="BENCH_pr3.json")
     ap.add_argument("--skip-micro", action="store_true")
+    ap.add_argument("--markdown", action="store_true",
+                    help="also print the docs/exchange.md winner table")
     args = ap.parse_args(argv)
     if args.quick:
-        nodes, batches, words, iters = [8, 32], [64], [16], 10
+        nodes, batches, words, iters = [4, 8, 32], [8, 64], [16], 10
     else:
         nodes = [int(x) for x in args.nodes.split(",")]
         batches = [int(x) for x in args.batch.split(",")]
         words = [int(x) for x in args.words.split(",")]
         iters = args.iters
-    return run(nodes, batches, words, iters, args.capacity, args.out,
-               skip_micro=args.skip_micro)
+    result = run(nodes, batches, words, iters, args.capacity, args.out,
+                 skip_micro=args.skip_micro)
+    if args.markdown:
+        print(markdown_table(result))
+    return result
 
 
 if __name__ == "__main__":

@@ -1,3 +1,15 @@
-# The paper's primary contribution — implement the SYSTEM here
-# (scheduler, optimizer, data path, serving loop, etc.) in the
-# host framework. Add sibling subpackages for substrates.
+"""Proteus core: the burst-buffer system the paper's pipeline drives.
+
+Subpackage map (see README.md for the full tour):
+
+* ``layouts``/``policy`` — the four layout modes, vectorized routing, and
+  the per-scope ``LayoutPolicy`` plan (layout heterogeneity);
+* ``burst_buffer``/``mesh_engine`` — the stacked/mesh data plane: dense
+  and compacted (ragged or carry-round lossless) exchange;
+* ``client``/``exchange_select`` — the ``BBClient`` facade with per-call
+  backend auto-selection from measured crossover data;
+* ``intent`` — the hybrid static+runtime analysis and LLM-guided layout
+  reasoner that emits per-scope plans;
+* ``simulator``/``workloads`` — the phase-cost model and the paper's
+  workload suite used for oracle/ablation studies.
+"""

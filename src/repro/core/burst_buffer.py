@@ -17,8 +17,15 @@ back.  Two exchange data planes share that structure (``ExchangeConfig``):
 the **dense** bucketize broadcast (every request materialized for every
 destination — O(N²·q) exchange volume, kept as the bit-for-bit parity
 oracle) and the **compacted** sort/gather plan (destination-ordered argsort
-+ budgeted Pallas gather — O(N·q), budget overflow dropped and accounted;
-see the compacted-exchange section below and DESIGN.md §7).  A single exchange round therefore serves a *mixed-mode* batch: the
++ budgeted Pallas gather — O(N·q)).  Compacted budgets come in two
+flavours: **ragged** per-destination budgets sized from the measured
+``chunk_router`` histograms (``RaggedSpec`` — lossless by construction,
+stacked backend), and **uniform** jit-static budgets (the mesh backend's
+all_to_all needs equal splits) whose overflow is *carried into a
+rarely-taken second exchange round* instead of dropped
+(``ExchangeConfig.lossless``, the default; ``lossless=False`` restores the
+legacy drop-and-account plane).  See the compacted-exchange section below,
+docs/exchange.md and DESIGN.md §7.  A single exchange round therefore serves a *mixed-mode* batch: the
 Mode-1/4 local fast path, hashed routing, and the hybrid two-phase read are
 mask-combined paths over the same bucketize/exchange plumbing.  Mode
 semantics:
@@ -45,15 +52,17 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass
+from functools import cached_property
 from typing import Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.layouts import LayoutMode, route_data, route_meta
 from repro.core.policy import LayoutPolicy, as_policy
-from repro.kernels.chunk_pack.ops import gather_rows
-from repro.kernels.chunk_router.ops import histogram_rows
+from repro.kernels.chunk_pack.ops import gather_rows_batched
+from repro.kernels.chunk_router.ops import histogram_rows2d
 
 EMPTY = jnp.int32(-1)
 
@@ -76,16 +85,19 @@ class BBState:
     dropped: jax.Array    # (N,) int32 capacity-overflow counter
 
     def tree_flatten(self):
+        """Pytree protocol: the eight table arrays, no static aux."""
         return ((self.data, self.data_keys, self.data_count, self.meta_key,
                  self.meta_size, self.meta_loc, self.meta_count, self.dropped),
                 None)
 
     @classmethod
     def tree_unflatten(cls, aux, children):
+        """Pytree protocol inverse of ``tree_flatten``."""
         return cls(*children)
 
 
 def init_state(n_nodes: int, cap: int, words: int, mcap: int) -> BBState:
+    """Fresh empty node tables: cap data slots × words, mcap meta."""
     return BBState(
         data=jnp.zeros((n_nodes, cap, words), jnp.int32),
         data_keys=jnp.full((n_nodes, cap, 2), EMPTY, jnp.int32),
@@ -147,31 +159,131 @@ def collect_replies(dest: jax.Array, reply_buckets: jax.Array,
 # O(N²·q).  The compacted plan instead argsorts each node's requests into
 # destination-contiguous order, gathers payloads into per-destination
 # budgeted send buffers (the chunk_pack Pallas kernel on TPU), exchanges
-# only (L, n_nodes, B, ...) with B ≈ capacity·q/N, and scatters replies
-# back through the inverse permutation.  Requests beyond a destination's
-# budget are *dropped and accounted* (the ``dropped`` counter / found=False
-# on reads) — the same overflow semantics as table capacity.  With B = q
-# the compacted path is bit-for-bit the dense path (same receive order:
-# source-major, then original slot order), which is what the parity suite
-# pins.
+# only the budgeted columns, and scatters replies back through the inverse
+# permutation.  Budgets come in two flavours:
+#
+# * **ragged** (``ExchangeConfig.data_spec``/``meta_spec`` set): one packed
+#   (L, Σbᵢ) buffer whose per-destination segment widths bᵢ are the
+#   *measured* per-destination histogram maxima (``plan_ragged_spec``) —
+#   lossless by construction, and bit-for-bit the dense receive order.
+#   Segment widths are static Python ints, so this path re-specializes per
+#   distinct traffic shape; it is the stacked backend's default.
+# * **uniform** jit-static B per destination ((L, n_nodes, B) buffers — the
+#   only shape a mesh ``all_to_all`` can carry).  A valid request beyond
+#   its destination's budget is either *carried* into a second, cond-
+#   skipped exchange round with the worst-case residual budget ``q − B``
+#   (``lossless=True``, the default — the carry round is provably
+#   sufficient, see ``_carry_budget``), or *dropped and accounted* (the
+#   legacy ``lossless=False`` plane: ``dropped`` counter / found=False).
+#
+# With B = q (or ragged budgets) the compacted path is bit-for-bit the
+# dense path (same receive order: source-major, then original slot order),
+# which is what the parity suite pins.  Under the carry round, overflowed
+# requests append *after* every round-1 request instead of interleaved in
+# source-major order, so raw table layout can differ from dense while every
+# observable reply (read payload/found, stat size/loc) and every count
+# still matches — tests/test_compacted_exchange.py pins both properties.
 # ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class RaggedSpec:
+    """Static ragged per-destination send budgets (one exchange round).
+
+    ``budgets[d]`` is the number of send-buffer columns reserved for
+    destination ``d``; the packed buffer is (L, ``total``) with destination
+    ``d``'s segment at columns [``offsets[d]``, ``offsets[d]`` + bᵈ).
+    Budgets are concrete Python ints (jit-static): build one with
+    ``plan_ragged_spec`` on *concrete* destination arrays, outside jit.
+    Hash/eq are by budget tuple, so jitted engine ops cache per traffic
+    shape.
+    """
+
+    budgets: Tuple[int, ...]
+
+    @property
+    def n_nodes(self) -> int:
+        """Number of destinations (the length of the budget tuple)."""
+        return len(self.budgets)
+
+    @property
+    def total(self) -> int:
+        """Σbᵢ — the packed send-buffer column count."""
+        return sum(self.budgets)
+
+    @cached_property
+    def bmax(self) -> int:
+        """Widest per-destination segment (receive-side padding width)."""
+        return max(self.budgets) if self.budgets else 0
+
+    @cached_property
+    def offsets(self) -> np.ndarray:
+        """(n_nodes,) exclusive prefix sum of ``budgets``."""
+        return np.concatenate(
+            [[0], np.cumsum(self.budgets[:-1])]).astype(np.int32) \
+            if self.budgets else np.zeros(0, np.int32)
+
+    @cached_property
+    def dcol(self) -> np.ndarray:
+        """(total,) destination owning each packed column."""
+        return np.repeat(np.arange(self.n_nodes, dtype=np.int32),
+                         self.budgets)
+
+    @cached_property
+    def jcol(self) -> np.ndarray:
+        """(total,) rank of each packed column within its segment."""
+        return np.concatenate(
+            [np.arange(b, dtype=np.int32) for b in self.budgets]
+        ).astype(np.int32) if self.total else np.zeros(0, np.int32)
+
+    @cached_property
+    def recv_cols(self) -> np.ndarray:
+        """(n_nodes·bmax,) packed column feeding each padded receive slot.
+
+        Receive slot (d, j) reads packed column ``offsets[d] + j`` when
+        ``j < budgets[d]``, else the sentinel ``-1`` (zero-masked).
+        """
+        col = np.full((self.n_nodes, max(self.bmax, 0)), -1, np.int32)
+        for d, b in enumerate(self.budgets):
+            col[d, :b] = self.offsets[d] + np.arange(b)
+        return col.reshape(-1)
+
+    @cached_property
+    def send_cols(self) -> np.ndarray:
+        """(total,) padded receive slot holding each packed column's reply."""
+        return (self.dcol * max(self.bmax, 1) + self.jcol).astype(np.int32)
+
+
 @dataclass(frozen=True)
 class ExchangeConfig:
     """Static data-plane exchange selection (trace-time, hashable).
 
     kind: "dense" (PR-1 bucketize broadcast, the parity oracle) or
-    "compacted".  ``budget``/``meta_budget`` fix the per-destination slot
-    counts; ``None`` auto-sizes them: data gets ``capacity·q/N`` (rounded
-    up to a lane-friendly multiple of 8) under hash-spread modes and the
-    lossless ``B = q`` when a mode can structurally concentrate a batch on
-    one node (local writes, hybrid reads); metadata auto is always
-    lossless — see ``meta_budget``.
+    "compacted".  ``budget``/``meta_budget`` fix the uniform per-destination
+    slot counts; ``None`` auto-sizes them: data gets ``capacity·q/N``
+    (rounded up to a lane-friendly multiple of 8) under hash-spread modes
+    and ``B = q`` when a mode can structurally concentrate a batch on one
+    node (local writes, hybrid reads); metadata auto stays ``B = q`` — see
+    ``meta_budget``.
+
+    ``lossless`` (default True) carries uniform-budget overflow into a
+    cond-skipped second exchange round sized ``q − B`` instead of dropping
+    it, making the compacted plane lossless at ANY budget ≥ 1;
+    ``lossless=False`` restores the legacy drop-and-account semantics
+    (``dropped`` counter, found=False replies, skipped metadata phase).
+
+    ``data_spec``/``meta_spec`` switch the data/metadata exchange to the
+    ragged single-round plan (stacked backend only — a mesh ``all_to_all``
+    needs uniform splits).  ``BBClient`` measures and attaches these per
+    call; they are part of the config's hash so jitted ops specialize per
+    traffic shape.
     """
 
     kind: str = "dense"
     budget: Optional[int] = None
     meta_budget: Optional[int] = None
     capacity: float = 2.0
+    lossless: bool = True
+    data_spec: Optional[RaggedSpec] = None
+    meta_spec: Optional[RaggedSpec] = None
 
     def __post_init__(self):
         if self.kind not in ("dense", "compacted"):
@@ -238,12 +350,11 @@ def _compact_plan(dest: jax.Array, valid: jax.Array, n_nodes: int,
     d = jnp.where(valid, dest, n_nodes).astype(jnp.int32)
     order = jnp.argsort(d, axis=1).astype(jnp.int32)         # stable
     sd = jnp.take_along_axis(d, order, axis=1)
-    # per-(row, destination) histogram (the chunk_router histogram stage),
-    # vmapped over rows so the kernel's one-hot block stays (block,
-    # n_nodes+1) regardless of L — flattening rows into L·(n_nodes+1) bins
-    # would grow per-block VMEM quadratically with node count
-    counts = jax.vmap(
-        lambda row: histogram_rows(row, n_bins=n_nodes + 1))(d)
+    # per-(row, destination) histogram (the chunk_router histogram stage,
+    # row-batched so the kernel's one-hot block stays (q, n_nodes+1)
+    # regardless of L — flattening rows into L·(n_nodes+1) bins would grow
+    # per-block VMEM quadratically with node count)
+    counts = histogram_rows2d(d, n_bins=n_nodes + 1)
     counts = counts[:, :n_nodes]                             # (L, n_nodes)
     start = jnp.cumsum(counts, axis=1) - counts              # exclusive
     take = jnp.minimum(counts, budget)
@@ -273,17 +384,10 @@ def _compact_gather(x: jax.Array, send_idx: jax.Array) -> jax.Array:
     Empty budget slots (send_idx == -1) come back zero.  On TPU this is the
     chunk_pack Pallas kernel over the row-flattened batch.
     """
-    L, q = x.shape[:2]
-    nb = send_idx.shape[1] * send_idx.shape[2]
-    idx = send_idx.reshape(L, nb)
-    base = (jnp.arange(L, dtype=jnp.int32) * q)[:, None]
-    flat_idx = jnp.where(idx >= 0, idx + base, -1).reshape(-1)
-    rest = x.shape[2:]
-    w = 1
-    for dim in rest:
-        w *= dim
-    out = gather_rows(x.reshape(L * q, w), flat_idx)
-    return out.reshape((L,) + send_idx.shape[1:] + rest)
+    L = x.shape[0]
+    out = gather_rows_batched(
+        x, send_idx.reshape(L, send_idx.shape[1] * send_idx.shape[2]))
+    return out.reshape((L,) + send_idx.shape[1:] + x.shape[2:])
 
 
 def compact_bucketize(dest: jax.Array, valid: jax.Array, n_nodes: int,
@@ -308,26 +412,174 @@ def compact_bucketize(dest: jax.Array, valid: jax.Array, n_nodes: int,
     return buffers, reply_idx, overflow
 
 
-def compact_collect(reply_idx: jax.Array, reply: jax.Array,
-                    fill: int = 0) -> jax.Array:
-    """Scatter replies back to request slots: (L, N, B, ...) → (L, q, ...).
+def compact_collect_flat(reply_idx: jax.Array, reply: jax.Array,
+                         fill: int = 0) -> jax.Array:
+    """Scatter replies back to request slots: (L, S, ...) → (L, q, ...).
 
-    Overflowed/invalid requests (reply_idx == -1) get ``fill`` — 0 for
-    payload/found, -1 for meta size/loc (the dense path's not-found value).
+    ``reply_idx`` indexes the flat reply column axis ``S`` (``n_nodes·B``
+    for the uniform plan, the packed ``Σbᵢ`` for the ragged one).
+    Unserved requests (reply_idx == -1) get ``fill`` — 0 for payload/found,
+    -1 for meta size/loc (the dense path's not-found value).
     """
     L, q = reply_idx.shape
-    flat = reply.reshape((L, reply.shape[1] * reply.shape[2]) +
-                         reply.shape[3:])
-    extra = (1,) * (flat.ndim - 2)
-    safe = jnp.clip(reply_idx, 0, flat.shape[1] - 1)
-    got = jnp.take_along_axis(flat, safe.reshape((L, q) + extra), axis=1)
+    if reply.shape[1] == 0:                     # no traffic at all this round
+        return jnp.full((L, q) + reply.shape[2:], fill, reply.dtype)
+    extra = (1,) * (reply.ndim - 2)
+    safe = jnp.clip(reply_idx, 0, reply.shape[1] - 1)
+    got = jnp.take_along_axis(reply, safe.reshape((L, q) + extra), axis=1)
     return jnp.where((reply_idx >= 0).reshape((L, q) + extra), got, fill)
+
+
+def compact_collect(reply_idx: jax.Array, reply: jax.Array,
+                    fill: int = 0) -> jax.Array:
+    """Uniform-budget twin of ``compact_collect_flat``: reply is
+    (L, N, B, ...) and is flattened over the (destination, budget) axes."""
+    L = reply.shape[0]
+    return compact_collect_flat(
+        reply_idx,
+        reply.reshape((L, reply.shape[1] * reply.shape[2]) + reply.shape[3:]),
+        fill)
+
+
+# ---------------------------------------------------------------------------
+# ragged plan: histogram-sized per-destination budgets, packed (L, Σbᵢ)
+# ---------------------------------------------------------------------------
+def plan_ragged_spec(dest: jax.Array, valid: jax.Array, n_nodes: int,
+                     align: int = 8) -> RaggedSpec:
+    """Measure per-destination traffic and build a lossless ``RaggedSpec``.
+
+    dest/valid: *concrete* (L, q) arrays — budgets become Python ints, so
+    this must run eagerly (outside jit); calling it on tracers raises.
+    Budget ``d`` is the per-row ``chunk_router`` histogram maximum over all
+    source rows — the smallest per-destination segment no row can overflow
+    — rounded UP to a multiple of ``align`` (clamped to the row length q;
+    zero-traffic destinations stay 0).  Rounding never loses a request; it
+    exists to collapse the jit-shape space: exact maxima would mint a
+    fresh ``RaggedSpec`` (→ a fresh XLA compile of the engine ops) for
+    nearly every hashed batch, while quantized budgets land on a handful
+    of shapes per workload.  ``align=1`` gives exact sizing.
+    """
+    d = jnp.where(jnp.asarray(valid), jnp.asarray(dest).astype(jnp.int32),
+                  n_nodes)
+    q = d.shape[1]
+    counts = histogram_rows2d(d, n_bins=n_nodes + 1)[:, :n_nodes]
+    budgets = np.asarray(counts).max(axis=0) if counts.shape[0] else \
+        np.zeros(n_nodes, np.int64)
+    budgets = np.where(budgets > 0,
+                       np.minimum(q, -(-budgets // align) * align), 0)
+    return RaggedSpec(tuple(int(b) for b in budgets))
+
+
+def _compact_plan_ragged(dest: jax.Array, valid: jax.Array, n_nodes: int,
+                         spec: RaggedSpec
+                         ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Ragged twin of ``_compact_plan``: per-destination segment widths.
+
+    Returns (send_idx (L, Σbᵢ), reply_idx (L, q), overflow (L,)).  When
+    ``spec`` comes from ``plan_ragged_spec`` on the same dest/valid,
+    overflow is zero by construction; it is still computed so property
+    tests can assert the invariant.
+    """
+    L, q = dest.shape
+    d = jnp.where(valid, dest, n_nodes).astype(jnp.int32)
+    order = jnp.argsort(d, axis=1).astype(jnp.int32)         # stable
+    sd = jnp.take_along_axis(d, order, axis=1)
+    counts = histogram_rows2d(d, n_bins=n_nodes + 1)[:, :n_nodes]
+    start = jnp.cumsum(counts, axis=1) - counts              # exclusive
+    dcol = jnp.asarray(spec.dcol)                            # (S,)
+    jcol = jnp.asarray(spec.jcol)                            # (S,)
+    if spec.total:
+        pos = start[:, dcol] + jcol[None, :]                 # (L, S)
+        src = jnp.take_along_axis(order, jnp.clip(pos, 0, q - 1), axis=1)
+        send_idx = jnp.where(jcol[None, :] < counts[:, dcol], src, -1)
+    else:
+        send_idx = jnp.zeros((L, 0), jnp.int32)
+    b_arr = jnp.asarray(np.asarray(spec.budgets + (0,), np.int32))
+    off_arr = jnp.asarray(np.concatenate([spec.offsets, [0]]).astype(
+        np.int32))
+    take = jnp.minimum(counts, b_arr[None, :n_nodes])
+    overflow = (counts - take).sum(axis=1).astype(jnp.int32)
+    startx = jnp.concatenate(
+        [start, jnp.zeros((L, 1), jnp.int32)], axis=1)       # bin n_nodes
+    rank = jnp.arange(q, dtype=jnp.int32)[None, :] - \
+        jnp.take_along_axis(startx, sd, axis=1)
+    slot = jnp.where((sd < n_nodes) & (rank < b_arr[sd]),
+                     off_arr[sd] + rank, -1)
+    rows = jnp.broadcast_to(jnp.arange(L)[:, None], (L, q))
+    reply_idx = jnp.zeros((L, q), jnp.int32).at[rows, order].set(slot)
+    return send_idx, reply_idx, overflow
+
+
+def ragged_exchange(x: jax.Array, spec: RaggedSpec,
+                    n_nodes: int) -> jax.Array:
+    """Stacked (single-device) exchange of a packed ragged send buffer.
+
+    x: (L = n_nodes, Σbᵢ, ...) — source-major packed segments.  Returns the
+    receiver view (n_nodes, n_nodes·bmax, ...): destination ``d`` sees its
+    own segment from every source, padded to the widest segment ``bmax``
+    with zero rows (the pad slots carry the sentinel occupancy 0, so the
+    fused ones-column trick marks them invalid at no extra traffic).
+
+    Only the Σbᵢ packed columns are modeled as crossing the exchange — the
+    pad-to-bmax happens on the receiver.  There is deliberately no mesh
+    twin: ``lax.all_to_all`` needs uniform splits, which is exactly why the
+    mesh backend keeps uniform budgets + the carry round instead.
+    """
+    col = jnp.asarray(spec.recv_cols)                    # (n_nodes·bmax,)
+    if col.shape[0] == 0:
+        return jnp.zeros((n_nodes, 0) + x.shape[2:], x.dtype)
+    xg = jnp.take(x, jnp.maximum(col, 0), axis=1)        # (L, N·bmax, ...)
+    mask = (col >= 0).reshape((1, -1) + (1,) * (x.ndim - 2))
+    xg = jnp.where(mask, xg, 0)
+    xg = xg.reshape((x.shape[0], n_nodes, spec.bmax) + x.shape[2:])
+    return jnp.swapaxes(xg, 0, 1).reshape(
+        (n_nodes, x.shape[0] * spec.bmax) + x.shape[2:])
+
+
+def ragged_reply_exchange(reply: jax.Array, spec: RaggedSpec,
+                          n_nodes: int) -> jax.Array:
+    """Inverse of ``ragged_exchange`` for the reply direction.
+
+    reply: (n_nodes, n_nodes·bmax, ...) — replies computed at the receiver
+    in padded receive order.  Returns (n_nodes, Σbᵢ, ...): each source's
+    packed reply columns, ready for ``compact_collect_flat``.
+    """
+    if spec.total == 0:
+        return jnp.zeros((n_nodes, 0) + reply.shape[2:], reply.dtype)
+    r = reply.reshape((n_nodes, n_nodes, spec.bmax) + reply.shape[2:])
+    rT = jnp.swapaxes(r, 0, 1)                       # (src, dst, bmax, ...)
+    flat = rT.reshape((n_nodes, n_nodes * spec.bmax) + reply.shape[2:])
+    return jnp.take(flat, jnp.asarray(spec.send_cols), axis=1)
 
 
 def _add_dropped(state: BBState, extra: jax.Array) -> BBState:
     return BBState(state.data, state.data_keys, state.data_count,
                    state.meta_key, state.meta_size, state.meta_loc,
                    state.meta_count, state.dropped + extra)
+
+
+def _carry_budget(q: int, b: int) -> int:
+    """Static budget of the lossless carry round after a round at ``b``.
+
+    A destination receives at most ``q`` valid requests from one source
+    row, round 1 serves ``min(count, b)`` of them, so the residual per
+    (source, destination) pair is at most ``q − b`` — one carry round at
+    that budget always terminates with zero residual, which is the
+    convergence bound that makes two static rounds sufficient at ANY
+    budget ≥ 1.
+    """
+    return max(0, q - b)
+
+
+def _carry_taken(overflow: jax.Array, global_sum: Callable) -> jax.Array:
+    """Scalar predicate gating the carry round (shared by every node).
+
+    ``global_sum`` must reduce over ALL nodes (``jnp.sum`` on the stacked
+    backend where every row is local; a psum-composed reduction under
+    shard_map) so the cond takes the same branch on every device and the
+    collectives inside stay aligned.
+    """
+    return global_sum(overflow) > 0
 
 
 def exchange_footprint(policy, q: int, words: int,
@@ -337,7 +589,11 @@ def exchange_footprint(policy, q: int, words: int,
     Counts every exchanged buffer (requests, masks and replies) for one
     write, one read (no broadcast fallback) and one metadata round; the
     benchmark harness converts these to bytes.  Dense buffers carry q slots
-    per (src, dst) pair; compacted ones carry the per-destination budget.
+    per (src, dst) pair; uniform compacted ones the per-destination budget;
+    ragged ones the measured Σbᵢ packed columns per source row.  The
+    ``*_carry_elems`` fields are the worst case of the cond-skipped
+    lossless carry round — 0 when no overflow occurs (the common case) and
+    0 by construction for ragged/lossless-B=q plans.
     """
     policy = as_policy(policy)
     N = policy.n_nodes
@@ -346,12 +602,29 @@ def exchange_footprint(policy, q: int, words: int,
                                                              config)
     else:
         bd = bm = q
-    pairs = N * N
-    meta = pairs * bm * (4 + 1) + pairs * bm * 3   # op/key/size/loc+mask → replies
-    write = pairs * bd * (2 + words + 1) + meta    # keys+payload+mask, then meta
-    read = pairs * bd * (2 + 1) + pairs * bd * (words + 1)
+    # packed request columns per source row, over all destinations
+    cols_d = config.data_spec.total if (
+        config.kind == "compacted" and config.data_spec is not None
+    ) else N * bd
+    cols_m = config.meta_spec.total if (
+        config.kind == "compacted" and config.meta_spec is not None
+    ) else N * bm
+    w_meta, w_wr, w_rd = (4 + 1) + 3, (2 + words + 1), (2 + 1) + (words + 1)
+    meta = N * cols_m * w_meta                # op/key/size/loc+mask → replies
+    write = N * cols_d * w_wr + meta          # keys+payload+mask, then meta
+    read = N * cols_d * w_rd
+    carry = {"write_carry_elems": 0, "read_carry_elems": 0,
+             "meta_carry_elems": 0}
+    if config.kind == "compacted" and config.lossless:
+        cd = 0 if config.data_spec is not None else _carry_budget(q, bd)
+        cm = 0 if config.meta_spec is not None else _carry_budget(q, bm)
+        carry = {"write_carry_elems": N * N * cd * w_wr + N * N * cm * w_meta,
+                 "read_carry_elems": N * N * cd * w_rd,
+                 "meta_carry_elems": N * N * cm * w_meta}
     return {"kind": config.kind, "data_budget": bd, "meta_budget": bm,
-            "write_elems": write, "read_elems": read, "meta_elems": meta}
+            "lossless": config.lossless,
+            "write_elems": write, "read_elems": read, "meta_elems": meta,
+            **carry}
 
 
 # ---------------------------------------------------------------------------
@@ -521,7 +794,8 @@ def forward_write(state: BBState, layout, path_hash: jax.Array,
                   mode: Optional[jax.Array] = None,
                   exchange: Callable = stacked_exchange,
                   node_ids: Optional[jax.Array] = None,
-                  config: ExchangeConfig = DENSE) -> BBState:
+                  config: ExchangeConfig = DENSE,
+                  global_sum: Callable = jnp.sum) -> BBState:
     """Each node writes a batch of chunks. path_hash/chunk_id/valid: (L, q);
     payload: (L, q, w).  L is the local node count (N stacked, 1 under
     shard_map); ``node_ids`` are the global ranks of the local nodes.
@@ -533,7 +807,12 @@ def forward_write(state: BBState, layout, path_hash: jax.Array,
     fast paths on that static set (``BBClient`` enforces this).
 
     ``config`` picks the exchange data plane: dense bucketize broadcast or
-    the sort/gather compacted plan (budget overflow → ``dropped``)."""
+    the sort/gather compacted plan — ragged one-round when
+    ``config.data_spec`` is set, else uniform budgets whose overflow is
+    carried into a cond-skipped second round (``config.lossless``, the
+    default) or dropped and accounted (``lossless=False``).
+    ``global_sum`` must reduce an (L,) array over ALL nodes (psum-composed
+    under shard_map) — it gates the carry round consistently."""
     policy = as_policy(layout)
     N = policy.n_nodes
     L = state.data.shape[0]
@@ -552,7 +831,7 @@ def forward_write(state: BBState, layout, path_hash: jax.Array,
         # (the Mode-1/4 fast path, decided statically from the policy)
         state = _append_chunks(state, keys, payload, valid)
     elif config.kind == "compacted":
-        B = data_budget(policy, path_hash.shape[1], config)
+        q = path_hash.shape[1]
         # keys, payload and a slot-occupancy column ride one fused buffer:
         # one gather, ONE collective (a mesh all_to_all per exchange());
         # empty budget slots gather the sentinel zero row, so the trailing
@@ -560,17 +839,49 @@ def forward_write(state: BBState, layout, path_hash: jax.Array,
         fused = jnp.concatenate(
             [keys, payload, jnp.ones(keys.shape[:-1] + (1,), jnp.int32)],
             axis=-1)                                # (L, q, 2+w+1)
-        buffers, reply_idx, overflow = compact_bucketize(
-            dest, valid, N, B, {"fused": fused})
-        rf = exchange(buffers["fused"])           # (L, N_src, B, 2+w+1)
-        state = _append_chunks(state, rf[..., :2].reshape(L, -1, 2),
-                               rf[..., 2:-1].reshape(L, N * B, -1),
-                               (rf[..., -1] > 0).reshape(L, -1))
-        state = _add_dropped(state, overflow)
-        # a write whose payload overflowed the data budget must not
-        # register metadata either — a phantom entry would make stat()
-        # report a chunk that read() can never return
-        meta_valid = valid & (reply_idx >= 0)
+        if config.data_spec is not None:
+            # ragged single round: per-destination segments sized from the
+            # measured histograms cover every request — lossless, and the
+            # receive order is exactly the dense source-major slot order
+            spec = config.data_spec
+            send_idx, _, _ = _compact_plan_ragged(dest, valid, N, spec)
+            rf = ragged_exchange(gather_rows_batched(fused, send_idx),
+                                 spec, N)           # (L, N·bmax, 2+w+1)
+            state = _append_chunks(state, rf[..., :2], rf[..., 2:-1],
+                                   rf[..., -1] > 0)
+        else:
+            B = data_budget(policy, q, config)
+            buffers, reply_idx, overflow = compact_bucketize(
+                dest, valid, N, B, {"fused": fused})
+            rf = exchange(buffers["fused"])       # (L, N_src, B, 2+w+1)
+            state = _append_chunks(state, rf[..., :2].reshape(L, -1, 2),
+                                   rf[..., 2:-1].reshape(L, N * B, -1),
+                                   (rf[..., -1] > 0).reshape(L, -1))
+            if config.lossless and B < q:
+                # carry round: requests beyond the round-1 budget go into
+                # a second exchange at the worst-case residual budget
+                # q − B (see _carry_budget); the whole round is inside a
+                # cond so a non-overflowing call pays nothing
+                resid = valid & (reply_idx < 0)
+                B2 = _carry_budget(q, B)
+
+                def _carry(st):
+                    buf2, _, _ = compact_bucketize(dest, resid, N, B2,
+                                                   {"fused": fused})
+                    rf2 = exchange(buf2["fused"])
+                    return _append_chunks(
+                        st, rf2[..., :2].reshape(L, -1, 2),
+                        rf2[..., 2:-1].reshape(L, N * B2, -1),
+                        (rf2[..., -1] > 0).reshape(L, -1))
+
+                state = jax.lax.cond(_carry_taken(overflow, global_sum),
+                                     _carry, lambda st: st, state)
+            elif not config.lossless:
+                state = _add_dropped(state, overflow)
+                # a write whose payload overflowed the data budget must
+                # not register metadata either — a phantom entry would
+                # make stat() report a chunk that read() cannot return
+                meta_valid = valid & (reply_idx >= 0)
     else:
         # mask-combined path: local-mode requests route to self through the
         # same exchange, hashed modes to their owners — one round for all
@@ -590,7 +901,7 @@ def forward_write(state: BBState, layout, path_hash: jax.Array,
                     jnp.full_like(dest, -1))
     state, _, _, _ = meta_op(state, policy, op, path_hash,
                              chunk_id + 1, loc, meta_valid, mode, exchange,
-                             node_ids, config)
+                             node_ids, config, global_sum)
     return state
 
 
@@ -599,9 +910,14 @@ def forward_read(state: BBState, layout, path_hash: jax.Array,
                  mode: Optional[jax.Array] = None,
                  exchange: Callable = stacked_exchange,
                  node_ids: Optional[jax.Array] = None,
-                 config: ExchangeConfig = DENSE
+                 config: ExchangeConfig = DENSE,
+                 global_sum: Callable = jnp.sum
                  ) -> Tuple[jax.Array, jax.Array]:
-    """Each node reads a batch of chunks → (payload (L, q, w), found (L, q))."""
+    """Each node reads a batch of chunks → (payload (L, q, w), found (L, q)).
+
+    See ``forward_write`` for the ``config``/``global_sum`` semantics; in
+    lossless compacted mode read requests beyond the round-1 budget are
+    retried in the carry round rather than answered found=False."""
     policy = as_policy(layout)
     N = policy.n_nodes
     L = state.data.shape[0]
@@ -618,16 +934,15 @@ def forward_read(state: BBState, layout, path_hash: jax.Array,
             state, policy, jnp.full_like(path_hash, OP_STAT), path_hash,
             jnp.zeros_like(path_hash), jnp.full_like(path_hash, -1),
             valid & (mode == LayoutMode.HYBRID), mode, exchange, node_ids,
-            config)
+            config, global_sum)
         data_loc = jnp.where(found_m & (loc >= 0), loc,
                              jnp.broadcast_to(client, path_hash.shape))
     dest = route_data(mode, N, path_hash, chunk_id, client,
                       data_loc=data_loc, xp=jnp)
 
     if config.kind == "compacted":
-        B = data_budget(policy, path_hash.shape[1], config)
         payload, found = _compact_lookup(state, dest, keys, valid, exchange,
-                                         N, B)
+                                         N, policy, config, global_sum)
     else:
         payload, found = _routed_lookup(state, dest, keys, valid, exchange,
                                         N)
@@ -660,14 +975,30 @@ def _routed_lookup(state, dest, keys, valid, exchange, N):
     return payload, found & valid
 
 
-def _compact_lookup(state, dest, keys, valid, exchange, N, budget):
-    """Compacted twin of ``_routed_lookup``: requests beyond a destination's
-    budget are not sent and simply come back found=False (local-mode misses
-    still reach the broadcast fallback in ``forward_read``)."""
+def _compact_lookup_ragged(state, dest, keys, valid, N, spec):
+    """Ragged single-round lookup: segments cover every request, so every
+    valid request reaches its destination and gets its reply back."""
     L = state.data.shape[0]
     req = jnp.concatenate(
         [keys, jnp.ones(keys.shape[:-1] + (1,), jnp.int32)], axis=-1)
-    buffers, reply_idx, _ = compact_bucketize(
+    send_idx, reply_idx, _ = _compact_plan_ragged(dest, valid, N, spec)
+    rk = ragged_exchange(gather_rows_batched(req, send_idx), spec, N)
+    pay, fnd = _lookup_chunks(state, rk[..., :2], rk[..., 2] > 0)
+    reply = jnp.concatenate([pay, fnd[..., None].astype(jnp.int32)],
+                            axis=-1)
+    rr = ragged_reply_exchange(reply, spec, N)          # (L, Σbᵢ, w+1)
+    out = compact_collect_flat(reply_idx, rr)
+    return out[..., :-1], (out[..., -1] > 0) & valid
+
+
+def _compact_lookup_round(state, dest, keys, valid, exchange, N, budget):
+    """One uniform-budget lookup round → (payload, found, reply_idx,
+    overflow); requests beyond the budget come back found=False with
+    reply_idx == -1 so the caller can retry them in the carry round."""
+    L = state.data.shape[0]
+    req = jnp.concatenate(
+        [keys, jnp.ones(keys.shape[:-1] + (1,), jnp.int32)], axis=-1)
+    buffers, reply_idx, overflow = compact_bucketize(
         dest, valid, N, budget, {"req": req})
     rk = exchange(buffers["req"])                       # (L, N_src, B, 3)
     pay, fnd = _lookup_chunks(state, rk[..., :2].reshape(L, -1, 2),
@@ -677,7 +1008,39 @@ def _compact_lookup(state, dest, keys, valid, exchange, N, budget):
                             axis=-1)
     reply = exchange(reply.reshape(L, N, budget, -1))   # back to requesters
     out = compact_collect(reply_idx, reply)
-    return out[..., :-1], (out[..., -1] > 0) & valid
+    return (out[..., :-1], (out[..., -1] > 0) & valid, reply_idx, overflow)
+
+
+def _compact_lookup(state, dest, keys, valid, exchange, N, policy, config,
+                    global_sum):
+    """Compacted twin of ``_routed_lookup``: ragged one round, or uniform
+    budget + lossless carry round, or legacy drop (found=False) — per
+    ``config``.  Local-mode misses still reach the broadcast fallback in
+    ``forward_read`` either way."""
+    if config.data_spec is not None:
+        return _compact_lookup_ragged(state, dest, keys, valid, N,
+                                      config.data_spec)
+    q = keys.shape[1]
+    budget = data_budget(policy, q, config)
+    payload, found, reply_idx, overflow = _compact_lookup_round(
+        state, dest, keys, valid, exchange, N, budget)
+    if config.lossless and budget < q:
+        resid = valid & (reply_idx < 0)
+        B2 = _carry_budget(q, budget)
+
+        def _carry(_):
+            pay2, fnd2, _, _ = _compact_lookup_round(
+                state, dest, keys, resid, exchange, N, B2)
+            return pay2, fnd2
+
+        def _skip(_):
+            return jnp.zeros_like(payload), jnp.zeros_like(found)
+
+        pay2, fnd2 = jax.lax.cond(_carry_taken(overflow, global_sum),
+                                  _carry, _skip, 0)
+        payload = jnp.where(resid[..., None], pay2, payload)
+        found = jnp.where(resid, fnd2, found)
+    return payload, found
 
 
 def _broadcast_lookup(state, keys, valid, exchange, N):
@@ -699,18 +1062,64 @@ def _broadcast_lookup(state, keys, valid, exchange, N):
     return jnp.where(found_any[..., None], payload, 0), found_any & valid
 
 
+def _compact_meta_round(state, owner, op, path_hash, size, loc, valid,
+                        exchange, N, budget):
+    """One uniform-budget metadata round → (state, found, size, loc,
+    reply_idx, overflow); ops beyond the budget are left unapplied with
+    reply_idx == -1 so the caller can retry them in the carry round."""
+    L, q = path_hash.shape
+    # one fused gather+exchange for the request (the trailing ones-column
+    # is the receiver's validity mask — empty budget slots gather the
+    # sentinel zero row), one fused reply collective
+    fields = jnp.stack([op, path_hash, size, loc,
+                        jnp.ones_like(op)], axis=-1)         # (L, q, 5)
+    buffers, reply_idx, overflow = compact_bucketize(
+        owner, valid, N, budget, {"fields": fields})
+    r = exchange(buffers["fields"]).reshape(L, -1, 5)
+    state, fnd, r_size, r_loc = _meta_apply(
+        state, r[..., 0], r[..., 1], r[..., 2], r[..., 3], r[..., 4] > 0)
+    reply = jnp.stack([fnd.astype(jnp.int32), r_size, r_loc], axis=-1)
+    reply = exchange(reply.reshape(L, N, budget, 3))
+    # fill=-1 matches the dense plane's not-found value for size/loc
+    # and still reads as found=False in the first column
+    out = compact_collect(reply_idx, reply, fill=-1)
+    return (state, (out[..., 0] > 0) & valid, out[..., 1], out[..., 2],
+            reply_idx, overflow)
+
+
+def _compact_meta_ragged(state, owner, op, path_hash, size, loc, valid, N,
+                         spec):
+    """Ragged single-round metadata exchange (lossless by construction)."""
+    fields = jnp.stack([op, path_hash, size, loc,
+                        jnp.ones_like(op)], axis=-1)         # (L, q, 5)
+    send_idx, reply_idx, _ = _compact_plan_ragged(owner, valid, N, spec)
+    r = ragged_exchange(gather_rows_batched(fields, send_idx), spec, N)
+    state, fnd, r_size, r_loc = _meta_apply(
+        state, r[..., 0], r[..., 1], r[..., 2], r[..., 3], r[..., 4] > 0)
+    reply = jnp.stack([fnd.astype(jnp.int32), r_size, r_loc], axis=-1)
+    rr = ragged_reply_exchange(reply, spec, N)
+    out = compact_collect_flat(reply_idx, rr, fill=-1)
+    return state, (out[..., 0] > 0) & valid, out[..., 1], out[..., 2]
+
+
 def meta_op(state: BBState, layout, op: jax.Array,
             path_hash: jax.Array, size: jax.Array, loc: jax.Array,
             valid: jax.Array, mode: Optional[jax.Array] = None,
             exchange: Callable = stacked_exchange,
             node_ids: Optional[jax.Array] = None,
-            config: ExchangeConfig = DENSE
+            config: ExchangeConfig = DENSE,
+            global_sum: Callable = jnp.sum
             ) -> Tuple[BBState, jax.Array, jax.Array, jax.Array]:
     """Batched metadata operations routed to their per-request-mode owners.
 
     Returns (state, found (L,q), size (L,q), loc (L,q)).  Under a compacted
-    config, ops beyond the per-owner budget are dropped: they return
-    found=False and are counted in ``dropped`` at the requesting node."""
+    config, ops beyond the per-owner budget are carried into the lossless
+    second round (``config.lossless``, default) or — with
+    ``lossless=False`` — dropped: found=False replies, counted in
+    ``dropped`` at the requesting node.  The carry round applies the
+    residual ops *after* every round-1 op; per-op client batches (one
+    opcode per call, CREATE idempotent / UPDATE max-merge) are
+    order-insensitive, so replies match the dense plane exactly."""
     policy = as_policy(layout)
     N = policy.n_nodes
     L = state.data.shape[0]
@@ -720,25 +1129,35 @@ def meta_op(state: BBState, layout, op: jax.Array,
     owner = route_meta(mode, N, policy.n_md_servers, path_hash, client,
                        xp=jnp)
     if config.kind == "compacted":
+        if config.meta_spec is not None:
+            return _compact_meta_ragged(state, owner, op, path_hash, size,
+                                        loc, valid, N, config.meta_spec)
         B = meta_budget(policy, q, config)
-        # one fused gather+exchange for the request (the trailing
-        # ones-column is the receiver's validity mask — empty budget slots
-        # gather the sentinel zero row), one fused reply collective
-        fields = jnp.stack([op, path_hash, size, loc,
-                            jnp.ones_like(op)], axis=-1)     # (L, q, 5)
-        buffers, reply_idx, overflow = compact_bucketize(
-            owner, valid, N, B, {"fields": fields})
-        r = exchange(buffers["fields"]).reshape(L, -1, 5)
-        state, fnd, r_size, r_loc = _meta_apply(
-            state, r[..., 0], r[..., 1], r[..., 2], r[..., 3],
-            r[..., 4] > 0)
-        reply = jnp.stack([fnd.astype(jnp.int32), r_size, r_loc], axis=-1)
-        reply = exchange(reply.reshape(L, N, B, 3))
-        # fill=-1 matches the dense plane's not-found value for size/loc
-        # and still reads as found=False in the first column
-        out = compact_collect(reply_idx, reply, fill=-1)
-        state = _add_dropped(state, overflow)
-        return state, (out[..., 0] > 0) & valid, out[..., 1], out[..., 2]
+        state, found, r_size, r_loc, reply_idx, overflow = \
+            _compact_meta_round(state, owner, op, path_hash, size, loc,
+                                valid, exchange, N, B)
+        if config.lossless and B < q:
+            resid = valid & (reply_idx < 0)
+            B2 = _carry_budget(q, B)
+
+            def _carry(st):
+                st2, f2, s2, l2, _, _ = _compact_meta_round(
+                    st, owner, op, path_hash, size, loc, resid, exchange,
+                    N, B2)
+                return st2, f2, s2, l2
+
+            def _skip(st):
+                return (st, jnp.zeros_like(found),
+                        jnp.full_like(r_size, -1), jnp.full_like(r_loc, -1))
+
+            state, f2, s2, l2 = jax.lax.cond(
+                _carry_taken(overflow, global_sum), _carry, _skip, state)
+            found = jnp.where(resid, f2, found)
+            r_size = jnp.where(resid, s2, r_size)
+            r_loc = jnp.where(resid, l2, r_loc)
+        elif not config.lossless:
+            state = _add_dropped(state, overflow)
+        return state, found, r_size, r_loc
     buckets, hit = bucketize(
         owner, valid, N,
         {"op": op, "key": path_hash, "size": size, "loc": loc})

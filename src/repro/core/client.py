@@ -16,11 +16,20 @@ Backends:
 
 Both backends run the *identical* engine code (burst_buffer.py), so results
 are element-for-element equal — asserted in tests/test_policy.py.
-Orthogonally, ``exchange="compacted"`` (default) or ``"dense"`` picks the
-exchange data plane: compacted sort/gather with static per-destination
-budgets (O(N·q) exchange volume, overflow dropped and accounted) vs the
-dense bucketize broadcast (O(N²·q), the bit-for-bit parity oracle) — see
-DESIGN.md §7 and tests/test_compacted_exchange.py.
+Orthogonally, ``exchange=`` picks the exchange data plane *per call*:
+
+* ``"auto"`` (default) — selects dense vs compacted per call from the
+  measured (N, q, words) crossover of the committed benchmark sweep
+  (exchange_select.py); dense wins tiny exchanges, compacted wins at scale.
+* ``"compacted"`` — sort-based routing + budgeted Pallas gather, O(N·q)
+  exchange volume.  On the stacked backend budgets are *ragged*: sized per
+  destination from the measured ``chunk_router`` histograms of each call
+  (lossless by construction).  On the mesh backend — or with an explicit
+  ``budget=``/``ragged=False`` — budgets are uniform and jit-static, and
+  overflow is carried into a rarely-taken second exchange round
+  (``lossless=True``, default) instead of dropped.
+* ``"dense"`` — the PR-1 O(N²·q) bucketize broadcast, kept as the
+  bit-for-bit parity oracle.
 
 Requests are batched structs (``BBRequest``): node-major arrays shaped
 ``(n_nodes, q)``.  ``BBClient.encode`` builds one from path strings, hashing
@@ -29,26 +38,37 @@ each path and resolving its scope against the policy at the client boundary
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 from dataclasses import dataclass
-from typing import Optional, Sequence, Tuple, Union
+from typing import Dict, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import burst_buffer as bb
-from repro.core.layouts import str_hash
+from repro.core import exchange_select
+from repro.core.layouts import LayoutMode, route_data, route_meta, str_hash
 from repro.core.policy import LayoutPolicy, as_policy
+
+EXCHANGE_KINDS = ("auto", "dense", "compacted")
 
 
 @dataclass
 class BBRequest:
     """A batched I/O request: node-major arrays shaped (n_nodes, q).
 
-    ``payload`` only for writes; ``size``/``loc`` only for metadata ops.
-    ``mode`` overrides the policy; otherwise ``scope_hash`` is resolved via
-    ``policy.resolve``; with neither, the policy default applies uniformly.
+    ``path_hash``: (N, q) int32 31-bit FNV path hashes (see ``str_hash``).
+    ``chunk_id``: (N, q) int32 chunk index within the file; 0 when omitted.
+    ``payload``: (N, q, words) chunk data — writes only.
+    ``valid``: (N, q) bool request-slot mask; all-true when omitted.
+    ``scope_hash``: (N, q) int32 policy-scope hashes (``encode`` fills
+    these); resolved to per-request modes via ``policy.resolve``.
+    ``mode``: (N, q) int32 explicit per-request ``LayoutMode`` values —
+    overrides scope resolution; must stay within ``policy.modes_present()``.
+    ``size``/``loc``: (N, q) int32 metadata fields (create/update size,
+    Mode-4 data-location rank) — metadata ops only.
     """
 
     path_hash: jax.Array
@@ -61,14 +81,16 @@ class BBRequest:
     loc: Optional[jax.Array] = None
 
 
-@functools.lru_cache(maxsize=128)
+@functools.lru_cache(maxsize=256)
 def _stacked_ops_for(engine_key, config: bb.ExchangeConfig):
     """Jitted stacked ops, cached per engine specialization.
 
-    Keyed on ``policy.engine_key()`` (not the policy object): scope strings
-    never reach the engine, so every client whose policy traces to the same
-    program — and every re-construction of the same client — shares one set
-    of jitted ops and XLA's trace cache, instead of retracing per instance.
+    Keyed on ``policy.engine_key()`` (not the policy object) × the full
+    ``ExchangeConfig`` — scope strings never reach the engine, so every
+    client whose policy traces to the same program shares one set of
+    jitted ops and XLA's trace cache.  Ragged configs carry their
+    ``RaggedSpec`` in the key, so each measured traffic shape gets (and
+    re-uses) its own specialization.
     """
     policy = LayoutPolicy.for_engine_key(engine_key)
 
@@ -89,6 +111,7 @@ def _stacked_ops_for(engine_key, config: bb.ExchangeConfig):
 
 def _build_stacked_ops(policy: LayoutPolicy,
                        config: bb.ExchangeConfig = bb.DENSE):
+    """Resolve ``policy`` to its engine key and fetch the cached ops."""
     return _stacked_ops_for(policy.engine_key(), config)
 
 
@@ -107,41 +130,61 @@ class BBClient:
     def __init__(self, policy, backend: Union[str, "jax.sharding.Mesh"]
                  = "stacked", *, cap: int = 256, words: int = 16,
                  mcap: int = 256, state: Optional[bb.BBState] = None,
-                 exchange: str = "compacted", budget: Optional[int] = None,
-                 meta_budget: Optional[int] = None, capacity: float = 2.0):
-        """``exchange`` picks the data plane: "compacted" (default —
-        sort-based routing, budgeted Pallas gather, O(N·q) exchange bytes)
-        or "dense" (the PR-1 O(N²·q) bucketize broadcast, kept as the
-        bit-for-bit parity oracle; it also wins at tiny batches where the
-        sort/gather bookkeeping dominates).  ``budget``/``meta_budget``
-        override the static per-destination slot counts; ``capacity`` is
-        the auto-sizing headroom over the uniform-hash expectation.
-        Requests beyond a destination's budget are dropped and accounted
-        (``state.dropped``; found=False on reads)."""
+                 exchange: str = "auto", budget: Optional[int] = None,
+                 meta_budget: Optional[int] = None, capacity: float = 2.0,
+                 lossless: bool = True, ragged: bool = True):
+        """Build a client holding fresh (or adopted) node tables.
+
+        Args:
+          policy: ``LayoutPolicy`` (or legacy ``LayoutParams``/mode) — the
+            per-scope layout plan; fixes ``n_nodes``.
+          backend: ``"stacked"`` or a ``jax.sharding.Mesh``.
+          cap/words/mcap: per-node data-slot count, chunk width (int32
+            words) and metadata-slot count of the held ``BBState``.
+          state: adopt an existing ``BBState`` instead of ``init_state``.
+          exchange: ``"auto"`` (default — pick dense vs compacted per call
+            from the measured benchmark crossover), ``"dense"``, or
+            ``"compacted"``.
+          budget/meta_budget: explicit uniform per-destination slot counts
+            for the compacted data/metadata exchange (disables ragged
+            sizing for that exchange); ``None`` auto-sizes.
+          capacity: headroom factor of the uniform auto budgets over the
+            uniform-hash expectation ``q/N``.
+          lossless: carry uniform-budget overflow into a second exchange
+            round (default) instead of the legacy drop-and-account
+            semantics (``dropped`` counter, found=False replies).
+          ragged: size compacted budgets per destination from each call's
+            measured histograms (stacked backend only; jit ops then
+            specialize per traffic shape).  Ignored on a mesh backend,
+            whose all_to_all needs uniform splits.
+        """
         self.policy = as_policy(policy)
         self.backend = backend
         self.n_nodes = self.policy.n_nodes
         self.words = words
+        if exchange not in EXCHANGE_KINDS:
+            raise ValueError(f"unknown exchange {exchange!r}; pass one of "
+                             f"{EXCHANGE_KINDS}")
+        self.exchange_mode = exchange
         self.exchange_config = bb.ExchangeConfig(
-            kind=exchange, budget=budget, meta_budget=meta_budget,
-            capacity=capacity)
+            kind=exchange if exchange != "auto" else "compacted",
+            budget=budget, meta_budget=meta_budget, capacity=capacity,
+            lossless=lossless)
         self.state = (state if state is not None
                       else bb.init_state(self.n_nodes, cap, words, mcap))
         self._path_codes = functools.lru_cache(maxsize=1 << 16)(
             self._path_codes_uncached)
-        if isinstance(backend, str):
-            if backend != "stacked":
-                raise ValueError(f"unknown backend {backend!r}; pass "
-                                 "'stacked' or a jax.sharding.Mesh")
-            self._write, self._read, self._meta = _build_stacked_ops(
-                self.policy, self.exchange_config)
-        else:
-            from repro.core.mesh_engine import build_mesh_ops
-            self._write, self._read, self._meta = build_mesh_ops(
-                backend, self.policy, self.exchange_config)
+        self._pick_cache: Dict[int, str] = {}
+        self._is_mesh = not isinstance(backend, str)
+        if not self._is_mesh and backend != "stacked":
+            raise ValueError(f"unknown backend {backend!r}; pass "
+                             "'stacked' or a jax.sharding.Mesh")
+        self._mesh_ops: Dict[bb.ExchangeConfig, Tuple] = {}
+        self.ragged = bool(ragged) and not self._is_mesh
 
     # ---- request construction ----------------------------------------------
     def _path_codes_uncached(self, path: str) -> Tuple[int, int]:
+        """Uncached path → (path_hash, scope_hash) resolution."""
         return str_hash(path), self.policy.scope_hash_of(path)
 
     def encode(self, paths: Sequence[Sequence[str]],
@@ -168,6 +211,7 @@ class BBClient:
             scope_hash=jnp.asarray(sh))
 
     def _modes(self, req: BBRequest) -> jax.Array:
+        """Resolve the per-request mode array for one request batch."""
         if req.mode is not None:
             # the engine specializes its fast paths on the STATIC set
             # policy.modes_present(); an override outside that set would be
@@ -187,12 +231,90 @@ class BBClient:
 
     @staticmethod
     def _valid(req: BBRequest) -> jax.Array:
+        """Request-slot mask; all-true when the request omits one."""
         return (jnp.ones(req.path_hash.shape, bool) if req.valid is None
                 else req.valid)
 
     def _chunk_id(self, req: BBRequest) -> jax.Array:
+        """Chunk-id array; zeros (metadata convention) when omitted."""
         return (jnp.zeros(req.path_hash.shape, jnp.int32)
                 if req.chunk_id is None else req.chunk_id)
+
+    # ---- per-call exchange dispatch -----------------------------------------
+    def _select_kind(self, q: int) -> str:
+        """Exchange kind for one call: fixed, or the measured crossover."""
+        if self.exchange_mode != "auto":
+            return self.exchange_mode
+        kind = self._pick_cache.get(q)
+        if kind is None:
+            kind = exchange_select.pick_backend(self.n_nodes, q, self.words)
+            self._pick_cache[q] = kind
+        return kind
+
+    def _client_ranks(self) -> jax.Array:
+        return jnp.arange(self.n_nodes, dtype=jnp.int32)[:, None]
+
+    def _call_config(self, op: str, mode, ph, cid,
+                     valid) -> bb.ExchangeConfig:
+        """The exchange config for one call — including measured ragged
+        specs when this call is eligible (stacked backend, no explicit
+        budget override, destinations computable without table state)."""
+        q = ph.shape[1]
+        kind = self._select_kind(q)
+        if kind == "dense":
+            return bb.DENSE
+        cfg = self.exchange_config
+        if cfg.kind != "compacted":
+            cfg = dataclasses.replace(cfg, kind="compacted")
+        if not self.ragged or q == 0:
+            return cfg
+        N, client = self.n_nodes, self._client_ranks()
+        if op in ("write", "read") and cfg.budget is None:
+            if op == "read" and \
+                    LayoutMode.HYBRID in self.policy.modes_present():
+                # hybrid read destinations come from the metadata phase
+                # (table state), which is invisible here — keep the
+                # uniform lossless plan for the whole call
+                return cfg
+            dest = route_data(mode, N, ph, cid, client, xp=jnp)
+            cfg = dataclasses.replace(
+                cfg, data_spec=bb.plan_ragged_spec(dest, valid, N))
+        if op in ("write", "meta") and cfg.meta_budget is None and \
+                cfg.budget is None:
+            # an explicit ``budget`` historically also caps the metadata
+            # exchange (see ``meta_budget``) — honour it rather than
+            # silently upgrading metadata to ragged sizing
+            owner = route_meta(mode, N, self.policy.n_md_servers, ph,
+                               client, xp=jnp)
+            cfg = dataclasses.replace(
+                cfg, meta_spec=bb.plan_ragged_spec(owner, valid, N))
+        return cfg
+
+    def _ops(self, config: bb.ExchangeConfig) -> Tuple:
+        """(write, read, meta) jitted ops for one exchange config."""
+        if not self._is_mesh:
+            return _stacked_ops_for(self.policy.engine_key(), config)
+        ops = self._mesh_ops.get(config)
+        if ops is None:
+            from repro.core.mesh_engine import build_mesh_ops
+            ops = build_mesh_ops(self.backend, self.policy, config)
+            self._mesh_ops[config] = ops
+        return ops
+
+    def _write(self, state, mode, ph, cid, payload, valid):
+        """Engine write entry (state explicit — the benchmarks drive it)."""
+        cfg = self._call_config("write", mode, ph, cid, valid)
+        return self._ops(cfg)[0](state, mode, ph, cid, payload, valid)
+
+    def _read(self, state, mode, ph, cid, valid):
+        """Engine read entry (state explicit — the benchmarks drive it)."""
+        cfg = self._call_config("read", mode, ph, cid, valid)
+        return self._ops(cfg)[1](state, mode, ph, cid, valid)
+
+    def _meta(self, state, mode, op, ph, size, loc, valid):
+        """Engine metadata entry (state explicit)."""
+        cfg = self._call_config("meta", mode, ph, None, valid)
+        return self._ops(cfg)[2](state, mode, op, ph, size, loc, valid)
 
     # ---- data plane ---------------------------------------------------------
     def write(self, req: BBRequest) -> "BBClient":
@@ -210,6 +332,7 @@ class BBClient:
 
     # ---- metadata plane -----------------------------------------------------
     def _meta_call(self, opcode: int, req: BBRequest):
+        """Shared create/stat/remove plumbing: fill defaults, run, unpack."""
         shape = req.path_hash.shape
         op = jnp.full(shape, opcode, jnp.int32)
         size = (jnp.zeros(shape, jnp.int32) if req.size is None

@@ -1,1 +1,4 @@
+"""Intent analysis: hybrid static+runtime profiling → LLM-guided layout
+selection (the paper's decision pipeline; ``select_layout`` is the entry
+point, ``LayoutDecision`` the result carrying per-scope mode plans)."""
 from repro.core.intent.selector import LayoutDecision, select_layout  # noqa: F401

@@ -12,6 +12,12 @@ from repro.core.intent.static_extractor import StaticFeatures
 
 @dataclass
 class HybridContext:
+    """The unified structured profile fed to the reasoner (paper Fig. 5).
+
+    Merges the static source/script features with the optional runtime
+    probe stats; every property below implements one consolidation rule
+    of §III-C (runtime evidence wins, static hints fill the gaps).
+    """
     app: str
     static: StaticFeatures
     runtime: Optional[RuntimeStats]      # None under the w/o-Runtime ablation
@@ -20,6 +26,7 @@ class HybridContext:
     # ---- consolidated evidence (merging rules of §III-C) -------------------
     @property
     def topology(self) -> str:
+        """File-sharing topology: "N-1", "N-N" or "unknown"."""
         if self.runtime is not None and self.runtime.shared_file_ops > 0 and \
                 self.static.topology_hint == "unknown":
             return "N-1"
@@ -27,6 +34,7 @@ class HybridContext:
 
     @property
     def read_ratio(self) -> float:
+        """Fraction of read ops (runtime-measured, else static hints)."""
         if self.runtime is not None:
             return self.runtime.read_ratio
         # static fallback: direction hint + script read_pct
@@ -38,6 +46,7 @@ class HybridContext:
 
     @property
     def meta_share(self) -> float:
+        """Fraction of metadata ops among all I/O calls."""
         if self.runtime is not None:
             return self.runtime.meta_share
         if self.static.meta_intensity == "high":
@@ -47,12 +56,14 @@ class HybridContext:
 
     @property
     def small_requests(self) -> bool:
+        """Dominant request size ≤ 64 KiB."""
         if self.runtime is not None and self.runtime.dominant_req_kib:
             return self.runtime.dominant_req_kib <= 64
         return self.static.small_requests
 
     @property
     def latency_sensitive(self) -> bool:
+        """Tiny requests with real metadata traffic → latency-bound."""
         if self.runtime is not None and self.runtime.dominant_req_kib:
             return (self.runtime.dominant_req_kib <= 1.0
                     and self.runtime.meta_share > 0.05)
@@ -60,6 +71,7 @@ class HybridContext:
 
     @property
     def cross_rank_read(self) -> bool:
+        """Ranks read data other ranks wrote (Mode-1 poison)."""
         if self.runtime is not None:
             return self.runtime.cross_rank_ops > 0 or \
                 self.static.cross_rank_read
@@ -67,24 +79,28 @@ class HybridContext:
 
     @property
     def shared_file(self) -> bool:
+        """At least one file is touched by several ranks."""
         if self.runtime is not None:
             return self.runtime.shared_file_ops > 0 or self.static.shared_file
         return self.static.shared_file
 
     @property
     def multi_phase(self) -> bool:
+        """The job has more than one distinct I/O phase."""
         if self.runtime is not None:
             return self.runtime.n_phases > 1 or self.static.multi_phase
         return self.static.multi_phase
 
     @property
     def meta_mix(self) -> Dict[str, float]:
+        """Per-op metadata distribution (empty without runtime stats)."""
         if self.runtime is not None and self.runtime.meta_mix:
             return self.runtime.meta_mix
         return {}
 
     # ---- Fig.5-style JSON ---------------------------------------------------
     def to_json(self) -> str:
+        """Serialize the profile as the Fig.5-style JSON prompt block."""
         payload = {
             "bench_params": self.static.bench_params,
             "static_features": {

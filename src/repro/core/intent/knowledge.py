@@ -86,8 +86,10 @@ def app_create_buffering(app: str) -> bool:
 
 
 def mode_info_text() -> str:
+    """All four mode-knowledge cards as one prompt bullet list."""
     return "\n".join(f"- {v}" for v in MODE_INFO.values())
 
 
 def app_info_text(app: str) -> str:
+    """Application-reference card for ``app`` (or a placeholder)."""
     return APP_INFO.get(app, "(no application-level reference available)")

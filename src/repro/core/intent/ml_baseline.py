@@ -18,6 +18,7 @@ from repro.core.layouts import LayoutMode
 
 
 def featurize(rs: RuntimeStats, n_nodes: int) -> np.ndarray:
+    """Runtime stats → the fixed feature vector of the ML baseline."""
     tot_ops = max(1, rs.posix_reads + rs.posix_writes + rs.posix_meta_ops)
     return np.array([
         rs.read_ratio,
@@ -89,6 +90,7 @@ class GBDTClassifier:
         self.trees_: List[List[_Node]] = []
 
     def fit(self, X: np.ndarray, y: np.ndarray) -> "GBDTClassifier":
+        """One-vs-rest boosted stumps on (features, mode labels)."""
         self.classes_ = sorted(set(int(v) for v in y))
         self.trees_ = []
         for c in self.classes_:
@@ -107,6 +109,7 @@ class GBDTClassifier:
         return self
 
     def predict(self, x: np.ndarray) -> int:
+        """Highest-scoring class for one feature vector."""
         scores = []
         for trees in self.trees_:
             scores.append(self.lr * sum(_predict_tree(t, x) for t in trees))

@@ -12,6 +12,7 @@ from repro.core.workloads import Workload, build_workloads
 
 def oracle_mode(workload: Workload, hw: Hardware = DEFAULT_HW,
                 seed: int = 0) -> LayoutMode:
+    """Simulator-optimal layout mode for one workload."""
     times = {m: simulate(workload, m, workload.n_nodes, hw, seed).total_s
              for m in LayoutMode}
     return min(times, key=times.get)
@@ -33,4 +34,5 @@ def oracle_policy(workload: Workload, hw: Hardware = DEFAULT_HW,
 
 def oracle_table(n_nodes: int = 32, hw: Hardware = DEFAULT_HW
                  ) -> Dict[str, LayoutMode]:
+    """Workload-name → oracle mode over the whole suite."""
     return {w.name: oracle_mode(w, hw) for w in build_workloads(n_nodes)}

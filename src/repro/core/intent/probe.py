@@ -20,6 +20,11 @@ import numpy as np
 
 @dataclass
 class RuntimeStats:
+    """Darshan-style aggregate I/O counters from one probe run.
+
+    Collected by replaying a few seconds of the workload against the
+    probe engine; the reasoner consumes the derived ratios below.
+    """
     posix_bytes_written: float = 0.0
     posix_bytes_read: float = 0.0
     posix_writes: int = 0
@@ -35,15 +40,18 @@ class RuntimeStats:
 
     @property
     def read_ratio(self) -> float:
+        """Fraction of bytes moved by reads."""
         tot = self.posix_bytes_read + self.posix_bytes_written
         return self.posix_bytes_read / tot if tot else 0.0
 
     @property
     def meta_share(self) -> float:
+        """Fraction of metadata ops among all POSIX calls."""
         data = self.posix_reads + self.posix_writes
         return self.posix_meta_ops / max(1, data + self.posix_meta_ops)
 
     def to_darshan_dict(self) -> Dict[str, object]:
+        """Human-formatted counter dict (the prompt's runtime block)."""
         def _fmt_bytes(b):
             if b >= 1 << 30:
                 return f"{b / (1 << 30):.1f}GB"

@@ -46,6 +46,7 @@ Constraint: Select exactly one from [Mode 1, Mode 2, Mode 3, Mode 4].
 
 def build_prompt(ctx: HybridContext, *, use_app_ref: bool = True,
                  use_mode_know: bool = True) -> str:
+    """Render the Fig-6 prompt for one profile (ablations drop blocks)."""
     return TEMPLATE.format(
         MODE_INFO=(mode_info_text() if use_mode_know
                    else "(mode descriptions withheld — ablation)"),

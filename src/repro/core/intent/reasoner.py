@@ -32,6 +32,9 @@ CONFIDENCE_FALLBACK = 0.60
 
 @dataclass
 class Decision:
+    """One layout decision: mode, confidence, topology and the reasoning
+    steps that led to it (rendered into the decision JSON).
+    """
     mode: LayoutMode
     confidence: float
     io_topology: str
@@ -40,6 +43,7 @@ class Decision:
     fallback_applied: bool = False
 
     def to_json(self) -> str:
+        """Serialize as the Fig-6 decision-JSON contract."""
         return json.dumps({
             "selected_mode": f"Mode {int(self.mode)}",
             "confidence_score": round(self.confidence, 2),
@@ -51,6 +55,7 @@ class Decision:
 
 
 class LLMBackend(Protocol):
+    """Anything that can answer a Fig-6 prompt with decision JSON."""
     def complete(self, prompt: str) -> str:
         """Returns the decision JSON for a Fig-6 prompt."""
         ...
@@ -63,6 +68,7 @@ class ExternalLLMBackend:
         self._call = call_fn
 
     def complete(self, prompt: str) -> str:
+        """Forward the prompt to the injected callable."""
         return self._call(prompt)
 
 
@@ -70,6 +76,12 @@ class ExternalLLMBackend:
 # the deterministic knowledge reasoner
 # ---------------------------------------------------------------------------
 class KnowledgeReasoner:
+    """Deterministic stand-in for the paper's LLM reasoner.
+
+    Encodes the mode-knowledge cards as explicit rules over the hybrid
+    context; the ablation flags drop the app-reference / mode-knowledge
+    evidence exactly like the paper's w/o-AppRef and w/o-ModeKnow runs.
+    """
     def __init__(self, *, use_app_ref: bool = True, use_mode_know: bool = True):
         self.use_app_ref = use_app_ref
         self.use_mode_know = use_mode_know
@@ -85,6 +97,7 @@ class KnowledgeReasoner:
         return ctx.read_ratio > 0.02 or ctx.cross_rank_read
 
     def reason(self, ctx: HybridContext) -> Decision:
+        """Apply the rule cascade to one profile → a mode Decision."""
         steps: List[str] = []
         topo = ctx.topology
         rr = ctx.read_ratio
@@ -260,6 +273,7 @@ class KnowledgeReasonerBackend:
         self.ctx = ctx
 
     def complete(self, prompt: str) -> str:
+        """Answer with the deterministic reasoner's decision JSON."""
         return self.reasoner.reason(self.ctx).to_json()
 
 

@@ -24,6 +24,14 @@ from repro.core.workloads import Workload
 
 @dataclass
 class LayoutDecision:
+    """The pipeline's output for one workload.
+
+    Carries the whole-job mode plus — when the workload's phases span
+    several path scopes — the heterogeneous per-scope plan
+    (``scope_modes``) that ``layout_policy()`` compiles into a
+    ``LayoutPolicy`` for the client, with the full decision/prompt
+    provenance kept for audit.
+    """
     workload: str
     mode: LayoutMode
     confidence: float

@@ -16,6 +16,7 @@ from typing import Dict, Optional
 
 @dataclass
 class StaticFeatures:
+    """Source/script-derived I/O intent hints (no execution needed)."""
     # access topology
     topology_hint: str = "unknown"      # "N-N" | "N-1" | "mixed"
     rank_indexed_files: bool = False
@@ -76,6 +77,7 @@ _BARRIER_SPLIT = re.compile(r'MPI_Barrier')
 
 def extract_source_features(src: str, f: Optional[StaticFeatures] = None
                             ) -> StaticFeatures:
+    """Regex-mine application source for access-pattern hints."""
     f = f or StaticFeatures()
     f.rank_indexed_files = bool(_RANK_FILE.search(src))
     f.collective_io = bool(_COLLECTIVE.search(src))
@@ -161,6 +163,7 @@ _SBATCH_PPN = re.compile(r'#SBATCH\s+--ntasks-per-node=(\d+)')
 
 def extract_script_features(script: str, f: Optional[StaticFeatures] = None
                             ) -> StaticFeatures:
+    """Mine the batch script (scale, benchmark CLI params, hints)."""
     f = f or StaticFeatures()
     m = _SBATCH_N.search(script)
     if m:
@@ -220,6 +223,7 @@ def extract_script_features(script: str, f: Optional[StaticFeatures] = None
 
 
 def extract_static(source: str, script: str) -> StaticFeatures:
+    """Full static pass: source then script, with default fills."""
     f = extract_source_features(source)
     f = extract_script_features(script, f)
     # default: a common parent directory is shared territory

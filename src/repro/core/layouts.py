@@ -25,6 +25,14 @@ _U32_MASK = np.uint64(0x7FFFFFFF)
 
 
 class LayoutMode(enum.IntEnum):
+    """The paper's four burst-buffer data/metadata organizations.
+
+    NODE_LOCAL: everything on the writing node (DataWarp-private);
+    CENTRAL_META: metadata on a server subset, data hashed (BeeGFS);
+    DIST_HASH: consistent hashing for both (GekkoFS, the fail-safe);
+    HYBRID: local writes + hashed metadata with a recorded
+    data-location rank and two-phase reads (HadaFS).
+    """
     NODE_LOCAL = 1      # Mode 1: everything → localhost (DataWarp private)
     CENTRAL_META = 2    # Mode 2: metadata → server subset (BeeGFS-like)
     DIST_HASH = 3       # Mode 3: consistent hashing everywhere (GekkoFS)
@@ -70,6 +78,7 @@ class LayoutParams:
 
     @property
     def n_md_servers(self) -> int:
+        """Mode-2 metadata-server count: ratio × n_nodes, at least 1."""
         return max(1, int(round(self.n_nodes * self.metadata_server_ratio)))
 
 

@@ -46,6 +46,17 @@ def _node_ids(local_n: int) -> jax.Array:
     return base + jnp.arange(local_n, dtype=jnp.int32)
 
 
+def mesh_global_sum(x: jax.Array) -> jax.Array:
+    """All-node scalar reduction: local sum, then psum over the node axis.
+
+    This is the carry-round predicate reduction (``burst_buffer``'s
+    ``global_sum`` hook): every device sees the same total, so the
+    ``lax.cond`` around the overflow-carry exchange takes the same branch
+    everywhere and the ``all_to_all`` inside it stays aligned.
+    """
+    return jax.lax.psum(jnp.sum(x), NODE_AXIS)
+
+
 def build_mesh_ops(mesh: Mesh, policy,
                    config: bb.ExchangeConfig = bb.DENSE) -> Tuple:
     """Returns jitted (write, read, meta) ops bound to a mesh + policy.
@@ -62,20 +73,29 @@ def build_mesh_ops(mesh: Mesh, policy,
     local_n = policy.n_nodes // n_dev
     req_spec = PS(NODE_AXIS)
 
+    if config.data_spec is not None or config.meta_spec is not None:
+        raise ValueError(
+            "ragged exchange specs need a single-device packed layout; "
+            "the mesh all_to_all requires uniform splits — use uniform "
+            "budgets (the lossless carry round covers overflow)")
+
     def _write(state, mode, ph, cid, payload, valid):
         return bb.forward_write(state, policy, ph, cid, payload, valid,
                                 mode=mode, exchange=mesh_exchange,
-                                node_ids=_node_ids(local_n), config=config)
+                                node_ids=_node_ids(local_n), config=config,
+                                global_sum=mesh_global_sum)
 
     def _read(state, mode, ph, cid, valid):
         return bb.forward_read(state, policy, ph, cid, valid,
                                mode=mode, exchange=mesh_exchange,
-                               node_ids=_node_ids(local_n), config=config)
+                               node_ids=_node_ids(local_n), config=config,
+                               global_sum=mesh_global_sum)
 
     def _meta(state, mode, op, ph, size, loc, valid):
         return bb.meta_op(state, policy, op, ph, size, loc, valid,
                           mode=mode, exchange=mesh_exchange,
-                          node_ids=_node_ids(local_n), config=config)
+                          node_ids=_node_ids(local_n), config=config,
+                          global_sum=mesh_global_sum)
 
     state_specs = jax.tree_util.tree_map(
         lambda _: PS(NODE_AXIS), bb.init_state(1, 1, 1, 1))
@@ -99,6 +119,7 @@ def build_mesh_ops(mesh: Mesh, policy,
 
 
 def make_node_mesh(n_devices: int = None) -> Mesh:
+    """1-D device mesh over the node axis (default: all devices)."""
     devs = jax.devices()
     n = n_devices or len(devs)
     return jax.make_mesh((n,), (NODE_AXIS,))

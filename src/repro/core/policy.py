@@ -25,7 +25,6 @@ digests), so the redesign is a strict superset of the old
 from __future__ import annotations
 
 from dataclasses import dataclass
-from functools import cached_property
 from typing import Mapping, Optional, Tuple
 
 import numpy as np
@@ -63,6 +62,7 @@ class LayoutPolicy:
     def from_scopes(cls, scopes: Mapping[str, LayoutMode], n_nodes: int,
                     default: LayoutMode = DEFAULT_MODE, **kw
                     ) -> "LayoutPolicy":
+        """Heterogeneous plan from a {scope-prefix: mode} mapping."""
         items = tuple(sorted((_norm_scope(s), LayoutMode(m))
                              for s, m in scopes.items()))
         return cls(n_nodes=n_nodes, default_mode=LayoutMode(default),
@@ -71,26 +71,54 @@ class LayoutPolicy:
     # ---- derived -----------------------------------------------------------
     @property
     def n_md_servers(self) -> int:
+        """Mode-2 metadata-server count: ratio × n_nodes, at least 1."""
         return max(1, int(round(self.n_nodes * self.metadata_server_ratio)))
 
-    @cached_property
+    def _plan_key(self) -> Tuple:
+        """Content key of the derived caches: the fields they compute from.
+
+        ``table``/``modes_present`` used to be ``cached_property``s keyed
+        on object identity; a policy whose ``scopes`` were swapped in
+        place (``object.__setattr__`` — how interactive tuning and the
+        probe loop edit a plan without rebuilding clients) kept serving
+        the STALE mask, so the auto-budget path could disagree with the
+        ``chunk_router`` destination histograms (e.g. an emptied HYBRID
+        scope set still forced the lossless ``B = q`` budget, or a newly
+        added one under-budgeted structurally concentrated traffic).  The
+        caches are now revalidated against this key on every access, so
+        any ``engine_key()`` change is picked up immediately.
+        """
+        return (int(self.default_mode), self.scopes)
+
+    def _content_cached(self, name: str, compute):
+        key = self._plan_key()
+        hit = self.__dict__.get(name)
+        if hit is None or hit[0] != key:
+            hit = (key, compute())
+            self.__dict__[name] = hit       # bypasses frozen __setattr__
+        return hit[1]
+
+    @property
     def table(self) -> Tuple[Tuple[int, int], ...]:
         """The compiled lookup table: ((scope_hash, mode_int), …)."""
-        return tuple((str_hash(s), int(m)) for s, m in self.scopes)
-
-    @cached_property
-    def _modes_present(self) -> frozenset:
-        return frozenset({self.default_mode} | {m for _, m in self.scopes})
+        return self._content_cached(
+            "_table_cache",
+            lambda: tuple((str_hash(s), int(m)) for s, m in self.scopes))
 
     def modes_present(self) -> frozenset:
         """Static set of modes any request under this policy can carry.
 
         The engine branches on this in *Python* (the policy is trace-time
         static) to keep the Mode-1/4 local fast path and skip the hybrid
-        two-phase read when those modes cannot occur.  Cached: it is hit on
-        every engine call and at every budget resolution.
+        two-phase read when those modes cannot occur.  Cached by plan
+        *content* (see ``_plan_key``), not object identity: it is hit on
+        every engine call and at every budget resolution, and must follow
+        in-place plan edits.
         """
-        return self._modes_present
+        return self._content_cached(
+            "_modes_cache",
+            lambda: frozenset({self.default_mode} |
+                              {m for _, m in self.scopes}))
 
     def engine_key(self) -> Tuple[int, int, int, Tuple[int, ...]]:
         """The static fields the engine actually specializes on.
@@ -131,6 +159,7 @@ class LayoutPolicy:
         return best
 
     def mode_for_path(self, path: str) -> LayoutMode:
+        """Host-side mode of one path (longest scope prefix, else default)."""
         s = self.scope_of(path)
         if s is None:
             return self.default_mode

@@ -36,6 +36,7 @@ from repro.core.layouts import LayoutMode
 
 @dataclass(frozen=True)
 class Hardware:
+    """Per-node hardware envelope the phase cost model runs against."""
     ssd_write_mibs: float = 560.0     # per-node local write BW
     ssd_read_mibs: float = 760.0
     net_mibs: float = 240.0           # per-node effective NIC BW
@@ -58,6 +59,7 @@ DEFAULT_HW = Hardware()
 
 @dataclass
 class Phase:
+    """One I/O phase: kind (bw/iops/meta), shape and volume knobs."""
     kind: str                 # "bw" | "iops" | "meta"
     op: str = "write"         # "write" | "read" | "mixed"
     topology: str = "NN"      # "NN" | "N1"
@@ -75,6 +77,7 @@ class Phase:
 
 @dataclass
 class PhaseResult:
+    """Simulated cost of one phase (time, bandwidth, IOPS, latency)."""
     time_s: float
     bw_mibs: float = 0.0
     iops: float = 0.0
@@ -87,11 +90,13 @@ class PhaseResult:
 
 @dataclass
 class WorkloadResult:
+    """Whole-workload simulation: total time + per-phase results."""
     total_s: float
     phases: List[PhaseResult]
 
     @property
     def agg_bw(self) -> float:
+        """Time-weighted mean bandwidth over the bw phases (MiB/s)."""
         tot = sum(p.bw_mibs * p.time_s for p in self.phases if p.bw_mibs)
         t = sum(p.time_s for p in self.phases if p.bw_mibs)
         return tot / t if t else 0.0
@@ -311,6 +316,7 @@ def _meta_phase(phase: Phase, mode: LayoutMode, n: int, hw: Hardware,
 
 def simulate_phase(phase: Phase, mode: LayoutMode, n_nodes: int,
                    hw: Hardware = DEFAULT_HW, seed: int = 0) -> PhaseResult:
+    """Cost one phase under one layout mode (dispatch by kind)."""
     rng = np.random.RandomState(seed * 7919 + int(mode) * 131 + n_nodes)
     if phase.kind == "bw":
         return _bw_phase(phase, mode, n_nodes, hw, rng)

@@ -20,6 +20,7 @@ from repro.core.simulator import Phase
 
 @dataclass
 class Workload:
+    """One suite entry: app id, phase list and the static artifacts."""
     app: str
     test_id: str
     description: str
@@ -30,6 +31,7 @@ class Workload:
 
     @property
     def name(self) -> str:
+        """Canonical "app-test_id" workload identifier."""
         return f"{self.app}-{self.test_id}"
 
 
@@ -273,6 +275,7 @@ srun -n {nodes * ppn} {extra}
 # the 23-scenario matrix
 # ---------------------------------------------------------------------------
 def build_workloads(n_nodes: int = 32) -> List[Workload]:
+    """Construct the paper's full workload suite at ``n_nodes``."""
     W: List[Workload] = []
     gb = 1024.0
 
@@ -472,6 +475,7 @@ def build_workloads(n_nodes: int = 32) -> List[Workload]:
 
 
 def workload_by_name(name: str, n_nodes: int = 32) -> Workload:
+    """Look up one suite workload by its canonical name."""
     for w in build_workloads(n_nodes):
         if w.name == name:
             return w

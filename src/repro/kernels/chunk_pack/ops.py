@@ -1,6 +1,7 @@
 from __future__ import annotations
 
 import jax
+import jax.numpy as jnp
 
 from repro.kernels import default_interpret, on_tpu
 from repro.kernels.chunk_pack.chunk_pack import pack_chunks_kernel
@@ -26,3 +27,24 @@ def gather_rows(payload: jax.Array, idx: jax.Array) -> jax.Array:
     if on_tpu():
         return pack_chunks_kernel(payload, idx, interpret=False)
     return pack_chunks_ref(payload, idx)
+
+
+def gather_rows_batched(x: jax.Array, idx: jax.Array) -> jax.Array:
+    """Row-batched send-order gather: (L, q, ...) × (L, S) → (L, S, ...).
+
+    ``idx`` holds per-row request slots (``-1`` → sentinel zero row).  The
+    row batch is flattened into one ``gather_rows`` call — a single fused
+    kernel launch on TPU — by rebasing each row's slots onto the flat
+    (L·q) payload.  ``S`` is arbitrary: the uniform compacted plan passes
+    ``n_nodes·B`` columns, the ragged plan passes the packed ``Σbᵢ``
+    columns of its per-destination offset table.
+    """
+    L, q = x.shape[:2]
+    rest = x.shape[2:]
+    w = 1
+    for dim in rest:
+        w *= dim
+    base = (jnp.arange(L, dtype=jnp.int32) * q)[:, None]
+    flat_idx = jnp.where(idx >= 0, idx + base, -1).reshape(-1)
+    out = gather_rows(x.reshape(L * q, w), flat_idx)
+    return out.reshape((L, idx.shape[1]) + rest)

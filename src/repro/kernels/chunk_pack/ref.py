@@ -3,6 +3,19 @@ import jax.numpy as jnp
 
 
 def pack_chunks_ref(payload, idx):
+    """(n, w) payload × (m,) row ids → (m, w); ``-1`` rows come back zero."""
     idx = jnp.asarray(idx)
     out = jnp.take(payload, jnp.maximum(idx, 0), axis=0)
     return jnp.where((idx >= 0)[:, None], out, jnp.zeros_like(out))
+
+
+def gather_rows_batched_ref(x, idx):
+    """Row-batched oracle of ``ops.gather_rows_batched``: per-row take with
+    the same sentinel semantics, no flattening — used by the kernel parity
+    sweeps to pin the rebase arithmetic of the batched entry point."""
+    x, idx = jnp.asarray(x), jnp.asarray(idx)
+    out = jnp.take_along_axis(
+        x, jnp.maximum(idx, 0).reshape(idx.shape + (1,) * (x.ndim - 2)),
+        axis=1)
+    mask = (idx >= 0).reshape(idx.shape + (1,) * (x.ndim - 2))
+    return jnp.where(mask, out, jnp.zeros_like(out))

@@ -98,6 +98,10 @@ def _hist_kernel(dest_ref, counts_ref, *, n_bins: int):
     counts_ref[0] = _block_counts(dest_ref[...], n_bins)
 
 
+def _hist2d_kernel(dest_ref, counts_ref, *, n_bins: int):
+    counts_ref[0] = _block_counts(dest_ref[0], n_bins)
+
+
 @functools.partial(jax.jit,
                    static_argnames=("n_bins", "block", "interpret"))
 def dest_histogram_kernel(dest: jax.Array, *, n_bins: int,
@@ -123,3 +127,26 @@ def dest_histogram_kernel(dest: jax.Array, *, n_bins: int,
         interpret=interpret,
     )(dest)
     return counts.sum(axis=0)
+
+
+@functools.partial(jax.jit, static_argnames=("n_bins", "interpret"))
+def dest_histogram2d_kernel(dest: jax.Array, *, n_bins: int,
+                            interpret: bool = True) -> jax.Array:
+    """(L, q) int32 destinations → per-row counts (L, n_bins).
+
+    Row-batched form of ``dest_histogram_kernel``: one grid step per source
+    row, so the one-hot block stays (q, n_bins) regardless of L.  This is
+    the histogram stage the compacted exchange plan runs per call — both to
+    lay out its budgeted send buffers and (host-side, on the same counts)
+    to size the ragged per-destination budgets.  Out-of-range rows (the
+    plan's invalid-request sentinel ``-1``) are counted nowhere.
+    """
+    L, q = dest.shape
+    return pl.pallas_call(
+        functools.partial(_hist2d_kernel, n_bins=n_bins),
+        grid=(L,),
+        in_specs=[pl.BlockSpec((1, q), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((1, n_bins), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((L, n_bins), jnp.int32),
+        interpret=interpret,
+    )(dest)

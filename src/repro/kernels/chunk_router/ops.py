@@ -4,9 +4,11 @@ from __future__ import annotations
 import jax
 
 from repro.kernels import default_interpret, on_tpu
-from repro.kernels.chunk_router.chunk_router import (dest_histogram_kernel,
+from repro.kernels.chunk_router.chunk_router import (dest_histogram2d_kernel,
+                                                    dest_histogram_kernel,
                                                     route_chunks_kernel)
-from repro.kernels.chunk_router.ref import dest_histogram_ref
+from repro.kernels.chunk_router.ref import (dest_histogram2d_ref,
+                                            dest_histogram_ref)
 
 
 def route_chunks(path_hash: jax.Array, chunk_id: jax.Array,
@@ -33,3 +35,23 @@ def histogram_rows(dest: jax.Array, *, n_bins: int) -> jax.Array:
     if on_tpu():
         return dest_histogram_kernel(dest, n_bins=n_bins, interpret=False)
     return dest_histogram_ref(dest, n_bins=n_bins)
+
+
+def dest_histogram2d(dest: jax.Array, *, n_bins: int,
+                     interpret: bool = None) -> jax.Array:
+    """Run the row-batched Pallas histogram kernel (interpret off-TPU)."""
+    interpret = default_interpret() if interpret is None else interpret
+    return dest_histogram2d_kernel(dest, n_bins=n_bins, interpret=interpret)
+
+
+def histogram_rows2d(dest: jax.Array, *, n_bins: int) -> jax.Array:
+    """Engine entry point for per-(row, destination) counts: (L, q) → (L, n_bins).
+
+    Compiled Pallas kernel on TPU, bit-identical jnp oracle elsewhere.
+    The compacted exchange plan calls this once per round (replacing a
+    vmap over the 1-D kernel), and the client calls it eagerly on concrete
+    destination arrays to size ragged per-destination budgets.
+    """
+    if on_tpu():
+        return dest_histogram2d_kernel(dest, n_bins=n_bins, interpret=False)
+    return dest_histogram2d_ref(dest, n_bins=n_bins)

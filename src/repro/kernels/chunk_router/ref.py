@@ -20,3 +20,14 @@ def dest_histogram_ref(dest, *, n_bins: int):
     return jnp.bincount(jnp.where(inb, dest, 0),
                         weights=inb.astype(jnp.int32),
                         length=n_bins).astype(jnp.int32)
+
+
+def dest_histogram2d_ref(dest, *, n_bins: int):
+    """Per-row oracle of ``dest_histogram2d_kernel``: (L, q) → (L, n_bins).
+
+    One-hot reduction over the slot axis; values outside [0, n_bins) match
+    no bin (the compacted plan's invalid-request sentinel).
+    """
+    dest = jnp.asarray(dest)
+    onehot = dest[..., None] == jnp.arange(n_bins, dtype=dest.dtype)
+    return onehot.sum(axis=1).astype(jnp.int32)

@@ -1,0 +1,39 @@
+"""The ``make docs-check`` gate: passes on the core API, catches gaps."""
+import pathlib
+import subprocess
+import sys
+import textwrap
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+TOOL = ROOT / "tools" / "docs_check.py"
+
+
+def test_core_public_api_fully_documented():
+    r = subprocess.run([sys.executable, str(TOOL)], capture_output=True,
+                       text=True, cwd=str(ROOT))
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "OK" in r.stdout
+
+
+def test_docs_check_flags_undocumented_symbols(tmp_path):
+    pkg = tmp_path / "pkg"
+    pkg.mkdir()
+    (pkg / "bad.py").write_text(textwrap.dedent('''
+        """Module docstring present."""
+        def documented():
+            """Fine."""
+        def naked():
+            pass
+        class Thing:
+            """Fine."""
+            def method(self):
+                pass
+            def _private(self):
+                pass
+    '''))
+    r = subprocess.run([sys.executable, str(TOOL), str(pkg)],
+                       capture_output=True, text=True, cwd=str(ROOT))
+    assert r.returncode == 1
+    flagged = {line.strip("- ").strip() for line in r.stdout.splitlines()
+               if line.startswith("  - ")}
+    assert flagged == {"pkg.bad.naked", "pkg.bad.Thing.method"}

@@ -50,4 +50,7 @@ def test_bench_quick_sweep(tmp_path):
     comp_ratio = (by[("compacted", 32)]["write_exchange_bytes"] /
                   by[("compacted", 8)]["write_exchange_bytes"])
     assert dense_ratio == 16.0                   # O(N²)
-    assert comp_ratio <= 8.0                     # ~O(N)
+    # ~O(N), with slack for the lane-quantized ragged budgets (each busy
+    # destination reserves a multiple of 8 columns, so Σbᵢ at 32 nodes
+    # sits above the exact-count 4× but far below dense's 16×)
+    assert comp_ratio <= 12.0

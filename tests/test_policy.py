@@ -279,3 +279,43 @@ def test_mixed_policy_stacked_vs_mesh_parity():
     r = subprocess.run([sys.executable, "-c", MESH_SCRIPT],
                        capture_output=True, text=True, timeout=600, cwd=".")
     assert "POLICY_MESH_OK" in r.stdout, r.stdout + r.stderr
+
+
+# ---------------------------------------------------------------------------
+# plan-content cache invalidation (regression)
+# ---------------------------------------------------------------------------
+def test_modes_present_follows_in_place_plan_mutation():
+    """``modes_present``/``table`` used to be identity-keyed cached
+    properties: editing ``scopes`` in place (how interactive tuning and the
+    probe loop adjust a plan) kept serving the stale mask, so the
+    auto-budget path disagreed with the chunk_router destination
+    histograms — e.g. an emptied HYBRID scope set still forced B = q, and
+    a newly added one under-budgeted concentrated traffic.  The caches are
+    now revalidated against the plan content on every access."""
+    p = LayoutPolicy.from_scopes({"/ckpt": LayoutMode.HYBRID}, n_nodes=32,
+                                 default=LayoutMode.DIST_HASH)
+    q = 256
+    assert LayoutMode.HYBRID in p.modes_present()
+    assert bb.data_budget(p, q, bb.COMPACTED) == q       # concentration
+    old_table = p.table
+    assert len(old_table) == 1
+
+    # empty the scope set in place (frozen dataclass → object.__setattr__,
+    # exactly what a tuning loop that mutates a shared policy does)
+    object.__setattr__(p, "scopes", ())
+    assert p.modes_present() == frozenset({LayoutMode.DIST_HASH})
+    assert p.table == ()
+    # the auto budget must now agree with hash-spread histograms again
+    assert bb.data_budget(p, q, bb.COMPACTED) == 16      # 2·256/32
+    assert p.engine_key()[3] == (int(LayoutMode.DIST_HASH),)
+
+    # and back: adding a HYBRID scope must re-enable the lossless budget
+    object.__setattr__(p, "scopes", (("/ckpt", LayoutMode.HYBRID),))
+    assert LayoutMode.HYBRID in p.modes_present()
+    assert bb.data_budget(p, q, bb.COMPACTED) == q
+    assert p.table == old_table
+    # device-side resolution follows the recompiled table too
+    sh = np.asarray([p.scope_hash_of("/ckpt/x"), SCOPE_NONE], np.int32)
+    np.testing.assert_array_equal(
+        p.resolve(sh), np.asarray([int(LayoutMode.HYBRID),
+                                   int(LayoutMode.DIST_HASH)], np.int32))

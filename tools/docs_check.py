@@ -1,0 +1,104 @@
+"""Public-API docstring gate for ``src/repro/core/`` (``make docs-check``).
+
+Walks every module under the core package with ``ast`` (no imports, so it
+runs in milliseconds and can't be fooled by import-time side effects) and
+fails listing every PUBLIC symbol without a docstring:
+
+* the module itself,
+* module-level classes and functions not prefixed with ``_``,
+* public methods of public classes (dunders other than ``__init__`` are
+  exempt; ``__init__`` is exempt when the class docstring already covers
+  construction — i.e. it's only required to be documented *somewhere*).
+
+Private names (leading underscore) are exempt on the grounds that they
+are not API — they are skipped entirely, not reported.
+
+Usage:
+    python tools/docs_check.py [root ...]   # default: src/repro/core
+Exit status 1 when any public symbol is undocumented.
+"""
+from __future__ import annotations
+
+import ast
+import pathlib
+import sys
+from typing import Iterator, List, Tuple
+
+DEFAULT_ROOTS = ("src/repro/core",)
+
+
+def _is_public(name: str) -> bool:
+    return not name.startswith("_")
+
+
+def _decorated_property(node: ast.AST) -> bool:
+    for d in getattr(node, "decorator_list", ()):
+        base = d.func if isinstance(d, ast.Call) else d
+        name = base.attr if isinstance(base, ast.Attribute) else \
+            getattr(base, "id", "")
+        if name in ("property", "cached_property"):
+            return True
+    return False
+
+
+def iter_public_symbols(tree: ast.Module, modname: str
+                        ) -> Iterator[Tuple[str, ast.AST]]:
+    """Yield (dotted name, node) for every public symbol of a module."""
+    for node in tree.body:
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)) and \
+                _is_public(node.name):
+            yield f"{modname}.{node.name}", node
+        elif isinstance(node, ast.ClassDef) and _is_public(node.name):
+            yield f"{modname}.{node.name}", node
+            for sub in node.body:
+                if isinstance(sub, (ast.FunctionDef,
+                                    ast.AsyncFunctionDef)) and \
+                        _is_public(sub.name):
+                    yield f"{modname}.{node.name}.{sub.name}", sub
+
+
+def check_file(path: pathlib.Path, rel_to: pathlib.Path) -> List[str]:
+    """Return the undocumented public symbols of one module."""
+    tree = ast.parse(path.read_text(), filename=str(path))
+    modname = str(path.relative_to(rel_to).with_suffix("")
+                  ).replace("/", ".")
+    missing = []
+    if ast.get_docstring(tree) is None:
+        missing.append(f"{modname} (module)")
+    for name, node in iter_public_symbols(tree, modname):
+        if ast.get_docstring(node) is None:
+            # a bare property getter whose one-liner is obvious still
+            # needs the one-liner: no exemptions beyond privacy
+            missing.append(name + (" (property)"
+                                   if _decorated_property(node) else ""))
+    return missing
+
+
+def main(argv: List[str]) -> int:
+    """CLI entry: check every ``*.py`` under the given roots."""
+    roots = [pathlib.Path(a) for a in argv] or \
+        [pathlib.Path(r) for r in DEFAULT_ROOTS]
+    missing: List[str] = []
+    n_files = 0
+    for root in roots:
+        base = root
+        # report names relative to the package parent (src/repro/… → repro.…)
+        while base.name not in ("src", "") and base.parent != base:
+            base = base.parent
+        rel_to = base if base.name == "src" else root.parent
+        for py in sorted(root.rglob("*.py")):
+            n_files += 1
+            missing.extend(check_file(py, rel_to))
+    if missing:
+        print(f"docs-check: {len(missing)} undocumented public symbol(s) "
+              f"across {n_files} file(s):")
+        for m in missing:
+            print(f"  - {m}")
+        return 1
+    print(f"docs-check: OK — every public symbol across {n_files} file(s) "
+          "is documented")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))
