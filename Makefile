@@ -1,6 +1,6 @@
 PY := PYTHONPATH=src python
 
-.PHONY: test test-fast examples bb-dryrun bench docs-check
+.PHONY: test test-fast examples bb-dryrun bench bench-adapt docs-check
 
 # full tier-1 suite (~minutes: includes model smoke + subprocess mesh tests)
 test:
@@ -23,6 +23,12 @@ bb-dryrun:
 # diffs the two); the auto backend selector reads the newest JSON present.
 bench:
 	$(PY) benchmarks/exchange_bench.py --quick --out BENCH_pr3.json
+
+# online-adaptation perf: drifting workload, static mismatched layout vs
+# telemetry-driven re-decision + live relayout → BENCH_pr4.json
+# (tests/test_adapt.py regression-checks the committed artifact's summary)
+bench-adapt:
+	$(PY) benchmarks/adapt_bench.py --out BENCH_pr4.json
 
 # fail on any undocumented public symbol in the core API (tools/docs_check.py)
 docs-check:

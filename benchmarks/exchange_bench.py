@@ -182,6 +182,81 @@ def carry_bench(n: int = 8, q: int = 64, w: int = 16,
     return out
 
 
+def fabric_rows(shapes: List, iters: int = 10) -> List[Dict]:
+    """Time the mesh backend's ``all_to_all`` on the available devices.
+
+    Measures ``mesh_engine.mesh_exchange`` — the exact collective every
+    mesh engine call funnels through — under ``shard_map`` over whatever
+    devices this process sees, reporting bytes/µs per shape.  These are
+    FABRIC timings (the real collective), not the CPU transposes the
+    stacked sweep measures; the auto-selection model does not consume
+    them yet (ROADMAP: per-deployment learned tables) — this is the
+    measurement wiring and the JSON schema they will key on.
+    """
+    import jax
+    import jax.numpy as jnp
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as PS
+
+    from repro.core.mesh_engine import (NODE_AXIS, make_node_mesh,
+                                        mesh_exchange)
+    n_dev = len(jax.devices())
+    mesh = make_node_mesh(n_dev)
+    fn = jax.jit(shard_map(mesh_exchange, mesh=mesh,
+                           in_specs=PS(NODE_AXIS), out_specs=PS(NODE_AXIS),
+                           check_rep=False))
+    rows = []
+    for slots, words in shapes:
+        x = jnp.ones((n_dev, n_dev, slots, words), jnp.int32)
+        us = _time_us(fn, x, iters=iters)
+        nbytes = int(x.size) * 4
+        rows.append({"n_devices": n_dev, "slots": int(slots),
+                     "words": int(words), "us_per_call": round(us, 1),
+                     "exchanged_bytes": nbytes,
+                     "bytes_per_us": round(nbytes / us, 1)})
+    return rows
+
+
+_FABRIC_SHAPES = ((8, 16), (64, 16), (256, 16))
+
+
+def fabric_bench(n_devices: int = 8, iters: int = 10) -> Dict:
+    """``all_to_all`` fabric timings on ``n_devices`` real host devices.
+
+    The device count must be forced before jax initializes, so the
+    measurement runs in a subprocess (mirroring the mesh parity tests);
+    if that fails (constrained sandbox), it degrades to an in-process run
+    over however many devices already exist — the schema is identical.
+    """
+    import subprocess
+    import sys
+    import textwrap
+    script = textwrap.dedent(f"""
+        import os, json
+        os.environ['XLA_FLAGS'] = \
+            '--xla_force_host_platform_device_count={n_devices}'
+        import sys; sys.path.insert(0, 'src'); sys.path.insert(0, '.')
+        from benchmarks.exchange_bench import fabric_rows, _FABRIC_SHAPES
+        print('FABRIC_JSON ' + json.dumps(
+            fabric_rows(list(_FABRIC_SHAPES), iters={iters})))
+    """)
+    rows = None
+    try:
+        r = subprocess.run([sys.executable, "-c", script],
+                           capture_output=True, text=True, timeout=600)
+        for line in r.stdout.splitlines():
+            if line.startswith("FABRIC_JSON "):
+                rows = json.loads(line[len("FABRIC_JSON "):])
+    except (OSError, subprocess.SubprocessError, ValueError):
+        rows = None
+    in_process = rows is None
+    if in_process:
+        rows = fabric_rows(list(_FABRIC_SHAPES), iters=iters)
+    return {"collective": "mesh_all_to_all",
+            "n_devices": rows[0]["n_devices"] if rows else 0,
+            "in_process_fallback": in_process, "rows": rows}
+
+
 def kernel_bench(iters: int = 5) -> List[Dict]:
     """Interpret-mode kernel latencies (correctness-path cost, off-TPU)."""
     import jax.numpy as jnp
@@ -270,6 +345,9 @@ def run(nodes: List[int], batches: List[int], words: List[int],
         result["encode"] = encode_bench()
         result["kernels"] = kernel_bench()
         result["carry"] = carry_bench()
+        # mesh-fabric all_to_all timings (schema for future auto-selection
+        # features; see fabric_rows)
+        result["fabric"] = fabric_bench()
     with open(out, "w") as f:
         json.dump(result, f, indent=1)
     # invalidate the per-process crossover cache so in-process clients

@@ -136,6 +136,18 @@ class CheckpointManager:
         self.save_count = 0
         self.verify_failures = 0
 
+    def set_policy(self, policy) -> None:
+        """Follow an online re-decision: subsequent chunks route by the
+        new plan.  Lossless for already-stored chunks — ``store.get``
+        falls back to scanning every node, so a checkpoint written under
+        the old placement restores unchanged (the BB-side relayout of
+        engine-held chunks is the ``LiveMigrator``'s job).  Joins any
+        in-flight async save first, so one checkpoint's chunks are never
+        routed under two policies mid-manifest."""
+        self.wait()
+        self.layout = as_policy(policy)
+        self.store.policy = self.layout
+
     # ---- save ---------------------------------------------------------------
     def save(self, step: int, state) -> None:
         host_state = jax.tree_util.tree_map(np.asarray, state)  # device→host

@@ -1,0 +1,171 @@
+"""Re-decision: drifted signatures → candidate policy deltas, cost-gated.
+
+A fired drift report hands this module a live per-scope signature; the
+signature is synthesized back into the simulator's phase vocabulary
+(``phases_from_signature``) and costed under all four layout modes with
+the SAME calibrated model the offline oracle uses (``simulate_phase`` —
+this is the ``best_scope_modes`` machinery applied to a measured, not
+assumed, workload).  The winning mode becomes a ``PolicyDelta`` carrying
+its predicted per-round win, and ``gate_delta`` weighs that win over an
+adaptation horizon against the cost of physically moving the scope's
+stored chunks through the exchange plane.  Only deltas that clear the
+gate reach the ``LiveMigrator``.
+
+For audit parity with the offline pipeline, ``signature_workload`` wraps
+the synthesized phases in a ``Workload`` so the full intent selector
+(static extraction + knowledge reasoner) can be run over the same
+evidence; the controller uses the simulator path by default because it is
+deterministic and costs microseconds per tick.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+from repro.core.layouts import LayoutMode
+from repro.core.simulator import DEFAULT_HW, Hardware, Phase, simulate_phase
+
+#: synthesized phase volume (MiB) — only *relative* per-mode times matter
+_SYNTH_MIB = 1024.0
+#: synthesized metadata op count at full meta share
+_SYNTH_META_OPS = 200_000
+
+
+@dataclass(frozen=True)
+class PolicyDelta:
+    """One proposed per-scope mode change with its predicted economics."""
+
+    scope: str
+    old_mode: LayoutMode
+    new_mode: LayoutMode
+    predicted_old_s: float        # synthesized round under the old mode
+    predicted_new_s: float        # … and under the proposed mode
+
+    @property
+    def gain_s(self) -> float:
+        """Predicted steady-state win per synthesized round (seconds)."""
+        return self.predicted_old_s - self.predicted_new_s
+
+
+def phases_from_signature(scope: str, sig: np.ndarray,
+                          req_kib: float = 1024.0) -> List[Phase]:
+    """Synthesize a phase list whose signature matches the live one.
+
+    The inverse of ``telemetry.signature_from_phases`` up to volume: read
+    and write bandwidth phases split by read share, reads attributed
+    ``written_by="other"`` when the measured locality says the scope reads
+    across ranks, sequential vs random from the stride signature, plus a
+    metadata phase when the meta share is material.
+    """
+    read_share, meta_share, locality, seq, _, extent = \
+        np.asarray(sig, np.float64)
+    pattern = "seq" if seq >= 0.5 else "random"
+    phases: List[Phase] = []
+    if (1.0 - read_share) > 0.05:
+        phases.append(Phase("bw", op="write", topology="NN",
+                            pattern=pattern, req_kib=req_kib,
+                            total_mib=_SYNTH_MIB * (1.0 - read_share),
+                            scope=scope))
+    if read_share > 0.05:
+        phases.append(Phase("bw", op="read", topology="NN",
+                            pattern=pattern, req_kib=req_kib,
+                            total_mib=_SYNTH_MIB * read_share,
+                            written_by="self" if locality >= 0.5
+                            else "other",
+                            cross_rank=max(0.0, 1.0 - locality),
+                            scope=scope))
+    if meta_share > 0.02:
+        phases.append(Phase("meta", n_ops=int(_SYNTH_META_OPS * meta_share),
+                            meta_mix={"create": 0.4, "stat": 0.6},
+                            dir_pattern="unique" if extent < 0.75
+                            else "shared",
+                            cross_rank=max(0.0, 1.0 - locality),
+                            scope=scope))
+    return phases
+
+
+def mode_times(phases: List[Phase], n_nodes: int,
+               hw: Hardware = DEFAULT_HW,
+               seed: int = 0) -> Dict[LayoutMode, float]:
+    """Synthesized-round time of one phase group under every mode."""
+    return {m: sum(simulate_phase(p, m, n_nodes, hw, seed + i).time_s
+                   for i, p in enumerate(phases))
+            for m in LayoutMode}
+
+
+def propose_deltas(policy, live: Dict[str, Tuple[np.ndarray, float]],
+                   hw: Hardware = DEFAULT_HW,
+                   seed: int = 0) -> List[PolicyDelta]:
+    """Candidate mode changes for the drifted scopes, best-mode first.
+
+    ``live`` maps scope name → (signature, op-volume weight); scopes whose
+    measured-best mode equals their current mode produce no delta.
+    """
+    out = []
+    for scope, (sig, _w) in live.items():
+        phases = phases_from_signature(scope, sig)
+        if not phases:
+            continue
+        times = mode_times(phases, policy.n_nodes, hw, seed)
+        best = min(times, key=times.get)
+        cur = policy.mode_for_path(scope)
+        if best != cur:
+            out.append(PolicyDelta(scope, cur, best, times[cur],
+                                   times[best]))
+    return sorted(out, key=lambda d: -d.gain_s)
+
+
+def migration_cost_s(n_chunks: int, words: int, n_nodes: int,
+                     hw: Hardware = DEFAULT_HW) -> float:
+    """Modeled wall cost of relocating ``n_chunks`` stored chunks.
+
+    Each migrated chunk crosses the fabric twice (old-owner fetch + new-
+    owner ship) and the tombstone broadcast costs one more RPC-sized
+    message per node; aggregate NIC bandwidth absorbs the payload bytes.
+    Deliberately a *ceiling*-flavored estimate — the gate should err
+    toward keeping a marginal layout, not toward migration churn.
+    """
+    payload_mib = n_chunks * words * 4 * 2 / (1 << 20)
+    net_s = payload_mib / max(hw.net_mibs * n_nodes, 1e-9)
+    rpc_s = n_chunks * n_nodes * hw.rpc_ms / 1e3 / max(n_nodes, 1)
+    return net_s + rpc_s
+
+
+def gate_delta(delta: PolicyDelta, n_chunks: int, words: int,
+               n_nodes: int, horizon_rounds: float,
+               hw: Hardware = DEFAULT_HW) -> Tuple[bool, Dict[str, float]]:
+    """Cost/benefit gate: adopt iff the horizon win covers the move.
+
+    Returns (adopt, audit dict).  ``horizon_rounds`` is how many
+    synthesized steady-state rounds the new layout is expected to serve —
+    the controller's stand-in for remaining job length.
+    """
+    cost = migration_cost_s(n_chunks, words, n_nodes, hw)
+    win = delta.gain_s * horizon_rounds
+    return win > cost, {"migration_cost_s": cost, "horizon_win_s": win,
+                        "gain_per_round_s": delta.gain_s,
+                        "n_chunks": float(n_chunks)}
+
+
+def signature_workload(scope: str, sig: np.ndarray, n_nodes: int):
+    """The drifted signature as a ``Workload`` for the full selector path.
+
+    Lets ``intent.selector.select_layout`` reason over the live evidence
+    with the same prompt/knowledge machinery as the offline decision —
+    the source/script fields carry a synthesized description of the
+    measured behavior (the static extractor treats them as free text).
+    """
+    from repro.core.workloads import Workload
+    read_share, meta_share, locality, seq, _, _ = np.asarray(sig)
+    src = (f"/* runtime-synthesized: read_share={read_share:.2f} "
+           f"meta_share={meta_share:.2f} locality={locality:.2f} "
+           f"seq={seq:.2f} */\n"
+           + ("for (i...) pread(fd, buf, xfer, off);\n" if read_share > 0.5
+              else "for (i...) pwrite(fd, buf, xfer, off);\n"))
+    script = f"#!/bin/bash\n# scope {scope} live re-decision probe\n"
+    return Workload(app="live", test_id=f"drift-{scope.strip('/')}",
+                    description=f"runtime drift re-decision for {scope}",
+                    phases=phases_from_signature(scope, sig),
+                    source_code=src, job_script=script, n_nodes=n_nodes)

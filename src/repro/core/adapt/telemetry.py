@@ -1,0 +1,290 @@
+"""Per-scope runtime intent telemetry: production traffic as the probe.
+
+The intent pipeline's probe (intent/probe.py) replays a 1%-scale trace
+*before* the job runs; once the job is live, the request batches the client
+already routes carry the same behavioral signals for free.  This module
+accumulates them into a small dense ``(n_scopes, N_FEATURES)`` float32
+array with one jit-compiled scatter-add per client call — no Python
+per-request work, no second pass over payloads — keyed by the policy's
+scope hashes (row 0 is the default/unscoped bucket).
+
+Raw counters (columns of the dense array):
+
+====  ===========================================================
+col   meaning
+====  ===========================================================
+0     write requests
+1     read requests
+2     metadata ops
+3     payload words written
+4     payload words read
+5     self-affine reads (chunk previously written by this row)
+6     routed data requests (write+read denominators)
+7     sequential adjacent pairs (same path, chunk_id + 1)
+8     adjacent same-path pairs (seq denominator)
+9     expected requests beyond the uniform auto budget (pressure)
+10    max chunk_id + 1 seen (file-extent proxy, ``.at[].max``)
+11-14 chunk-id log2 histogram bins (<1, <4, <16, ≥16)
+====  ===========================================================
+
+The derived **signature** (``SIG_NAMES``) is the 6-dim normalized vector
+the drift detector and the re-decision pipeline consume: read share, meta
+share, locality (self-affinity), sequentiality, budget pressure and file
+extent — each in [0, 1].  ``signature_from_stats`` /
+``signature_from_phases`` express a decision-time probe (``RuntimeStats``)
+or a workload phase list in the same space, so "live vs. decided-from" is
+a like-for-like comparison.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import burst_buffer as bb
+from repro.core.layouts import str_hash
+from repro.core.policy import SCOPE_NONE, LayoutPolicy, as_policy
+from repro.kernels.chunk_router.ops import histogram_rows2d
+
+# raw feature columns
+F_WRITES, F_READS, F_META = 0, 1, 2
+F_WORDS_W, F_WORDS_R = 3, 4
+F_SELF, F_ROUTED = 5, 6
+F_SEQ, F_PAIRS = 7, 8
+F_PRESSURE = 9
+F_EXTENT_MAX = 10
+F_EXT0 = 11
+N_EXT_BINS = 4
+N_FEATURES = F_EXT0 + N_EXT_BINS
+
+#: derived signature dimensions, in order
+SIG_NAMES = ("read_share", "meta_share", "locality", "seq", "pressure",
+             "extent")
+
+DEFAULT_SCOPE = "<default>"
+
+
+def _rows_of(scope_hash: jax.Array, table: Tuple[int, ...]) -> jax.Array:
+    """Vectorized scope_hash → telemetry row (masked select, jit-safe).
+
+    ``table`` is the static tuple of registered scope hashes; unmatched
+    hashes (and ``SCOPE_NONE``) land in the default row 0.
+    """
+    sh = jnp.asarray(scope_hash).astype(jnp.int32)
+    rows = jnp.zeros(sh.shape, jnp.int32)
+    for i, h in enumerate(table):
+        rows = jnp.where(sh == h, jnp.int32(i + 1), rows)
+    return rows
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("kind", "words", "table", "n_nodes",
+                                    "capacity"))
+def _accumulate(counts, scope_hash, path_hash, chunk_id, dest, self_hint,
+                valid, *, kind: str, words: int, table: Tuple[int, ...],
+                n_nodes: int, capacity: float):
+    """One jit-side telemetry update for one client call.
+
+    ``kind`` ∈ {"write", "read", "meta"} is trace-time static, so each op
+    class compiles once per (table, shape) and the update is a handful of
+    fused scatter-adds on the (S, F) counter array.
+    """
+    rows = _rows_of(scope_hash, table).reshape(-1)
+    v = valid.reshape(-1).astype(jnp.float32)
+    cid = jnp.asarray(chunk_id).reshape(-1)
+
+    op_col = {"write": F_WRITES, "read": F_READS, "meta": F_META}[kind]
+    counts = counts.at[rows, op_col].add(v)
+    if kind != "meta":
+        wcol = F_WORDS_W if kind == "write" else F_WORDS_R
+        counts = counts.at[rows, wcol].add(v * words)
+        counts = counts.at[rows, F_ROUTED].add(v)
+        if kind == "read":
+            counts = counts.at[rows, F_SELF].add(
+                v * self_hint.reshape(-1).astype(jnp.float32))
+        # stride signature: adjacent same-path chunk-id+1 pairs per row
+        ph2 = jnp.asarray(path_hash)
+        cid2 = jnp.asarray(chunk_id)
+        v2 = valid
+        pair = (ph2[:, 1:] == ph2[:, :-1]) & v2[:, 1:] & v2[:, :-1]
+        seq = pair & (cid2[:, 1:] == cid2[:, :-1] + 1)
+        prow = _rows_of(jnp.asarray(scope_hash)[:, 1:], table).reshape(-1)
+        counts = counts.at[prow, F_PAIRS].add(
+            pair.reshape(-1).astype(jnp.float32))
+        counts = counts.at[prow, F_SEQ].add(
+            seq.reshape(-1).astype(jnp.float32))
+        # extent proxy: running max chunk_id + 1 and a log2 histogram
+        counts = counts.at[rows, F_EXTENT_MAX].max(
+            jnp.where(v > 0, cid + 1, 0).astype(jnp.float32))
+        ext_bin = jnp.where(cid < 1, 0,
+                            jnp.where(cid < 4, 1,
+                                      jnp.where(cid < 16, 2, 3)))
+        counts = counts.at[rows, F_EXT0 + ext_bin].add(v)
+    # budget pressure: expected share of each request beyond the uniform
+    # auto budget its destination would get (0 under ragged sizing, but
+    # still the signal re-decision needs: "this scope concentrates")
+    d = jnp.where(valid, jnp.asarray(dest).astype(jnp.int32), n_nodes)
+    hist = histogram_rows2d(d, n_bins=n_nodes + 1)[:, :n_nodes]
+    budget = bb._auto_budget(d.shape[1], n_nodes, capacity)
+    over = jnp.maximum(hist - budget, 0) / jnp.maximum(hist, 1)
+    per_req = jnp.take_along_axis(
+        over, jnp.clip(jnp.asarray(dest).astype(jnp.int32), 0,
+                       n_nodes - 1), axis=1)
+    counts = counts.at[rows, F_PRESSURE].add(v * per_req.reshape(-1))
+    return counts
+
+
+class ScopeTelemetry:
+    """Dense per-scope counters + the scope-hash registry behind them.
+
+    One instance rides on a ``BBClient`` (``telemetry=True``); the client
+    calls :meth:`record` from its write/read/meta entry points and the
+    adaptation controller snapshots/diffs :attr:`counts` per tick.
+    """
+
+    def __init__(self, policy):
+        """Build rows for the policy's scopes (+ the default row 0)."""
+        policy = as_policy(policy)
+        self.scope_names = (DEFAULT_SCOPE,) + tuple(
+            s for s, _ in policy.scopes)
+        self.table: Tuple[int, ...] = tuple(
+            str_hash(s) for s, _ in policy.scopes)
+        self.counts = jnp.zeros((len(self.table) + 1, N_FEATURES),
+                                jnp.float32)
+
+    def rebind(self, policy: LayoutPolicy) -> None:
+        """Follow a policy swap: keep counters of scopes that survive.
+
+        Rows are matched by scope *hash*; scopes present in both policies
+        keep their history (a mode change does not reset the signal),
+        vanished scopes are dropped, new scopes start at zero.
+        """
+        policy = as_policy(policy)
+        new = ScopeTelemetry(policy)
+        old_rows = {h: i + 1 for i, h in enumerate(self.table)}
+        cnt = np.asarray(new.counts).copy()
+        src = np.asarray(self.counts)
+        cnt[0] = src[0]
+        for i, h in enumerate(new.table):
+            if h in old_rows:
+                cnt[i + 1] = src[old_rows[h]]
+        self.scope_names = new.scope_names
+        self.table = new.table
+        self.counts = jnp.asarray(cnt)
+
+    def row_of(self, scope: str) -> int:
+        """Telemetry row index of a scope name (0 for the default row)."""
+        try:
+            return self.scope_names.index(scope)
+        except ValueError:
+            return 0
+
+    def record(self, kind: str, scope_hash, path_hash, chunk_id, dest,
+               valid, *, words: int = 0,
+               self_hint: Optional[jax.Array] = None,
+               n_nodes: int = 1, capacity: float = 2.0) -> None:
+        """Fold one client call into the counters (jit-side).
+
+        ``capacity`` is the client's uniform-budget headroom factor
+        (``ExchangeConfig.capacity``) — the pressure counter must
+        measure overflow against the budgets the data plane actually
+        uses, not a fixed default.
+        """
+        shape = jnp.asarray(path_hash).shape
+        sh = (jnp.full(shape, SCOPE_NONE, jnp.int32)
+              if scope_hash is None else jnp.asarray(scope_hash))
+        hint = (jnp.zeros(shape, bool) if self_hint is None
+                else jnp.asarray(self_hint, bool))
+        self.counts = _accumulate(
+            self.counts, sh, jnp.asarray(path_hash),
+            jnp.asarray(chunk_id), jnp.asarray(dest), hint,
+            jnp.asarray(valid, bool), kind=kind, words=int(words),
+            table=self.table, n_nodes=int(n_nodes),
+            capacity=float(capacity))
+
+    def snapshot(self) -> np.ndarray:
+        """Host copy of the counter array (controller tick bookkeeping)."""
+        return np.asarray(self.counts).copy()
+
+    def signatures(self, since: Optional[np.ndarray] = None
+                   ) -> Dict[str, Tuple[np.ndarray, float]]:
+        """Per-scope (signature, op-volume weight) since a snapshot."""
+        cur = self.snapshot()
+        delta = cur - since if since is not None else cur
+        out = {}
+        for i, name in enumerate(self.scope_names):
+            row = delta[i]
+            w = float(row[F_WRITES] + row[F_READS] + row[F_META])
+            if w > 0:
+                out[name] = (signature_of_row(row), w)
+        return out
+
+
+def signature_of_row(row: np.ndarray) -> np.ndarray:
+    """Derive the 6-dim normalized signature from one raw counter row."""
+    row = np.asarray(row, np.float64)
+    writes, reads, meta = row[F_WRITES], row[F_READS], row[F_META]
+    data = writes + reads
+    read_share = reads / max(data, 1.0)
+    meta_share = meta / max(meta + data, 1.0)
+    locality = (row[F_SELF] / max(reads, 1.0)) if reads else 1.0
+    seq = row[F_SEQ] / max(row[F_PAIRS], 1.0)
+    pressure = min(1.0, row[F_PRESSURE] / max(row[F_ROUTED], 1.0))
+    ext = row[F_EXT0:F_EXT0 + N_EXT_BINS]
+    tot = ext.sum()
+    extent = float((ext * np.arange(N_EXT_BINS)).sum() /
+                   max(tot, 1.0) / (N_EXT_BINS - 1))
+    return np.array([read_share, meta_share, locality, seq, pressure,
+                     extent], np.float64)
+
+
+def signature_from_stats(rs) -> np.ndarray:
+    """A probe's ``RuntimeStats`` in signature space (decision baseline).
+
+    Pressure has no probe-side counter (it is a data-plane artifact), so
+    it maps to 0; extent maps to the neutral midpoint — the drift config's
+    default weights de-emphasize both accordingly.
+    """
+    reads = max(rs.posix_reads, 1)
+    locality = 1.0 - min(1.0, rs.cross_rank_ops / reads)
+    return np.array([rs.read_ratio, rs.meta_share, locality,
+                     rs.posix_seq_ratio, 0.0, 0.5], np.float64)
+
+
+def signature_from_phases(phases) -> np.ndarray:
+    """A workload phase list in signature space (oracle baseline)."""
+    wr = rd = meta = cross = rdw = seqw = totw = 0.0
+    for p in phases:
+        if p.kind == "bw":
+            n = max(1.0, p.total_mib / max(p.req_kib / 1024.0, 1e-6))
+            if p.op == "write":
+                wr += n
+            else:
+                rd += n
+                if p.written_by in ("other", "shared"):
+                    cross += n
+                rdw += n
+            seqw += n * (1.0 if p.pattern in ("seq", "strided") else 0.0)
+            totw += n
+        elif p.kind == "iops":
+            rr = p.read_ratio if p.op == "mixed" else \
+                (1.0 if p.op == "read" else 0.0)
+            rd += p.n_ops * rr
+            wr += p.n_ops * (1 - rr)
+            if p.written_by in ("other", "shared"):
+                cross += p.n_ops * rr
+            rdw += p.n_ops * rr
+            seqw += 0.0
+            totw += p.n_ops
+        else:
+            meta += p.n_ops
+    data = wr + rd
+    return np.array([
+        rd / max(data, 1.0),
+        meta / max(meta + data, 1.0),
+        1.0 - cross / max(rdw, 1.0),
+        seqw / max(totw, 1.0),
+        0.0, 0.5], np.float64)

@@ -795,10 +795,17 @@ def forward_write(state: BBState, layout, path_hash: jax.Array,
                   exchange: Callable = stacked_exchange,
                   node_ids: Optional[jax.Array] = None,
                   config: ExchangeConfig = DENSE,
-                  global_sum: Callable = jnp.sum) -> BBState:
+                  global_sum: Callable = jnp.sum,
+                  update_meta: bool = True) -> BBState:
     """Each node writes a batch of chunks. path_hash/chunk_id/valid: (L, q);
     payload: (L, q, w).  L is the local node count (N stacked, 1 under
     shard_map); ``node_ids`` are the global ranks of the local nodes.
+
+    ``update_meta=False`` (trace-time static) skips the trailing metadata
+    create/update round — the relayout path uses it to re-home chunk data
+    WITHOUT re-deriving file sizes from chunk ids, because the old
+    epoch's exact stat sizes (not a reconstruction) are what dual-epoch
+    parity demands; ``migrate_rows`` moves the metadata explicitly.
 
     ``layout`` is a LayoutPolicy (or legacy LayoutParams); ``mode`` is the
     per-request mode array (policy default when omitted).  Requests of
@@ -893,6 +900,8 @@ def forward_write(state: BBState, layout, path_hash: jax.Array,
         state = _append_chunks(state, rk.reshape(L, -1, 2),
                                rp.reshape(L, rk.shape[1] * rk.shape[2], -1),
                                rv.reshape(L, -1))
+    if not update_meta:
+        return state
     # metadata: create/update file entries at their owners
     op = jnp.where(chunk_id == 0, OP_CREATE, OP_UPDATE)
     # mode 4 records the data location (writer rank) in the metadata
@@ -1174,3 +1183,219 @@ def meta_op(state: BBState, layout, op: jax.Array,
     size_out = collect_replies(owner, r_size, N)
     loc_out = collect_replies(owner, r_loc, N)
     return state, found & valid, size_out, loc_out
+
+
+# ---------------------------------------------------------------------------
+# live relayout: epoch migration of stored chunks between layout modes
+#
+# The online-adaptation subsystem (repro.core.adapt) re-decides a scope's
+# layout mode at runtime and then has to MOVE the scope's already-stored
+# chunks from their old-mode placement to the new one — losslessly, in
+# bounded installments, while reads keep being served.  ``migrate_rows`` is
+# that entry point: one installment of (path, chunk) worklist rows is
+# fetched under the old epoch (full read machinery, including the hybrid
+# meta phase and the Mode-1/4 stranded-data broadcast), probed at the new
+# placement (placement-only — deliberately NO fallback, so a copy that only
+# exists at the old placement is not mistaken for an already-migrated one),
+# copied through the regular exchange plane, and the old copies are
+# tombstoned everywhere except the new owner.  At every intermediate
+# watermark the dual-epoch read (try new placement, fall back to old — see
+# ``BBClient``) observes exactly the pre-migration data.
+# ---------------------------------------------------------------------------
+def _clear_chunks(state: BBState, keys: jax.Array,
+                  valid: jax.Array) -> BBState:
+    """Clear every stored version of the given keys, then re-compact.
+
+    keys: (N, m, 2); valid: (N, m).  All table slots whose (path_hash,
+    chunk_id) matches any valid request are blanked (key → EMPTY, payload
+    → 0).  Because ``_append_chunks`` allocates at the ``data_count``
+    cursor, holes in the middle of the table would be overwritten — so the
+    surviving rows are compacted to the front with a *stable* empty-last
+    argsort (relative order preserved ⇒ the newest-wins ``argmax`` in
+    ``_lookup_chunks`` still resolves duplicates correctly) and the cursor
+    becomes the live-row count.  The gather is ``gather_rows_batched`` —
+    the chunk_pack Pallas kernel on TPU."""
+    tbl = state.data_keys                                     # (N, cap, 2)
+    N, cap, _ = tbl.shape
+    hit = (tbl[:, None, :, 0] == keys[:, :, None, 0]) & \
+          (tbl[:, None, :, 1] == keys[:, :, None, 1]) & \
+          (tbl[:, None, :, 0] != EMPTY) & valid[:, :, None]   # (N, m, cap)
+    clear = hit.any(axis=1)                                   # (N, cap)
+    keep = (tbl[..., 0] != EMPTY) & ~clear
+    # stable empty-last permutation: live rows first, original order kept
+    order = jnp.argsort(jnp.where(keep, jnp.arange(cap)[None, :], cap),
+                        axis=1).astype(jnp.int32)
+    kept = jnp.take_along_axis(keep, order, axis=1)
+    new_keys = jnp.where(
+        kept[..., None], gather_rows_batched(tbl, order), EMPTY)
+    new_data = jnp.where(
+        kept[..., None], gather_rows_batched(state.data, order), 0)
+    count = keep.sum(axis=1).astype(jnp.int32)
+    return BBState(new_data, new_keys, count, state.meta_key,
+                   state.meta_size, state.meta_loc, state.meta_count,
+                   state.dropped)
+
+
+def _tombstone_broadcast(state: BBState, keys: jax.Array, valid: jax.Array,
+                         keep_rank: jax.Array, exchange: Callable,
+                         n_nodes: int,
+                         node_ids: Optional[jax.Array]) -> BBState:
+    """Clear old copies of migrated chunks on every node but the new owner.
+
+    keys/valid: (L, q); keep_rank: (L, q) — the global rank that now holds
+    the chunk (its copy survives).  A broadcast is used rather than routing
+    to the old owner because Mode-1/4 sources scatter copies by *writer*
+    rank, which the migrator cannot reconstruct; migration installments
+    are small and off the hot path, so the O(N²) tombstone round is the
+    simple-and-correct choice (mirroring ``_broadcast_lookup``)."""
+    L, q = valid.shape
+    kb = exchange(jnp.broadcast_to(keys[:, None], (L, n_nodes, q, 2)))
+    vb = exchange(jnp.broadcast_to(valid[:, None], (L, n_nodes, q)))
+    pb = exchange(jnp.broadcast_to(keep_rank[:, None], (L, n_nodes, q)))
+    me = _client_ranks(L, node_ids)                           # (L, 1)
+    ok = vb.reshape(L, -1) & (pb.reshape(L, -1) != me)
+    return _clear_chunks(state, kb.reshape(L, -1, 2), ok)
+
+
+def migrate_rows(state: BBState, layout, path_hash: jax.Array,
+                 chunk_id: jax.Array, valid: jax.Array,
+                 old_mode: jax.Array, new_mode: jax.Array,
+                 exchange: Callable = stacked_exchange,
+                 node_ids: Optional[jax.Array] = None,
+                 config: ExchangeConfig = COMPACTED,
+                 global_sum: Callable = jnp.sum
+                 ) -> Tuple[BBState, jax.Array, jax.Array]:
+    """Move one installment of chunks from old-mode to new-mode placement.
+
+    path_hash/chunk_id/valid: (L, q) worklist rows; ``old_mode``/
+    ``new_mode``: (L, q) per-request ``LayoutMode`` arrays (both must be
+    members of the policy's ``modes_present()`` — the transition policy a
+    ``LiveMigrator`` installs guarantees this).
+
+    Returns (state, moved (L, q), found_old (L, q)).  Sequence per
+    installment — lossless at every step:
+
+    1. fetch under the old epoch (``forward_read`` with the old modes:
+       hybrid meta phase and stranded-data broadcast included);
+    2. placement-only probe at the new destination (no fallback — an
+       unmigrated chunk must NOT appear present via its old copy);
+    3. copy rows found old but absent new through ``forward_write`` under
+       the new modes, data-only (``update_meta=False``);
+    4. move the metadata: the old entry's EXACT stat size is propagated
+       to the new owner (stat parity demands the old epoch's answer, not
+       a reconstruction from chunk ids — and an entry that exists in
+       NEITHER epoch, i.e. a concurrently removed file, is never
+       resurrected), then the old-owner entry is REMOVEd where the owner
+       actually moved;
+    5. tombstone old data copies everywhere but the new owner and
+       re-compact the node tables (``_clear_chunks``).
+
+    ``config`` must use uniform budgets (ragged specs are sized for ONE
+    destination pattern; this entry point routes the same rows under two
+    different mode arrays) — the lossless carry round keeps uniform
+    budgets exact.
+    """
+    policy = as_policy(layout)
+    if config.kind == "compacted" and (config.data_spec is not None or
+                                       config.meta_spec is not None):
+        raise ValueError(
+            "migrate_rows routes one worklist under two mode arrays; a "
+            "ragged spec sized for one of them would drop requests of the "
+            "other — use uniform budgets (lossless carry covers overflow)")
+    N = policy.n_nodes
+    L = state.data.shape[0]
+    client = _client_ranks(L, node_ids)
+    old_mode = jnp.asarray(old_mode).astype(jnp.int32)
+    new_mode = jnp.asarray(new_mode).astype(jnp.int32)
+    keys = jnp.stack([path_hash, chunk_id], axis=-1)
+
+    # 1. old-epoch fetch
+    payload, found_old = forward_read(
+        state, policy, path_hash, chunk_id, valid, mode=old_mode,
+        exchange=exchange, node_ids=node_ids, config=config,
+        global_sum=global_sum)
+
+    # 2. placement-only probe at the new destination.  ``write_dest`` is
+    # where step 3's copy would land (local-row rank for HYBRID/NODE_LOCAL
+    # targets, hash placement otherwise); HYBRID targets additionally
+    # resolve the new-epoch metadata's recorded data location first — a
+    # post-transition write or an earlier installment may already have
+    # placed a NEWER version on another rank, and copying the old bytes
+    # over its loc record would resurrect stale data.
+    write_dest = route_data(new_mode, N, path_hash, chunk_id, client,
+                            xp=jnp)
+    # new-epoch metadata snapshot (read-only): loc resolves hybrid probe
+    # destinations; size carries the exact already-propagated stat size
+    # to later installments of the same file (see step 4)
+    _, fm_new, sz_new, loc_new = meta_op(
+        state, policy, jnp.full_like(path_hash, OP_STAT), path_hash,
+        jnp.zeros_like(path_hash), jnp.full_like(path_hash, -1), valid,
+        mode=new_mode, exchange=exchange, node_ids=node_ids, config=config,
+        global_sum=global_sum)
+    probe_dest = write_dest
+    if LayoutMode.HYBRID in policy.modes_present():
+        probe_dest = jnp.where(
+            (new_mode == LayoutMode.HYBRID) & fm_new & (loc_new >= 0),
+            loc_new, write_dest)
+    if config.kind == "compacted":
+        _, found_new = _compact_lookup(state, probe_dest, keys, valid,
+                                       exchange, N, policy, config,
+                                       global_sum)
+    else:
+        _, found_new = _routed_lookup(state, probe_dest, keys, valid,
+                                      exchange, N)
+
+    # 3. copy the missing rows to their new placement — data only
+    # (update_meta=False): deriving sizes from chunk ids would "repair"
+    # whatever the old epoch's entry actually said, breaking stat parity
+    moved = valid & found_old & ~found_new
+    state = forward_write(state, policy, path_hash, chunk_id, payload,
+                          moved, mode=new_mode, exchange=exchange,
+                          node_ids=node_ids, config=config,
+                          global_sum=global_sum, update_meta=False)
+
+    # 4. metadata epoch move: the old owner's EXACT stat size at the new
+    # owner, then the old entry gone.  The old stat is issued under the
+    # old modes, so it is reachable from the worklist row for every mode
+    # when the driver writer-aligns the rows (``LiveMigrator`` does —
+    # Mode-1 metadata only exists at the writer); once the old entry is
+    # REMOVEd by an earlier installment, the new entry already carries
+    # the propagated size.
+    owner_old = route_meta(old_mode, N, policy.n_md_servers, path_hash,
+                           client, xp=jnp)
+    owner_new = route_meta(new_mode, N, policy.n_md_servers, path_hash,
+                           client, xp=jnp)
+    _, found_m, sz_old, _ = meta_op(
+        state, policy, jnp.full_like(path_hash, OP_STAT), path_hash,
+        jnp.zeros_like(path_hash), jnp.full_like(path_hash, -1), valid,
+        mode=old_mode, exchange=exchange, node_ids=node_ids, config=config,
+        global_sum=global_sum)
+    size_fix = jnp.where(found_m, sz_old, sz_new)
+    # hybrid targets record where the copy landed (this row); rows that
+    # didn't move keep whatever loc the new epoch already has (-1 = keep)
+    loc_fix = jnp.where(moved & (new_mode == LayoutMode.HYBRID),
+                        jnp.broadcast_to(client, path_hash.shape),
+                        jnp.full_like(path_hash, -1))
+    # UPDATE upserts: restrict to rows whose metadata exists in SOME
+    # epoch — a speculative worklist row can never mint a phantom entry,
+    # and a file removed mid-migration stays removed (its data still
+    # migrates, exactly as un-removed data outlives a remove in the
+    # single-epoch engine)
+    state, _, _, _ = meta_op(
+        state, policy, jnp.full_like(path_hash, OP_UPDATE), path_hash,
+        size_fix, loc_fix, valid & (found_m | fm_new), mode=new_mode,
+        exchange=exchange, node_ids=node_ids, config=config,
+        global_sum=global_sum)
+    state, _, _, _ = meta_op(
+        state, policy, jnp.full_like(path_hash, OP_REMOVE), path_hash,
+        jnp.zeros_like(path_hash), jnp.full_like(path_hash, -1),
+        valid & (owner_old != owner_new), mode=old_mode, exchange=exchange,
+        node_ids=node_ids, config=config, global_sum=global_sum)
+
+    # 5. tombstone the old copies — keep the rank that actually holds the
+    # surviving new-epoch copy (the write destination for rows copied this
+    # installment, the probe destination for rows already in place)
+    keep = jnp.where(moved, write_dest, probe_dest)
+    state = _tombstone_broadcast(state, keys, valid & found_old, keep,
+                                 exchange, N, node_ids)
+    return state, moved, found_old

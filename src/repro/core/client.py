@@ -35,6 +35,15 @@ Requests are batched structs (``BBRequest``): node-major arrays shaped
 ``(n_nodes, q)``.  ``BBClient.encode`` builds one from path strings, hashing
 each path and resolving its scope against the policy at the client boundary
 (the only place where paths exist as strings).
+
+Online adaptation (``telemetry=True`` + repro.core.adapt): the client
+additionally folds every call into per-scope intent counters (jit-side
+dense array — production traffic is the probe), keeps a host-side write
+registry (which files/chunks each scope holds, who wrote them), and
+supports **epoch-versioned policies**: ``install_policy`` swaps the plan
+mid-run, and while a ``LiveMigrator`` relocates a scope's stored chunks
+the armed dual-epoch fallback re-issues read/stat misses of that scope
+under the old mode — lossless at every migration watermark.
 """
 from __future__ import annotations
 
@@ -50,9 +59,24 @@ import numpy as np
 from repro.core import burst_buffer as bb
 from repro.core import exchange_select
 from repro.core.layouts import LayoutMode, route_data, route_meta, str_hash
-from repro.core.policy import LayoutPolicy, as_policy
+from repro.core.policy import SCOPE_NONE, LayoutPolicy, as_policy
 
 EXCHANGE_KINDS = ("auto", "dense", "compacted")
+
+
+@dataclass(frozen=True)
+class EpochFallback:
+    """Dual-epoch read/stat routing during a live relayout.
+
+    While a scope migrates, a chunk may still sit at its old-mode
+    placement; the client re-issues read/stat *misses* of the migrating
+    scope with ``old_mode`` so they are served from the old epoch (the
+    engine's Mode-1/4 stranded-data broadcast included).  Armed and
+    disarmed by ``BBClient.install_policy``.
+    """
+
+    scope_hash: int
+    old_mode: int
 
 
 @dataclass
@@ -115,6 +139,18 @@ def _build_stacked_ops(policy: LayoutPolicy,
     return _stacked_ops_for(policy.engine_key(), config)
 
 
+@functools.lru_cache(maxsize=64)
+def _stacked_migrate_for(engine_key, config: bb.ExchangeConfig):
+    """Jitted stacked ``migrate_rows``, cached like ``_stacked_ops_for``."""
+    policy = LayoutPolicy.for_engine_key(engine_key)
+
+    def _migrate(state, ph, cid, valid, old_mode, new_mode):
+        return bb.migrate_rows(state, policy, ph, cid, valid, old_mode,
+                               new_mode, config=config)
+
+    return jax.jit(_migrate)
+
+
 class BBClient:
     """Facade over the multi-mode burst-buffer engine.
 
@@ -132,7 +168,8 @@ class BBClient:
                  mcap: int = 256, state: Optional[bb.BBState] = None,
                  exchange: str = "auto", budget: Optional[int] = None,
                  meta_budget: Optional[int] = None, capacity: float = 2.0,
-                 lossless: bool = True, ragged: bool = True):
+                 lossless: bool = True, ragged: bool = True,
+                 telemetry: bool = False):
         """Build a client holding fresh (or adopted) node tables.
 
         Args:
@@ -157,6 +194,11 @@ class BBClient:
             measured histograms (stacked backend only; jit ops then
             specialize per traffic shape).  Ignored on a mesh backend,
             whose all_to_all needs uniform splits.
+          telemetry: accumulate per-scope intent counters on every call
+            (jit-side — see repro.core.adapt.telemetry) and maintain the
+            host-side write registry the ``LiveMigrator`` builds its
+            worklists from.  Adds a small host loop per call; off by
+            default for hot-path clients that don't adapt.
         """
         self.policy = as_policy(policy)
         self.backend = backend
@@ -180,7 +222,19 @@ class BBClient:
             raise ValueError(f"unknown backend {backend!r}; pass "
                              "'stacked' or a jax.sharding.Mesh")
         self._mesh_ops: Dict[bb.ExchangeConfig, Tuple] = {}
+        self._mesh_migrate: Dict[bb.ExchangeConfig, object] = {}
         self.ragged = bool(ragged) and not self._is_mesh
+        # ---- online adaptation state (repro.core.adapt) ----
+        self.epoch = 0
+        self.epoch_log: list = []
+        self.fallback: Optional[EpochFallback] = None
+        self.telemetry = None
+        # write registry: scope_hash → {path_hash: size}; path_hash → writer
+        self._files: Dict[int, Dict[int, int]] = {}
+        self._writer: Dict[int, int] = {}
+        if telemetry:
+            from repro.core.adapt.telemetry import ScopeTelemetry
+            self.telemetry = ScopeTelemetry(self.policy)
 
     # ---- request construction ----------------------------------------------
     def _path_codes_uncached(self, path: str) -> Tuple[int, int]:
@@ -239,6 +293,150 @@ class BBClient:
         """Chunk-id array; zeros (metadata convention) when omitted."""
         return (jnp.zeros(req.path_hash.shape, jnp.int32)
                 if req.chunk_id is None else req.chunk_id)
+
+    # ---- online adaptation: telemetry, registry, policy epochs --------------
+    def _scope_hashes(self, req: BBRequest) -> np.ndarray:
+        """Host copy of the request's scope hashes (SCOPE_NONE if absent)."""
+        if req.scope_hash is None:
+            return np.full(req.path_hash.shape, SCOPE_NONE, np.int32)
+        return np.asarray(req.scope_hash)
+
+    def _record_writes(self, req: BBRequest, valid: np.ndarray) -> None:
+        """Fold one write batch into the registry (worklists, affinity)."""
+        ph = np.asarray(req.path_hash)
+        cid = np.asarray(self._chunk_id(req))
+        sh = self._scope_hashes(req)
+        for i, j in zip(*np.nonzero(valid)):
+            p = int(ph[i, j])
+            files = self._files.setdefault(int(sh[i, j]), {})
+            files[p] = max(files.get(p, 0), int(cid[i, j]) + 1)
+            self._writer.setdefault(p, int(i))
+
+    def _self_hint(self, req: BBRequest) -> np.ndarray:
+        """Per-request "was written by this row" mask (locality signal)."""
+        ph = np.asarray(req.path_hash)
+        writer = self._writer
+        return np.fromiter(
+            (writer.get(int(p)) == i
+             for i, row in enumerate(ph) for p in row),
+            bool, count=ph.size).reshape(ph.shape)
+
+    def _observe(self, req: BBRequest, kind: str) -> None:
+        """Accumulate one call into the per-scope telemetry counters."""
+        mode = self._modes(req)
+        valid = self._valid(req)
+        ph, cid = req.path_hash, self._chunk_id(req)
+        ranks = self._client_ranks()
+        if kind == "meta":
+            dest = route_meta(mode, self.n_nodes, self.policy.n_md_servers,
+                              ph, ranks, xp=jnp)
+        else:
+            dest = route_data(mode, self.n_nodes, ph, cid, ranks, xp=jnp)
+        hint = None
+        if kind == "read":
+            hint = jnp.asarray(self._self_hint(req))
+        if kind == "write":
+            self._record_writes(req, np.asarray(valid))
+        self.telemetry.record(
+            kind, req.scope_hash, ph, cid, dest, valid,
+            words=0 if kind == "meta" else self.words, self_hint=hint,
+            n_nodes=self.n_nodes, capacity=self.exchange_config.capacity)
+
+    def scope_files(self, scope: str) -> Dict[int, int]:
+        """Registry view of one scope: {path_hash: size-in-chunks}.
+
+        Everything this client has routed into ``scope`` since
+        construction (requires ``telemetry=True`` for the registry to be
+        meaningful) — the ``LiveMigrator``'s worklist source.
+        """
+        return dict(self._files.get(str_hash(scope.rstrip("/") or "/"),
+                                    {}))
+
+    def writer_of(self, path_hash: int) -> Optional[int]:
+        """Registry view: the first rank that wrote ``path_hash`` (or
+        None).  Migration installments writer-align worklist rows so the
+        old epoch's metadata is reachable under every mode — Mode-1
+        entries only exist on the writer's node."""
+        return self._writer.get(int(path_hash))
+
+    def install_policy(self, policy, *, migrating: Optional[str] = None,
+                       old_mode: Optional[int] = None,
+                       new_mode: Optional[int] = None) -> "BBClient":
+        """Swap the layout plan mid-run — one policy epoch.
+
+        With ``migrating`` (a scope name) the dual-epoch fallback is
+        armed: read/stat misses of that scope are re-issued under
+        ``old_mode`` until the next ``install_policy`` (normally the
+        ``LiveMigrator.finish()`` call) disarms it.  Scope-string caches
+        are invalidated; telemetry rows follow the new scope set.
+        """
+        policy = as_policy(policy)
+        if policy.n_nodes != self.n_nodes:
+            raise ValueError(
+                f"policy n_nodes {policy.n_nodes} != client {self.n_nodes}"
+                " — a node-count change is a re-deployment, not an epoch")
+        self.policy = policy
+        self.epoch += 1
+        self._path_codes.cache_clear()
+        self._mesh_ops.clear()          # mesh ops close over the policy
+        self._mesh_migrate.clear()
+        self.fallback = (None if migrating is None else
+                         EpochFallback(str_hash(migrating), int(old_mode)))
+        if self.telemetry is not None:
+            self.telemetry.rebind(policy)
+        from repro.core.adapt.migrate import PolicyEpoch
+        self.epoch_log.append(PolicyEpoch(
+            self.epoch, policy, migrating,
+            None if old_mode is None else LayoutMode(old_mode),
+            None if new_mode is None else LayoutMode(new_mode)))
+        return self
+
+    def _migrate_config(self) -> bb.ExchangeConfig:
+        """Exchange config for relayout calls: uniform and lossless.
+
+        Ragged specs are sized for ONE destination pattern, but
+        ``migrate_rows`` routes the same worklist under two mode arrays —
+        so migration always uses uniform budgets with the carry round
+        (or the dense oracle when the client is pinned dense).
+        """
+        if self.exchange_mode == "dense":
+            return bb.DENSE
+        return dataclasses.replace(self.exchange_config, kind="compacted",
+                                   data_spec=None, meta_spec=None,
+                                   lossless=True)
+
+    def migrate_rows(self, path_hash, chunk_id, valid, *, old_mode: int,
+                     new_mode: int) -> Tuple[jax.Array, jax.Array]:
+        """One relayout installment: move chunks old-mode → new-mode.
+
+        Thin jitted dispatch over ``burst_buffer.migrate_rows`` (stacked)
+        or ``mesh_engine.build_mesh_migrate`` (mesh); drive it through a
+        ``LiveMigrator`` rather than directly.  Returns (moved,
+        found_old) masks.
+        """
+        allowed = {int(m) for m in self.policy.modes_present()}
+        if not {int(old_mode), int(new_mode)} <= allowed:
+            raise ValueError(
+                f"migration modes ({old_mode}, {new_mode}) must be in the "
+                f"installed policy's modes_present() {sorted(allowed)}; "
+                "install the transition policy first")
+        shape = path_hash.shape
+        old = jnp.full(shape, int(old_mode), jnp.int32)
+        new = jnp.full(shape, int(new_mode), jnp.int32)
+        cfg = self._migrate_config()
+        if self._is_mesh:
+            op = self._mesh_migrate.get(cfg)
+            if op is None:
+                from repro.core.mesh_engine import build_mesh_migrate
+                op = build_mesh_migrate(self.backend, self.policy, cfg)
+                self._mesh_migrate[cfg] = op
+        else:
+            op = _stacked_migrate_for(self.policy.engine_key(), cfg)
+        self.state, moved, found_old = op(
+            self.state, jnp.asarray(path_hash),
+            jnp.asarray(chunk_id, jnp.int32), jnp.asarray(valid, bool),
+            old, new)
+        return moved, found_old
 
     # ---- per-call exchange dispatch -----------------------------------------
     def _select_kind(self, q: int) -> str:
@@ -320,29 +518,65 @@ class BBClient:
     def write(self, req: BBRequest) -> "BBClient":
         """Write a batch of chunks; mutates the held state, returns self."""
         assert req.payload is not None, "write requires req.payload"
+        if self.telemetry is not None:
+            self._observe(req, "write")
         self.state = self._write(self.state, self._modes(req), req.path_hash,
                                  self._chunk_id(req), req.payload,
                                  self._valid(req))
         return self
 
     def read(self, req: BBRequest) -> Tuple[jax.Array, jax.Array]:
-        """Read a batch of chunks → (payload (L, q, w), found (L, q))."""
-        return self._read(self.state, self._modes(req), req.path_hash,
-                          self._chunk_id(req), self._valid(req))
+        """Read a batch of chunks → (payload (L, q, w), found (L, q)).
+
+        During a live relayout (``fallback`` armed), misses of the
+        migrating scope are re-issued under the old mode — a chunk the
+        watermark hasn't reached yet is served from its old placement.
+        """
+        if self.telemetry is not None:
+            self._observe(req, "read")
+        payload, found = self._read(self.state, self._modes(req),
+                                    req.path_hash, self._chunk_id(req),
+                                    self._valid(req))
+        fb = self.fallback
+        if fb is not None and req.scope_hash is not None:
+            miss = (np.asarray(self._valid(req)) & ~np.asarray(found) &
+                    (self._scope_hashes(req) == fb.scope_hash))
+            if miss.any():
+                old = jnp.full(req.path_hash.shape, fb.old_mode, jnp.int32)
+                p2, f2 = self._read(self.state, old, req.path_hash,
+                                    self._chunk_id(req), jnp.asarray(miss))
+                payload = jnp.where(f2[..., None], p2, payload)
+                found = jnp.logical_or(found, f2)
+        return payload, found
 
     # ---- metadata plane -----------------------------------------------------
-    def _meta_call(self, opcode: int, req: BBRequest):
-        """Shared create/stat/remove plumbing: fill defaults, run, unpack."""
+    def _meta_call(self, opcode: int, req: BBRequest, mode=None, valid=None):
+        """Shared create/stat/remove plumbing: fill defaults, run, unpack.
+
+        ``mode``/``valid`` override the request's resolution — the
+        dual-epoch retries pass the old-mode array with a miss mask."""
         shape = req.path_hash.shape
         op = jnp.full(shape, opcode, jnp.int32)
         size = (jnp.zeros(shape, jnp.int32) if req.size is None
                 else jnp.asarray(req.size, jnp.int32))
         loc = (jnp.full(shape, -1, jnp.int32) if req.loc is None
                else jnp.asarray(req.loc, jnp.int32))
+        if mode is None and self.telemetry is not None:
+            self._observe(req, "meta")
         self.state, found, r_size, r_loc = self._meta(
-            self.state, self._modes(req), op, req.path_hash, size, loc,
-            self._valid(req))
+            self.state, self._modes(req) if mode is None else mode, op,
+            req.path_hash, size, loc,
+            self._valid(req) if valid is None else valid)
         return found, r_size, r_loc
+
+    def _epoch_miss(self, req: BBRequest, found) -> Optional[np.ndarray]:
+        """Migrating-scope rows the new epoch missed (None if no retry)."""
+        fb = self.fallback
+        if fb is None or req.scope_hash is None:
+            return None
+        miss = (np.asarray(self._valid(req)) & ~np.asarray(found) &
+                (self._scope_hashes(req) == fb.scope_hash))
+        return miss if miss.any() else None
 
     def create(self, req: BBRequest) -> jax.Array:
         """Create file entries (idempotent) → found mask."""
@@ -350,10 +584,42 @@ class BBClient:
         return found
 
     def stat(self, req: BBRequest) -> Tuple[jax.Array, jax.Array, jax.Array]:
-        """Stat file entries → (found, size, data_location_rank)."""
-        return self._meta_call(bb.OP_STAT, req)
+        """Stat file entries → (found, size, data_location_rank).
+
+        Dual-epoch during a relayout: entries whose file the watermark
+        hasn't reached are still served by the old-mode owner."""
+        found, size, loc = self._meta_call(bb.OP_STAT, req)
+        miss = self._epoch_miss(req, found)
+        if miss is not None:
+            old = jnp.full(req.path_hash.shape, self.fallback.old_mode,
+                           jnp.int32)
+            f2, s2, l2 = self._meta_call(bb.OP_STAT, req, mode=old,
+                                         valid=jnp.asarray(miss))
+            found = jnp.logical_or(found, f2)
+            size = jnp.where(f2, s2, size)
+            loc = jnp.where(f2, l2, loc)
+        return found, size, loc
 
     def remove(self, req: BBRequest) -> jax.Array:
-        """Remove file entries (record fully cleared) → found mask."""
+        """Remove file entries (record fully cleared) → found mask.
+
+        During a relayout the remove is issued under BOTH epochs for the
+        migrating scope, so a not-yet-migrated old-owner entry cannot
+        resurface through the dual-epoch stat fallback."""
         found, _, _ = self._meta_call(bb.OP_REMOVE, req)
+        if self.telemetry is not None:
+            # prune the registry so later migration worklists skip the file
+            v = np.asarray(self._valid(req))
+            ph, sh = np.asarray(req.path_hash), self._scope_hashes(req)
+            for i, j in zip(*np.nonzero(v)):
+                self._files.get(int(sh[i, j]), {}).pop(int(ph[i, j]), None)
+        fb = self.fallback
+        if fb is not None and req.scope_hash is not None:
+            in_scope = (np.asarray(self._valid(req)) &
+                        (self._scope_hashes(req) == fb.scope_hash))
+            if in_scope.any():
+                old = jnp.full(req.path_hash.shape, fb.old_mode, jnp.int32)
+                f2, _, _ = self._meta_call(bb.OP_REMOVE, req, mode=old,
+                                           valid=jnp.asarray(in_scope))
+                found = jnp.logical_or(found, f2)
         return found

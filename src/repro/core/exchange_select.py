@@ -46,17 +46,36 @@ def round_us(row: Dict) -> float:
     return row["write_us"] + row["read_us"] + row["stat_us"]
 
 
+def _well_formed(row) -> bool:
+    """True when a bench row carries every field the crossover needs.
+
+    A half-written or hand-edited artifact must degrade the pick, never
+    break client construction on a fresh clone — malformed rows are
+    skipped; if nothing survives, ``load_crossover`` falls back."""
+    if not isinstance(row, dict):
+        return False
+    try:
+        int(row["n_nodes"]), int(row["batch"]), int(row["words"])
+        float(round_us(row))
+    except (KeyError, TypeError, ValueError):
+        return False
+    return row.get("backend") in ("dense", "compacted")
+
+
 def crossover_table(rows: Sequence[Dict]
                     ) -> Tuple[Tuple[int, int, int, str], ...]:
     """Reduce benchmark rows to ((n, q, w, winner), …) crossover cells.
 
     Rows are paired by (n_nodes, batch, words); a cell is kept only when
     both backends were measured, and its winner is the backend with the
-    lower write+read+stat round time.
+    lower write+read+stat round time.  Rows missing fields (or not dicts
+    at all) are tolerated and skipped.
     """
     by: Dict[Tuple[int, int, int], Dict[str, Dict]] = {}
     for r in rows:
-        key = (r["n_nodes"], r["batch"], r["words"])
+        if not _well_formed(r):
+            continue
+        key = (int(r["n_nodes"]), int(r["batch"]), int(r["words"]))
         by.setdefault(key, {})[r["backend"]] = r
     out = []
     for (n, q, w), pair in sorted(by.items()):
@@ -92,7 +111,8 @@ def load_crossover(root: Optional[str] = None
             if not p.is_file():
                 continue
             try:
-                rows = json.loads(p.read_text()).get("rows", [])
+                data = json.loads(p.read_text())
+                rows = data.get("rows", []) if isinstance(data, dict) else []
             except (OSError, ValueError):
                 continue
             table = crossover_table(rows)

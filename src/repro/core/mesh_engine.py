@@ -118,6 +118,40 @@ def build_mesh_ops(mesh: Mesh, policy,
     return write, read, meta
 
 
+def build_mesh_migrate(mesh: Mesh, policy,
+                       config: bb.ExchangeConfig = bb.COMPACTED):
+    """Jitted ``migrate_rows`` bound to a mesh + policy (live relayout).
+
+    Kept separate from ``build_mesh_ops`` so existing three-tuple callers
+    are untouched; the returned op takes
+    ``(state, ph, cid, valid, old_mode, new_mode)`` with every request
+    array sharded over the node axis, and runs the same old-fetch →
+    probe → copy → meta-move → tombstone sequence as the stacked
+    backend, with the carry-round predicate psum-reduced so every device
+    takes the same cond branch.
+    """
+    policy = as_policy(policy)
+    n_dev = mesh.shape[NODE_AXIS]
+    assert policy.n_nodes % n_dev == 0
+    local_n = policy.n_nodes // n_dev
+    req_spec = PS(NODE_AXIS)
+
+    def _migrate(state, ph, cid, valid, old_mode, new_mode):
+        state, moved, found_old = bb.migrate_rows(
+            state, policy, ph, cid, valid, old_mode, new_mode,
+            exchange=mesh_exchange, node_ids=_node_ids(local_n),
+            config=config, global_sum=mesh_global_sum)
+        return state, moved, found_old
+
+    state_specs = jax.tree_util.tree_map(
+        lambda _: PS(NODE_AXIS), bb.init_state(1, 1, 1, 1))
+    return jax.jit(shard_map(
+        _migrate, mesh=mesh,
+        in_specs=(state_specs, req_spec, req_spec, req_spec, req_spec,
+                  req_spec),
+        out_specs=(state_specs, req_spec, req_spec), check_rep=False))
+
+
 def make_node_mesh(n_devices: int = None) -> Mesh:
     """1-D device mesh over the node axis (default: all devices)."""
     devs = jax.devices()

@@ -37,6 +37,11 @@ class LoopConfig:
     n_bb_nodes: int = 8
     microbatches: int = 1
     log_every: int = 1
+    # online adaptation (repro.core.adapt): an AdaptationController whose
+    # tick() runs every adapt_every steps; when it adopts a new per-scope
+    # plan, the checkpoint manager follows it (CheckpointManager.set_policy)
+    adapt_controller: Optional[object] = None
+    adapt_every: int = 0
 
     @property
     def bb_policy(self) -> LayoutPolicy:
@@ -118,6 +123,14 @@ def run_training(model, cfg, batch_size: int, seq_len: int,
         if step % loop_cfg.ckpt_every == 0:
             ckpt.save(step, (params, opt_state,
                              jnp.asarray(pipeline.cursor(), jnp.int32)))
+
+        ctl = loop_cfg.adapt_controller
+        if ctl is not None and loop_cfg.adapt_every and \
+                step % loop_cfg.adapt_every == 0:
+            report = ctl.tick()
+            if report.phase in ("adopted", "completed"):
+                # checkpoint traffic follows the adapted per-scope plan
+                ckpt.set_policy(ctl.client.policy)
     ckpt.wait()
     result.final_step = step
     result.failure_log = log

@@ -709,6 +709,41 @@ def test_exchange_select_crossover_and_fallback():
     assert xs.pick_backend(64, 256, 16, xs.FALLBACK_TABLE) == "compacted"
 
 
+def test_exchange_select_tolerates_missing_or_malformed_bench(tmp_path):
+    """Fresh-clone robustness: no artifact, junk JSON, or rows missing
+    fields must all degrade to the baked-in table — never raise."""
+    from repro.core import exchange_select as xs
+    import json as _json
+    # 1. no benchmark files at all
+    assert xs.load_crossover(str(tmp_path)) == xs.FALLBACK_TABLE
+    # 2. unparseable / wrong-shaped artifacts
+    (tmp_path / "BENCH_pr3.json").write_text("{not json")
+    xs.refresh()
+    assert xs.load_crossover(str(tmp_path)) == xs.FALLBACK_TABLE
+    (tmp_path / "BENCH_pr3.json").write_text(_json.dumps([1, 2, 3]))
+    xs.refresh()
+    assert xs.load_crossover(str(tmp_path)) == xs.FALLBACK_TABLE
+    # 3. rows present but malformed (missing fields, wrong types, junk
+    # entries) — well-formed pairs still win, junk is skipped
+    good = [{"backend": b, "n_nodes": 4, "batch": 8, "words": 4,
+             "write_us": t, "read_us": t, "stat_us": t}
+            for b, t in (("dense", 1.0), ("compacted", 2.0))]
+    bad = [None, 42, {"backend": "dense"}, {"n_nodes": 8},
+           {"backend": "dense", "n_nodes": 8, "batch": 8, "words": 4,
+            "write_us": "oops", "read_us": 1, "stat_us": 1},
+           {"backend": "???", "n_nodes": 8, "batch": 8, "words": 4,
+            "write_us": 1, "read_us": 1, "stat_us": 1}]
+    (tmp_path / "BENCH_pr3.json").write_text(
+        _json.dumps({"rows": good + bad}))
+    xs.refresh()
+    assert xs.load_crossover(str(tmp_path)) == ((4, 8, 4, "dense"),)
+    # 4. all-malformed rows → fallback again
+    (tmp_path / "BENCH_pr3.json").write_text(_json.dumps({"rows": bad}))
+    xs.refresh()
+    assert xs.load_crossover(str(tmp_path)) == xs.FALLBACK_TABLE
+    xs.refresh()                  # drop the tmp tables for other tests
+
+
 MESH_COMPACT_SCRIPT = textwrap.dedent("""
     import os
     os.environ['XLA_FLAGS'] = '--xla_force_host_platform_device_count=4'

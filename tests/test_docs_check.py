@@ -15,6 +15,16 @@ def test_core_public_api_fully_documented():
     assert "OK" in r.stdout
 
 
+def test_docs_check_covers_the_adapt_subsystem():
+    """The online-adaptation package is inside the default gate root and
+    every one of its public symbols is documented."""
+    r = subprocess.run([sys.executable, str(TOOL),
+                        "src/repro/core/adapt"],
+                       capture_output=True, text=True, cwd=str(ROOT))
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "6 file(s)" in r.stdout
+
+
 def test_docs_check_flags_undocumented_symbols(tmp_path):
     pkg = tmp_path / "pkg"
     pkg.mkdir()

@@ -31,6 +31,19 @@ def test_encode_bench_reports_speedup():
     assert enc["warm_us"] > 0 and enc["uncached_loop_us"] > 0
 
 
+def test_fabric_rows_measure_mesh_all_to_all():
+    """Fabric timing wiring: real ``mesh_exchange`` under shard_map, with
+    the schema the auto-selection features will key on (ROADMAP)."""
+    rows = exchange_bench.fabric_rows([(4, 4), (8, 4)], iters=2)
+    assert len(rows) == 2
+    for r in rows:
+        assert {"n_devices", "slots", "words", "us_per_call",
+                "exchanged_bytes", "bytes_per_us"} <= set(r)
+        assert r["us_per_call"] > 0 and r["bytes_per_us"] > 0
+        assert r["exchanged_bytes"] == \
+            r["n_devices"] ** 2 * r["slots"] * r["words"] * 4
+
+
 @pytest.mark.slow
 def test_bench_quick_sweep(tmp_path):
     """The `make bench` sweep end-to-end (slow: jits both backends at 32
