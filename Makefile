@@ -1,6 +1,6 @@
 PY := PYTHONPATH=src python
 
-.PHONY: test test-fast examples bb-dryrun bench bench-adapt docs-check
+.PHONY: test test-fast examples bb-dryrun bench bench-adapt bench-mesh docs-check
 
 # full tier-1 suite (~minutes: includes model smoke + subprocess mesh tests)
 test:
@@ -29,6 +29,13 @@ bench:
 # (tests/test_adapt.py regression-checks the committed artifact's summary)
 bench-adapt:
 	$(PY) benchmarks/adapt_bench.py --out BENCH_pr4.json
+
+# mesh exchange perf: measured ragged plans (padded / ppermute) vs uniform
+# budgets on the real shard_map backend → BENCH_pr5.json, including the
+# re-measured fabric section the executor pick + migration gate key on
+# (tests/test_bench_regression.py pins the byte-reduction floor)
+bench-mesh:
+	$(PY) benchmarks/mesh_bench.py --quick --out BENCH_pr5.json
 
 # fail on any undocumented public symbol in the core API (tools/docs_check.py)
 docs-check:

@@ -28,7 +28,7 @@ from typing import Dict, List, Optional
 import numpy as np
 
 from repro.core.adapt.drift import DriftConfig, DriftDetector, DriftReport
-from repro.core.adapt.migrate import LiveMigrator
+from repro.core.adapt.migrate import DEFAULT_STEP_CHUNKS, LiveMigrator
 from repro.core.adapt.redecide import (PolicyDelta, gate_delta,
                                        propose_deltas)
 from repro.core.adapt.telemetry import DEFAULT_SCOPE
@@ -41,7 +41,7 @@ class AdaptConfig:
 
     drift: DriftConfig = field(default_factory=DriftConfig)
     horizon_rounds: float = 200.0   # expected remaining steady-state rounds
-    step_chunks: int = 64           # migration installment size
+    step_chunks: int = DEFAULT_STEP_CHUNKS   # migration installment size
     installments_per_tick: int = 1  # relayout work per tick while active
 
 
@@ -137,7 +137,8 @@ class AdaptationController:
             n_chunks = sum(self.client.scope_files(delta.scope).values())
             ok, audit = gate_delta(delta, n_chunks, self.client.words,
                                    self.client.n_nodes,
-                                   self.cfg.horizon_rounds, hw=self.hw)
+                                   self.cfg.horizon_rounds, hw=self.hw,
+                                   step_chunks=self.cfg.step_chunks)
             report.delta, report.gate = delta, audit
             if ok:
                 report.phase = "adopted"

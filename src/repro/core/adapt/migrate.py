@@ -37,6 +37,11 @@ import numpy as np
 from repro.core.layouts import LayoutMode, str_hash
 from repro.core.policy import LayoutPolicy, _norm_scope
 
+#: default relayout installment size (chunks per ``LiveMigrator.step``) —
+#: shared with the migration-cost model (``redecide.migration_cost_s``)
+#: so the modeled collective count tracks the real driver
+DEFAULT_STEP_CHUNKS = 64
+
 
 @dataclass(frozen=True)
 class PolicyEpoch:
@@ -98,7 +103,7 @@ class LiveMigrator:
     """
 
     def __init__(self, client, scope: str, new_mode: LayoutMode, *,
-                 step_chunks: int = 64):
+                 step_chunks: int = DEFAULT_STEP_CHUNKS):
         """Snapshot the worklist and install the transition policy.
 
         ``client`` must have its write registry enabled

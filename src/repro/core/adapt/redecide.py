@@ -20,7 +20,7 @@ deterministic and costs microseconds per tick.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, List, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -117,16 +117,62 @@ def propose_deltas(policy, live: Dict[str, Tuple[np.ndarray, float]],
     return sorted(out, key=lambda d: -d.gain_s)
 
 
+#: engine collectives per migrate_rows installment (old fetch, new-epoch
+#: stat, probe, copy, meta move ×2, tombstone ×3 — a ceiling)
+_COLLECTIVES_PER_INSTALLMENT = 12.0
+
+
+def _resolve_fabric(hw: Hardware,
+                    fabric: Optional[Tuple[float, float]]
+                    ) -> Optional[Tuple[float, float]]:
+    """The ONE measured-vs-analytic decision for the migration cost.
+
+    An explicit ``fabric`` wins; an explicit (non-default) ``hw`` means
+    the caller chose the analytic model, so on-disk artifacts never
+    override it; otherwise the measured fabric model applies when bench
+    rows exist.  ``migration_cost_s`` and ``gate_delta``'s audit flag
+    both go through here, so the flag can never disagree with the cost
+    path actually taken.
+    """
+    if fabric is not None:
+        return fabric
+    if hw is not DEFAULT_HW:
+        return None
+    from repro.core import exchange_select
+    a_us, bpu, measured = exchange_select.fabric_model()
+    return (a_us, bpu) if measured else None
+
+
 def migration_cost_s(n_chunks: int, words: int, n_nodes: int,
-                     hw: Hardware = DEFAULT_HW) -> float:
+                     hw: Hardware = DEFAULT_HW,
+                     fabric: Optional[Tuple[float, float]] = None,
+                     step_chunks: Optional[int] = None) -> float:
     """Modeled wall cost of relocating ``n_chunks`` stored chunks.
 
     Each migrated chunk crosses the fabric twice (old-owner fetch + new-
-    owner ship) and the tombstone broadcast costs one more RPC-sized
-    message per node; aggregate NIC bandwidth absorbs the payload bytes.
-    Deliberately a *ceiling*-flavored estimate — the gate should err
-    toward keeping a marginal layout, not toward migration churn.
+    owner ship); on top of the payload bytes every ``migrate_rows``
+    installment (``step_chunks`` rows, the ``LiveMigrator`` default when
+    omitted) pays a fixed number of collective launches.  When the
+    committed bench JSON carries measured ``fabric`` rows (the real
+    ``all_to_all`` timings — ``exchange_select.fabric_model``), the
+    estimate uses that deployment's measured bytes/µs and per-collective
+    overhead; with a non-default ``hw`` — an explicit caller model — or
+    no measured rows, the analytic ``Hardware`` path applies (NIC
+    bandwidth + per-chunk RPC cost), so a passed-in model is never
+    silently overridden by on-disk artifacts.  ``fabric`` forces the
+    measured path with the given (overhead µs, bytes/µs) — mainly for
+    tests.  Deliberately a *ceiling*-flavored estimate either way — the
+    gate should err toward keeping a marginal layout, not toward
+    migration churn.
     """
+    fabric = _resolve_fabric(hw, fabric)
+    if fabric is not None:
+        from repro.core.adapt.migrate import DEFAULT_STEP_CHUNKS
+        a_us, bpu = fabric
+        payload_bytes = n_chunks * words * 4 * 2
+        n_coll = _COLLECTIVES_PER_INSTALLMENT * max(
+            1.0, n_chunks / float(step_chunks or DEFAULT_STEP_CHUNKS))
+        return (payload_bytes / max(bpu, 1e-9) + n_coll * a_us) / 1e6
     payload_mib = n_chunks * words * 4 * 2 / (1 << 20)
     net_s = payload_mib / max(hw.net_mibs * n_nodes, 1e-9)
     rpc_s = n_chunks * n_nodes * hw.rpc_ms / 1e3 / max(n_nodes, 1)
@@ -135,18 +181,26 @@ def migration_cost_s(n_chunks: int, words: int, n_nodes: int,
 
 def gate_delta(delta: PolicyDelta, n_chunks: int, words: int,
                n_nodes: int, horizon_rounds: float,
-               hw: Hardware = DEFAULT_HW) -> Tuple[bool, Dict[str, float]]:
+               hw: Hardware = DEFAULT_HW,
+               step_chunks: Optional[int] = None
+               ) -> Tuple[bool, Dict[str, float]]:
     """Cost/benefit gate: adopt iff the horizon win covers the move.
 
     Returns (adopt, audit dict).  ``horizon_rounds`` is how many
     synthesized steady-state rounds the new layout is expected to serve —
-    the controller's stand-in for remaining job length.
+    the controller's stand-in for remaining job length; ``step_chunks``
+    is the driver's installment size (cost-model collective count).  The
+    audit's ``fabric_measured`` flag records whether the cost side came
+    from the measured fabric model or the analytic fallback.
     """
-    cost = migration_cost_s(n_chunks, words, n_nodes, hw)
+    measured = _resolve_fabric(hw, None) is not None
+    cost = migration_cost_s(n_chunks, words, n_nodes, hw,
+                            step_chunks=step_chunks)
     win = delta.gain_s * horizon_rounds
     return win > cost, {"migration_cost_s": cost, "horizon_win_s": win,
                         "gain_per_round_s": delta.gain_s,
-                        "n_chunks": float(n_chunks)}
+                        "n_chunks": float(n_chunks),
+                        "fabric_measured": float(measured)}
 
 
 def signature_workload(scope: str, sig: np.ndarray, n_nodes: int):

@@ -82,28 +82,44 @@ def _rows_of(scope_hash: jax.Array, table: Tuple[int, ...]) -> jax.Array:
 
 @functools.partial(jax.jit,
                    static_argnames=("kind", "words", "table", "n_nodes",
-                                    "capacity"))
+                                    "capacity", "per_node"))
 def _accumulate(counts, scope_hash, path_hash, chunk_id, dest, self_hint,
                 valid, *, kind: str, words: int, table: Tuple[int, ...],
-                n_nodes: int, capacity: float):
+                n_nodes: int, capacity: float, per_node: bool = False):
     """One jit-side telemetry update for one client call.
 
     ``kind`` ∈ {"write", "read", "meta"} is trace-time static, so each op
     class compiles once per (table, shape) and the update is a handful of
-    fused scatter-adds on the (S, F) counter array.
+    fused scatter-adds — on the (S, F) counter array, or with
+    ``per_node`` on the node-sharded (N, S, F) array (each source row
+    scatters into its own node slice, so the counters stay shardable
+    under ``shard_map`` and ``mesh_engine.build_telemetry_reduce`` can
+    psum them fleet-wide).
     """
-    rows = _rows_of(scope_hash, table).reshape(-1)
+    L = jnp.asarray(path_hash).shape[0]
+
+    def ix(srows, width):
+        """Scope rows (L, width) → counter scatter index prefix."""
+        s = srows.reshape(-1)
+        if not per_node:
+            return (s,)
+        n = jnp.broadcast_to(jnp.arange(L, dtype=jnp.int32)[:, None],
+                             (L, width)).reshape(-1)
+        return (n, s)
+
+    q = jnp.asarray(path_hash).shape[1]
+    rows = ix(_rows_of(scope_hash, table), q)
     v = valid.reshape(-1).astype(jnp.float32)
     cid = jnp.asarray(chunk_id).reshape(-1)
 
     op_col = {"write": F_WRITES, "read": F_READS, "meta": F_META}[kind]
-    counts = counts.at[rows, op_col].add(v)
+    counts = counts.at[rows + (op_col,)].add(v)
     if kind != "meta":
         wcol = F_WORDS_W if kind == "write" else F_WORDS_R
-        counts = counts.at[rows, wcol].add(v * words)
-        counts = counts.at[rows, F_ROUTED].add(v)
+        counts = counts.at[rows + (wcol,)].add(v * words)
+        counts = counts.at[rows + (F_ROUTED,)].add(v)
         if kind == "read":
-            counts = counts.at[rows, F_SELF].add(
+            counts = counts.at[rows + (F_SELF,)].add(
                 v * self_hint.reshape(-1).astype(jnp.float32))
         # stride signature: adjacent same-path chunk-id+1 pairs per row
         ph2 = jnp.asarray(path_hash)
@@ -111,18 +127,18 @@ def _accumulate(counts, scope_hash, path_hash, chunk_id, dest, self_hint,
         v2 = valid
         pair = (ph2[:, 1:] == ph2[:, :-1]) & v2[:, 1:] & v2[:, :-1]
         seq = pair & (cid2[:, 1:] == cid2[:, :-1] + 1)
-        prow = _rows_of(jnp.asarray(scope_hash)[:, 1:], table).reshape(-1)
-        counts = counts.at[prow, F_PAIRS].add(
+        prow = ix(_rows_of(jnp.asarray(scope_hash)[:, 1:], table), q - 1)
+        counts = counts.at[prow + (F_PAIRS,)].add(
             pair.reshape(-1).astype(jnp.float32))
-        counts = counts.at[prow, F_SEQ].add(
+        counts = counts.at[prow + (F_SEQ,)].add(
             seq.reshape(-1).astype(jnp.float32))
         # extent proxy: running max chunk_id + 1 and a log2 histogram
-        counts = counts.at[rows, F_EXTENT_MAX].max(
+        counts = counts.at[rows + (F_EXTENT_MAX,)].max(
             jnp.where(v > 0, cid + 1, 0).astype(jnp.float32))
         ext_bin = jnp.where(cid < 1, 0,
                             jnp.where(cid < 4, 1,
                                       jnp.where(cid < 16, 2, 3)))
-        counts = counts.at[rows, F_EXT0 + ext_bin].add(v)
+        counts = counts.at[rows + (F_EXT0 + ext_bin,)].add(v)
     # budget pressure: expected share of each request beyond the uniform
     # auto budget its destination would get (0 under ragged sizing, but
     # still the signal re-decision needs: "this scope concentrates")
@@ -133,7 +149,7 @@ def _accumulate(counts, scope_hash, path_hash, chunk_id, dest, self_hint,
     per_req = jnp.take_along_axis(
         over, jnp.clip(jnp.asarray(dest).astype(jnp.int32), 0,
                        n_nodes - 1), axis=1)
-    counts = counts.at[rows, F_PRESSURE].add(v * per_req.reshape(-1))
+    counts = counts.at[rows + (F_PRESSURE,)].add(v * per_req.reshape(-1))
     return counts
 
 
@@ -145,15 +161,28 @@ class ScopeTelemetry:
     adaptation controller snapshots/diffs :attr:`counts` per tick.
     """
 
-    def __init__(self, policy):
-        """Build rows for the policy's scopes (+ the default row 0)."""
+    def __init__(self, policy, per_node: int = 0):
+        """Build rows for the policy's scopes (+ the default row 0).
+
+        ``per_node`` > 0 keeps one counter slice per node — shape
+        (per_node, S, F) with each request row scattering into its own
+        node's slice — so the array shards over the node axis and
+        ``mesh_engine.build_telemetry_reduce`` can psum it: every host
+        then derives the SAME global signatures from its local shard,
+        and drift fires from any host instead of only the driving
+        client.  ``snapshot``/``signatures`` always present the reduced
+        (S, F) view, so the controller is layout-agnostic.
+        """
         policy = as_policy(policy)
         self.scope_names = (DEFAULT_SCOPE,) + tuple(
             s for s, _ in policy.scopes)
         self.table: Tuple[int, ...] = tuple(
             str_hash(s) for s, _ in policy.scopes)
-        self.counts = jnp.zeros((len(self.table) + 1, N_FEATURES),
-                                jnp.float32)
+        self.per_node = int(per_node)
+        shape = (len(self.table) + 1, N_FEATURES)
+        if self.per_node:
+            shape = (self.per_node,) + shape
+        self.counts = jnp.zeros(shape, jnp.float32)
 
     def rebind(self, policy: LayoutPolicy) -> None:
         """Follow a policy swap: keep counters of scopes that survive.
@@ -163,14 +192,14 @@ class ScopeTelemetry:
         vanished scopes are dropped, new scopes start at zero.
         """
         policy = as_policy(policy)
-        new = ScopeTelemetry(policy)
+        new = ScopeTelemetry(policy, per_node=self.per_node)
         old_rows = {h: i + 1 for i, h in enumerate(self.table)}
         cnt = np.asarray(new.counts).copy()
         src = np.asarray(self.counts)
-        cnt[0] = src[0]
+        cnt[..., 0, :] = src[..., 0, :]
         for i, h in enumerate(new.table):
             if h in old_rows:
-                cnt[i + 1] = src[old_rows[h]]
+                cnt[..., i + 1, :] = src[..., old_rows[h], :]
         self.scope_names = new.scope_names
         self.table = new.table
         self.counts = jnp.asarray(cnt)
@@ -203,11 +232,42 @@ class ScopeTelemetry:
             jnp.asarray(chunk_id), jnp.asarray(dest), hint,
             jnp.asarray(valid, bool), kind=kind, words=int(words),
             table=self.table, n_nodes=int(n_nodes),
-            capacity=float(capacity))
+            capacity=float(capacity), per_node=bool(self.per_node))
 
     def snapshot(self) -> np.ndarray:
-        """Host copy of the counter array (controller tick bookkeeping)."""
-        return np.asarray(self.counts).copy()
+        """Host copy of the (S, F) counter view (controller bookkeeping).
+
+        Per-node layouts are reduced over the node axis first — the same
+        sum ``build_telemetry_reduce`` psums on-fabric, so a controller
+        diffing snapshots behaves identically on both layouts.  (Under
+        the reduction ``F_EXTENT_MAX`` becomes a sum of per-node maxima —
+        an upper bound; the signature's extent dimension reads the
+        histogram bins, which sum exactly.)
+        """
+        c = np.asarray(self.counts)
+        return (c.sum(axis=0) if self.per_node else c).copy()
+
+    def suggest_align(self, q: int) -> int:
+        """Ragged-budget quantization step seeded from live extent.
+
+        The client's presizing loop quantizes measured per-destination
+        budgets to ``align`` lanes before maxing them into its running
+        floor; coarser lanes mean fewer distinct ``RaggedSpec`` shapes
+        (fewer XLA compiles) at slightly wider buffers.  Scopes that the
+        live extent histogram shows writing long files re-plan often
+        enough that coarser quantization pays: the step doubles per
+        extent-histogram band, clamped to ``q // 2`` so a small batch is
+        never padded past half its width.  With too little signal
+        (< 64 routed requests) the default 8 stands.
+        """
+        row = self.snapshot().sum(axis=0)
+        ext = row[F_EXT0:F_EXT0 + N_EXT_BINS]
+        tot = float(ext.sum())
+        if tot < 64:
+            return 8
+        mean_bin = float((ext * np.arange(N_EXT_BINS)).sum() / tot)
+        step = 8 * (2 ** int(min(2, max(0, round(mean_bin - 0.5)))))
+        return int(max(8, min(step, max(8, q // 2))))
 
     def signatures(self, since: Optional[np.ndarray] = None
                    ) -> Dict[str, Tuple[np.ndarray, float]]:

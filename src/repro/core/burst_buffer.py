@@ -11,24 +11,19 @@ leading ``N`` (node) axis — so the identical code runs
 Request routing goes through the vectorized routing triplet (layouts.py):
 every batch of I/O requests carries a **per-request mode array** (resolved
 from path scopes by a ``LayoutPolicy`` — see policy.py), is vector-routed by
-masked select over all four mode formulas, bucketized per destination,
-exchanged, applied to node-local tables, and replies travel the same path
-back.  Two exchange data planes share that structure (``ExchangeConfig``):
-the **dense** bucketize broadcast (every request materialized for every
-destination — O(N²·q) exchange volume, kept as the bit-for-bit parity
-oracle) and the **compacted** sort/gather plan (destination-ordered argsort
-+ budgeted Pallas gather — O(N·q)).  Compacted budgets come in two
-flavours: **ragged** per-destination budgets sized from the measured
-``chunk_router`` histograms (``RaggedSpec`` — lossless by construction,
-stacked backend), and **uniform** jit-static budgets (the mesh backend's
-all_to_all needs equal splits) whose overflow is *carried into a
-rarely-taken second exchange round* instead of dropped
-(``ExchangeConfig.lossless``, the default; ``lossless=False`` restores the
-legacy drop-and-account plane).  See the compacted-exchange section below,
-docs/exchange.md and DESIGN.md §7.  A single exchange round therefore serves a *mixed-mode* batch: the
-Mode-1/4 local fast path, hashed routing, and the hybrid two-phase read are
-mask-combined paths over the same bucketize/exchange plumbing.  Mode
-semantics:
+masked select over all four mode formulas, and then crosses the node fabric
+through the **unified exchange pipeline** (exchange_plan.py): each entry
+point builds ONE fused request buffer and one receiver-side apply closure
+and hands both to ``run_exchange``, which plans the routing permutation,
+ships the buffer through the executor the planner picked, applies it, and
+routes the replies back — including the one shared copy of the lossless
+carry round.  The executors (dense broadcast / uniform-budget all_to_all /
+packed ragged / ppermute-segmented mesh ragged) are interchangeable
+transports; see exchange_plan.py for the full matrix and docs/exchange.md
+for the measured trade-offs.  A single exchange round therefore serves a
+*mixed-mode* batch: the Mode-1/4 local fast path, hashed routing, and the
+hybrid two-phase read are mask-combined paths over the same plan/execute
+plumbing.  Mode semantics:
 
 * Mode 1: all routing → self.  Reads of remote data must broadcast-search
   (the paper's "stranded local data" penalty — structurally visible here).
@@ -44,25 +39,40 @@ the two-phase read entirely.  ``LayoutPolicy.uniform(m)`` thereby reproduces
 the old single-mode engine bit-for-bit (tests/test_policy.py pins this
 against seed-engine digests).
 
+``forward_read`` optionally takes a precomputed ``data_loc`` array — the
+client's **two-phase hybrid read** runs the metadata probe as its own
+call, sizes a measured ragged plan from the resolved destinations, and
+passes the locations back in so the engine skips its internal meta phase
+(bit-for-bit the same answers, at ragged instead of worst-case budgets).
+
 Prefer the ``BBClient`` facade (client.py) over calling these functions
-directly — it owns the mode resolution, the exchange wiring and the
+directly — it owns the mode resolution, the exchange planning and the
 ``node_ids`` plumbing for both the stacked and the shard_map mesh backends.
 """
 from __future__ import annotations
 
-import math
 from dataclasses import dataclass
-from functools import cached_property
-from typing import Callable, Dict, Optional, Tuple
+from typing import Callable, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core.layouts import LayoutMode, route_data, route_meta
 from repro.core.policy import LayoutPolicy, as_policy
 from repro.kernels.chunk_pack.ops import gather_rows_batched
-from repro.kernels.chunk_router.ops import histogram_rows2d
+
+# the unified exchange pipeline — re-exported here because this module is
+# the engine's public face (tests, benchmarks and the client reach the
+# planner's vocabulary as ``burst_buffer.*``)
+from repro.core.exchange_plan import (  # noqa: F401  (re-exports)
+    COMPACTED, DENSE, DenseExecutor, ExchangeConfig, ExchangePlan,
+    LOCAL_WRITE_MODES, MeshRaggedSpec, PermuteExecutor, RaggedExecutor,
+    RaggedSpec, UniformExecutor, _auto_budget, _carry_budget, _carry_taken,
+    _compact_plan, _compact_plan_ragged, bucketize, build_executor,
+    collect_replies, compact_bucketize, compact_collect,
+    compact_collect_flat, data_budget, exchange_footprint, meta_budget,
+    plan_mesh_ragged_spec, plan_ragged_spec, ragged_exchange,
+    ragged_reply_exchange, run_exchange, stacked_exchange, stacked_shift)
 
 EMPTY = jnp.int32(-1)
 
@@ -110,521 +120,10 @@ def init_state(n_nodes: int, cap: int, words: int, mcap: int) -> BBState:
     )
 
 
-# ---------------------------------------------------------------------------
-# exchange plumbing
-# ---------------------------------------------------------------------------
-def stacked_exchange(x: jax.Array) -> jax.Array:
-    """(N_src, N_dst, ...) -> (N_dst, N_src, ...): single-device all_to_all."""
-    return jnp.swapaxes(x, 0, 1)
-
-
-def bucketize(dest: jax.Array, valid: jax.Array, n_nodes: int,
-              payloads: Dict[str, jax.Array]
-              ) -> Tuple[Dict[str, jax.Array], jax.Array]:
-    """Route per-slot requests into per-destination buckets (no compaction).
-
-    dest, valid: (N, q).  payloads: {name: (N, q, ...)}.
-    Returns buckets {name: (N, n_nodes, q, ...)} and mask (N, n_nodes, q).
-    Slot positions are preserved so replies can be matched back.
-    """
-    hit = (dest[:, None, :] == jnp.arange(n_nodes)[None, :, None]) & \
-        valid[:, None, :]                                  # (N, n_dst, q)
-    out = {}
-    for name, p in payloads.items():
-        extra = (1,) * (p.ndim - 2)
-        pb = jnp.broadcast_to(p[:, None],
-                              (p.shape[0], n_nodes) + p.shape[1:])
-        out[name] = jnp.where(hit.reshape(hit.shape + extra), pb, 0)
-    return out, hit
-
-
-def collect_replies(dest: jax.Array, reply_buckets: jax.Array,
-                    n_nodes: int) -> jax.Array:
-    """Inverse of bucketize on the requester side.
-
-    reply_buckets: (N, n_nodes, q, ...) — replies in original slot positions.
-    Returns (N, q, ...): each slot takes the reply from its destination.
-    """
-    hit = dest[:, None, :] == jnp.arange(n_nodes)[None, :, None]
-    extra = (1,) * (reply_buckets.ndim - 3)
-    return jnp.sum(jnp.where(hit.reshape(hit.shape + extra),
-                             reply_buckets, 0), axis=1)
-
-
-# ---------------------------------------------------------------------------
-# compacted exchange: sort-based routing + budgeted gather (no N² broadcast)
-#
-# ``bucketize`` materializes every request for every destination — a dense
-# (L, n_nodes, q, ...) masked broadcast whose exchange traffic grows as
-# O(N²·q).  The compacted plan instead argsorts each node's requests into
-# destination-contiguous order, gathers payloads into per-destination
-# budgeted send buffers (the chunk_pack Pallas kernel on TPU), exchanges
-# only the budgeted columns, and scatters replies back through the inverse
-# permutation.  Budgets come in two flavours:
-#
-# * **ragged** (``ExchangeConfig.data_spec``/``meta_spec`` set): one packed
-#   (L, Σbᵢ) buffer whose per-destination segment widths bᵢ are the
-#   *measured* per-destination histogram maxima (``plan_ragged_spec``) —
-#   lossless by construction, and bit-for-bit the dense receive order.
-#   Segment widths are static Python ints, so this path re-specializes per
-#   distinct traffic shape; it is the stacked backend's default.
-# * **uniform** jit-static B per destination ((L, n_nodes, B) buffers — the
-#   only shape a mesh ``all_to_all`` can carry).  A valid request beyond
-#   its destination's budget is either *carried* into a second, cond-
-#   skipped exchange round with the worst-case residual budget ``q − B``
-#   (``lossless=True``, the default — the carry round is provably
-#   sufficient, see ``_carry_budget``), or *dropped and accounted* (the
-#   legacy ``lossless=False`` plane: ``dropped`` counter / found=False).
-#
-# With B = q (or ragged budgets) the compacted path is bit-for-bit the
-# dense path (same receive order: source-major, then original slot order),
-# which is what the parity suite pins.  Under the carry round, overflowed
-# requests append *after* every round-1 request instead of interleaved in
-# source-major order, so raw table layout can differ from dense while every
-# observable reply (read payload/found, stat size/loc) and every count
-# still matches — tests/test_compacted_exchange.py pins both properties.
-# ---------------------------------------------------------------------------
-@dataclass(frozen=True)
-class RaggedSpec:
-    """Static ragged per-destination send budgets (one exchange round).
-
-    ``budgets[d]`` is the number of send-buffer columns reserved for
-    destination ``d``; the packed buffer is (L, ``total``) with destination
-    ``d``'s segment at columns [``offsets[d]``, ``offsets[d]`` + bᵈ).
-    Budgets are concrete Python ints (jit-static): build one with
-    ``plan_ragged_spec`` on *concrete* destination arrays, outside jit.
-    Hash/eq are by budget tuple, so jitted engine ops cache per traffic
-    shape.
-    """
-
-    budgets: Tuple[int, ...]
-
-    @property
-    def n_nodes(self) -> int:
-        """Number of destinations (the length of the budget tuple)."""
-        return len(self.budgets)
-
-    @property
-    def total(self) -> int:
-        """Σbᵢ — the packed send-buffer column count."""
-        return sum(self.budgets)
-
-    @cached_property
-    def bmax(self) -> int:
-        """Widest per-destination segment (receive-side padding width)."""
-        return max(self.budgets) if self.budgets else 0
-
-    @cached_property
-    def offsets(self) -> np.ndarray:
-        """(n_nodes,) exclusive prefix sum of ``budgets``."""
-        return np.concatenate(
-            [[0], np.cumsum(self.budgets[:-1])]).astype(np.int32) \
-            if self.budgets else np.zeros(0, np.int32)
-
-    @cached_property
-    def dcol(self) -> np.ndarray:
-        """(total,) destination owning each packed column."""
-        return np.repeat(np.arange(self.n_nodes, dtype=np.int32),
-                         self.budgets)
-
-    @cached_property
-    def jcol(self) -> np.ndarray:
-        """(total,) rank of each packed column within its segment."""
-        return np.concatenate(
-            [np.arange(b, dtype=np.int32) for b in self.budgets]
-        ).astype(np.int32) if self.total else np.zeros(0, np.int32)
-
-    @cached_property
-    def recv_cols(self) -> np.ndarray:
-        """(n_nodes·bmax,) packed column feeding each padded receive slot.
-
-        Receive slot (d, j) reads packed column ``offsets[d] + j`` when
-        ``j < budgets[d]``, else the sentinel ``-1`` (zero-masked).
-        """
-        col = np.full((self.n_nodes, max(self.bmax, 0)), -1, np.int32)
-        for d, b in enumerate(self.budgets):
-            col[d, :b] = self.offsets[d] + np.arange(b)
-        return col.reshape(-1)
-
-    @cached_property
-    def send_cols(self) -> np.ndarray:
-        """(total,) padded receive slot holding each packed column's reply."""
-        return (self.dcol * max(self.bmax, 1) + self.jcol).astype(np.int32)
-
-
-@dataclass(frozen=True)
-class ExchangeConfig:
-    """Static data-plane exchange selection (trace-time, hashable).
-
-    kind: "dense" (PR-1 bucketize broadcast, the parity oracle) or
-    "compacted".  ``budget``/``meta_budget`` fix the uniform per-destination
-    slot counts; ``None`` auto-sizes them: data gets ``capacity·q/N``
-    (rounded up to a lane-friendly multiple of 8) under hash-spread modes
-    and ``B = q`` when a mode can structurally concentrate a batch on one
-    node (local writes, hybrid reads); metadata auto stays ``B = q`` — see
-    ``meta_budget``.
-
-    ``lossless`` (default True) carries uniform-budget overflow into a
-    cond-skipped second exchange round sized ``q − B`` instead of dropping
-    it, making the compacted plane lossless at ANY budget ≥ 1;
-    ``lossless=False`` restores the legacy drop-and-account semantics
-    (``dropped`` counter, found=False replies, skipped metadata phase).
-
-    ``data_spec``/``meta_spec`` switch the data/metadata exchange to the
-    ragged single-round plan (stacked backend only — a mesh ``all_to_all``
-    needs uniform splits).  ``BBClient`` measures and attaches these per
-    call; they are part of the config's hash so jitted ops specialize per
-    traffic shape.
-    """
-
-    kind: str = "dense"
-    budget: Optional[int] = None
-    meta_budget: Optional[int] = None
-    capacity: float = 2.0
-    lossless: bool = True
-    data_spec: Optional[RaggedSpec] = None
-    meta_spec: Optional[RaggedSpec] = None
-
-    def __post_init__(self):
-        if self.kind not in ("dense", "compacted"):
-            raise ValueError(f"unknown exchange kind {self.kind!r}; "
-                             "pass 'dense' or 'compacted'")
-
-
-DENSE = ExchangeConfig("dense")
-COMPACTED = ExchangeConfig("compacted")
-
-
-def _auto_budget(q: int, bins: int, capacity: float) -> int:
-    b = int(math.ceil(capacity * q / max(1, bins)))
-    return min(q, max(8, -(-b // 8) * 8))
-
-
-def data_budget(policy: LayoutPolicy, q: int, config: ExchangeConfig) -> int:
-    """Per-destination slot budget for the data exchange (static)."""
-    if config.budget is not None:
-        return max(1, min(q, config.budget))
-    if policy.modes_present() & LOCAL_WRITE_MODES:
-        # local writes / hybrid data_loc reads can send a whole batch to one
-        # node — concentration is structural, not hash-random, so stay exact
-        return q
-    return _auto_budget(q, policy.n_nodes, config.capacity)
-
-
-def meta_budget(policy: LayoutPolicy, q: int, config: ExchangeConfig) -> int:
-    """Per-destination slot budget for the metadata exchange (static).
-
-    Auto-sizing is lossless (``B = q``): metadata routes on ``path_hash``
-    alone, so a batch of chunks of ONE file — the canonical checkpoint
-    write — concentrates every op on a single owner no matter how many
-    nodes exist.  That is structural concentration, not hash spread, and
-    under-budgeting it silently corrupts stat() sizes.  Workloads with
-    per-request-distinct paths can opt into hash-spread sizing via an
-    explicit ``meta_budget`` (see benchmarks/exchange_bench.py).
-    """
-    if config.meta_budget is not None:
-        return max(1, min(q, config.meta_budget))
-    if config.budget is not None:
-        return max(1, min(q, config.budget))
-    return q
-
-
-def _compact_plan(dest: jax.Array, valid: jax.Array, n_nodes: int,
-                  budget: int) -> Tuple[jax.Array, jax.Array, jax.Array]:
-    """Sort-based routing plan for one exchange round.
-
-    dest/valid: (L, q).  Returns
-
-    * send_idx (L, n_nodes, budget) int32 — request slot feeding each send
-      buffer position, -1 for empty budget slots;
-    * reply_idx (L, q) int32 — position of each request's reply in the
-      flattened (n_nodes·budget) reply buffer, -1 for invalid/overflowed
-      requests;
-    * overflow (L,) int32 — valid requests beyond their destination budget.
-
-    The stable argsort keeps requests of one (src, dst) pair in original
-    slot order, so the receiver sees the same source-major arrival order as
-    the dense path and table append order is preserved bit-for-bit.
-    """
-    L, q = dest.shape
-    d = jnp.where(valid, dest, n_nodes).astype(jnp.int32)
-    order = jnp.argsort(d, axis=1).astype(jnp.int32)         # stable
-    sd = jnp.take_along_axis(d, order, axis=1)
-    # per-(row, destination) histogram (the chunk_router histogram stage,
-    # row-batched so the kernel's one-hot block stays (q, n_nodes+1)
-    # regardless of L — flattening rows into L·(n_nodes+1) bins would grow
-    # per-block VMEM quadratically with node count)
-    counts = histogram_rows2d(d, n_bins=n_nodes + 1)
-    counts = counts[:, :n_nodes]                             # (L, n_nodes)
-    start = jnp.cumsum(counts, axis=1) - counts              # exclusive
-    take = jnp.minimum(counts, budget)
-    b = jnp.arange(budget, dtype=jnp.int32)
-    pos = start[:, :, None] + b[None, None, :]               # (L, N, B)
-    src = jnp.take_along_axis(order,
-                              jnp.clip(pos, 0, q - 1).reshape(L, -1),
-                              axis=1).reshape(L, n_nodes, budget)
-    send_idx = jnp.where(b[None, None, :] < take[:, :, None], src, -1)
-    overflow = (counts - take).sum(axis=1).astype(jnp.int32)
-    # reply side: sorted position j holds request order[j]; its reply sits
-    # at flat slot dest·B + rank-within-run when it fit the budget
-    startx = jnp.concatenate(
-        [start, jnp.zeros((L, 1), jnp.int32)], axis=1)       # bin n_nodes
-    rank = jnp.arange(q, dtype=jnp.int32)[None, :] - \
-        jnp.take_along_axis(startx, sd, axis=1)
-    slot = jnp.where((sd < n_nodes) & (rank < budget),
-                     sd * budget + rank, -1)
-    rows = jnp.broadcast_to(jnp.arange(L)[:, None], (L, q))
-    reply_idx = jnp.zeros((L, q), jnp.int32).at[rows, order].set(slot)
-    return send_idx, reply_idx, overflow
-
-
-def _compact_gather(x: jax.Array, send_idx: jax.Array) -> jax.Array:
-    """Gather request rows into send order: (L, q, ...) → (L, N, B, ...).
-
-    Empty budget slots (send_idx == -1) come back zero.  On TPU this is the
-    chunk_pack Pallas kernel over the row-flattened batch.
-    """
-    L = x.shape[0]
-    out = gather_rows_batched(
-        x, send_idx.reshape(L, send_idx.shape[1] * send_idx.shape[2]))
-    return out.reshape((L,) + send_idx.shape[1:] + x.shape[2:])
-
-
-def compact_bucketize(dest: jax.Array, valid: jax.Array, n_nodes: int,
-                      budget: int, payloads: Dict[str, jax.Array]
-                      ) -> Tuple[Dict[str, jax.Array], jax.Array,
-                                 jax.Array]:
-    """Compacted twin of ``bucketize``: budgeted send buffers, no broadcast.
-
-    dest, valid: (L, q); payloads: {name: (L, q, ...)}.  Returns
-    (buffers {name: (L, n_nodes, budget, ...)}, reply_idx (L, q),
-    overflow (L,)).  Exchange the buffers, apply at the receiver, then
-    route replies back through ``compact_collect(reply_idx, …)``.  There
-    is deliberately no separate occupancy mask: append a ones-column to a
-    payload before bucketizing — empty budget slots gather the sentinel
-    zero row, so the column arrives as the receiver-side validity mask at
-    no extra collective (see the engine call sites).
-    """
-    send_idx, reply_idx, overflow = _compact_plan(dest, valid, n_nodes,
-                                                  budget)
-    buffers = {name: _compact_gather(p, send_idx)
-               for name, p in payloads.items()}
-    return buffers, reply_idx, overflow
-
-
-def compact_collect_flat(reply_idx: jax.Array, reply: jax.Array,
-                         fill: int = 0) -> jax.Array:
-    """Scatter replies back to request slots: (L, S, ...) → (L, q, ...).
-
-    ``reply_idx`` indexes the flat reply column axis ``S`` (``n_nodes·B``
-    for the uniform plan, the packed ``Σbᵢ`` for the ragged one).
-    Unserved requests (reply_idx == -1) get ``fill`` — 0 for payload/found,
-    -1 for meta size/loc (the dense path's not-found value).
-    """
-    L, q = reply_idx.shape
-    if reply.shape[1] == 0:                     # no traffic at all this round
-        return jnp.full((L, q) + reply.shape[2:], fill, reply.dtype)
-    extra = (1,) * (reply.ndim - 2)
-    safe = jnp.clip(reply_idx, 0, reply.shape[1] - 1)
-    got = jnp.take_along_axis(reply, safe.reshape((L, q) + extra), axis=1)
-    return jnp.where((reply_idx >= 0).reshape((L, q) + extra), got, fill)
-
-
-def compact_collect(reply_idx: jax.Array, reply: jax.Array,
-                    fill: int = 0) -> jax.Array:
-    """Uniform-budget twin of ``compact_collect_flat``: reply is
-    (L, N, B, ...) and is flattened over the (destination, budget) axes."""
-    L = reply.shape[0]
-    return compact_collect_flat(
-        reply_idx,
-        reply.reshape((L, reply.shape[1] * reply.shape[2]) + reply.shape[3:]),
-        fill)
-
-
-# ---------------------------------------------------------------------------
-# ragged plan: histogram-sized per-destination budgets, packed (L, Σbᵢ)
-# ---------------------------------------------------------------------------
-def plan_ragged_spec(dest: jax.Array, valid: jax.Array, n_nodes: int,
-                     align: int = 8) -> RaggedSpec:
-    """Measure per-destination traffic and build a lossless ``RaggedSpec``.
-
-    dest/valid: *concrete* (L, q) arrays — budgets become Python ints, so
-    this must run eagerly (outside jit); calling it on tracers raises.
-    Budget ``d`` is the per-row ``chunk_router`` histogram maximum over all
-    source rows — the smallest per-destination segment no row can overflow
-    — rounded UP to a multiple of ``align`` (clamped to the row length q;
-    zero-traffic destinations stay 0).  Rounding never loses a request; it
-    exists to collapse the jit-shape space: exact maxima would mint a
-    fresh ``RaggedSpec`` (→ a fresh XLA compile of the engine ops) for
-    nearly every hashed batch, while quantized budgets land on a handful
-    of shapes per workload.  ``align=1`` gives exact sizing.
-    """
-    d = jnp.where(jnp.asarray(valid), jnp.asarray(dest).astype(jnp.int32),
-                  n_nodes)
-    q = d.shape[1]
-    counts = histogram_rows2d(d, n_bins=n_nodes + 1)[:, :n_nodes]
-    budgets = np.asarray(counts).max(axis=0) if counts.shape[0] else \
-        np.zeros(n_nodes, np.int64)
-    budgets = np.where(budgets > 0,
-                       np.minimum(q, -(-budgets // align) * align), 0)
-    return RaggedSpec(tuple(int(b) for b in budgets))
-
-
-def _compact_plan_ragged(dest: jax.Array, valid: jax.Array, n_nodes: int,
-                         spec: RaggedSpec
-                         ) -> Tuple[jax.Array, jax.Array, jax.Array]:
-    """Ragged twin of ``_compact_plan``: per-destination segment widths.
-
-    Returns (send_idx (L, Σbᵢ), reply_idx (L, q), overflow (L,)).  When
-    ``spec`` comes from ``plan_ragged_spec`` on the same dest/valid,
-    overflow is zero by construction; it is still computed so property
-    tests can assert the invariant.
-    """
-    L, q = dest.shape
-    d = jnp.where(valid, dest, n_nodes).astype(jnp.int32)
-    order = jnp.argsort(d, axis=1).astype(jnp.int32)         # stable
-    sd = jnp.take_along_axis(d, order, axis=1)
-    counts = histogram_rows2d(d, n_bins=n_nodes + 1)[:, :n_nodes]
-    start = jnp.cumsum(counts, axis=1) - counts              # exclusive
-    dcol = jnp.asarray(spec.dcol)                            # (S,)
-    jcol = jnp.asarray(spec.jcol)                            # (S,)
-    if spec.total:
-        pos = start[:, dcol] + jcol[None, :]                 # (L, S)
-        src = jnp.take_along_axis(order, jnp.clip(pos, 0, q - 1), axis=1)
-        send_idx = jnp.where(jcol[None, :] < counts[:, dcol], src, -1)
-    else:
-        send_idx = jnp.zeros((L, 0), jnp.int32)
-    b_arr = jnp.asarray(np.asarray(spec.budgets + (0,), np.int32))
-    off_arr = jnp.asarray(np.concatenate([spec.offsets, [0]]).astype(
-        np.int32))
-    take = jnp.minimum(counts, b_arr[None, :n_nodes])
-    overflow = (counts - take).sum(axis=1).astype(jnp.int32)
-    startx = jnp.concatenate(
-        [start, jnp.zeros((L, 1), jnp.int32)], axis=1)       # bin n_nodes
-    rank = jnp.arange(q, dtype=jnp.int32)[None, :] - \
-        jnp.take_along_axis(startx, sd, axis=1)
-    slot = jnp.where((sd < n_nodes) & (rank < b_arr[sd]),
-                     off_arr[sd] + rank, -1)
-    rows = jnp.broadcast_to(jnp.arange(L)[:, None], (L, q))
-    reply_idx = jnp.zeros((L, q), jnp.int32).at[rows, order].set(slot)
-    return send_idx, reply_idx, overflow
-
-
-def ragged_exchange(x: jax.Array, spec: RaggedSpec,
-                    n_nodes: int) -> jax.Array:
-    """Stacked (single-device) exchange of a packed ragged send buffer.
-
-    x: (L = n_nodes, Σbᵢ, ...) — source-major packed segments.  Returns the
-    receiver view (n_nodes, n_nodes·bmax, ...): destination ``d`` sees its
-    own segment from every source, padded to the widest segment ``bmax``
-    with zero rows (the pad slots carry the sentinel occupancy 0, so the
-    fused ones-column trick marks them invalid at no extra traffic).
-
-    Only the Σbᵢ packed columns are modeled as crossing the exchange — the
-    pad-to-bmax happens on the receiver.  There is deliberately no mesh
-    twin: ``lax.all_to_all`` needs uniform splits, which is exactly why the
-    mesh backend keeps uniform budgets + the carry round instead.
-    """
-    col = jnp.asarray(spec.recv_cols)                    # (n_nodes·bmax,)
-    if col.shape[0] == 0:
-        return jnp.zeros((n_nodes, 0) + x.shape[2:], x.dtype)
-    xg = jnp.take(x, jnp.maximum(col, 0), axis=1)        # (L, N·bmax, ...)
-    mask = (col >= 0).reshape((1, -1) + (1,) * (x.ndim - 2))
-    xg = jnp.where(mask, xg, 0)
-    xg = xg.reshape((x.shape[0], n_nodes, spec.bmax) + x.shape[2:])
-    return jnp.swapaxes(xg, 0, 1).reshape(
-        (n_nodes, x.shape[0] * spec.bmax) + x.shape[2:])
-
-
-def ragged_reply_exchange(reply: jax.Array, spec: RaggedSpec,
-                          n_nodes: int) -> jax.Array:
-    """Inverse of ``ragged_exchange`` for the reply direction.
-
-    reply: (n_nodes, n_nodes·bmax, ...) — replies computed at the receiver
-    in padded receive order.  Returns (n_nodes, Σbᵢ, ...): each source's
-    packed reply columns, ready for ``compact_collect_flat``.
-    """
-    if spec.total == 0:
-        return jnp.zeros((n_nodes, 0) + reply.shape[2:], reply.dtype)
-    r = reply.reshape((n_nodes, n_nodes, spec.bmax) + reply.shape[2:])
-    rT = jnp.swapaxes(r, 0, 1)                       # (src, dst, bmax, ...)
-    flat = rT.reshape((n_nodes, n_nodes * spec.bmax) + reply.shape[2:])
-    return jnp.take(flat, jnp.asarray(spec.send_cols), axis=1)
-
-
 def _add_dropped(state: BBState, extra: jax.Array) -> BBState:
     return BBState(state.data, state.data_keys, state.data_count,
                    state.meta_key, state.meta_size, state.meta_loc,
                    state.meta_count, state.dropped + extra)
-
-
-def _carry_budget(q: int, b: int) -> int:
-    """Static budget of the lossless carry round after a round at ``b``.
-
-    A destination receives at most ``q`` valid requests from one source
-    row, round 1 serves ``min(count, b)`` of them, so the residual per
-    (source, destination) pair is at most ``q − b`` — one carry round at
-    that budget always terminates with zero residual, which is the
-    convergence bound that makes two static rounds sufficient at ANY
-    budget ≥ 1.
-    """
-    return max(0, q - b)
-
-
-def _carry_taken(overflow: jax.Array, global_sum: Callable) -> jax.Array:
-    """Scalar predicate gating the carry round (shared by every node).
-
-    ``global_sum`` must reduce over ALL nodes (``jnp.sum`` on the stacked
-    backend where every row is local; a psum-composed reduction under
-    shard_map) so the cond takes the same branch on every device and the
-    collectives inside stay aligned.
-    """
-    return global_sum(overflow) > 0
-
-
-def exchange_footprint(policy, q: int, words: int,
-                       config: ExchangeConfig) -> Dict[str, int]:
-    """Modeled int32 elements crossing the exchange per engine call.
-
-    Counts every exchanged buffer (requests, masks and replies) for one
-    write, one read (no broadcast fallback) and one metadata round; the
-    benchmark harness converts these to bytes.  Dense buffers carry q slots
-    per (src, dst) pair; uniform compacted ones the per-destination budget;
-    ragged ones the measured Σbᵢ packed columns per source row.  The
-    ``*_carry_elems`` fields are the worst case of the cond-skipped
-    lossless carry round — 0 when no overflow occurs (the common case) and
-    0 by construction for ragged/lossless-B=q plans.
-    """
-    policy = as_policy(policy)
-    N = policy.n_nodes
-    if config.kind == "compacted":
-        bd, bm = data_budget(policy, q, config), meta_budget(policy, q,
-                                                             config)
-    else:
-        bd = bm = q
-    # packed request columns per source row, over all destinations
-    cols_d = config.data_spec.total if (
-        config.kind == "compacted" and config.data_spec is not None
-    ) else N * bd
-    cols_m = config.meta_spec.total if (
-        config.kind == "compacted" and config.meta_spec is not None
-    ) else N * bm
-    w_meta, w_wr, w_rd = (4 + 1) + 3, (2 + words + 1), (2 + 1) + (words + 1)
-    meta = N * cols_m * w_meta                # op/key/size/loc+mask → replies
-    write = N * cols_d * w_wr + meta          # keys+payload+mask, then meta
-    read = N * cols_d * w_rd
-    carry = {"write_carry_elems": 0, "read_carry_elems": 0,
-             "meta_carry_elems": 0}
-    if config.kind == "compacted" and config.lossless:
-        cd = 0 if config.data_spec is not None else _carry_budget(q, bd)
-        cm = 0 if config.meta_spec is not None else _carry_budget(q, bm)
-        carry = {"write_carry_elems": N * N * cd * w_wr + N * N * cm * w_meta,
-                 "read_carry_elems": N * N * cd * w_rd,
-                 "meta_carry_elems": N * N * cm * w_meta}
-    return {"kind": config.kind, "data_budget": bd, "meta_budget": bm,
-            "lossless": config.lossless,
-            "write_elems": write, "read_elems": read, "meta_elems": meta,
-            **carry}
 
 
 # ---------------------------------------------------------------------------
@@ -771,11 +270,10 @@ def _meta_apply(state: BBState, op: jax.Array, key: jax.Array,
 
 
 # ---------------------------------------------------------------------------
-# client-visible batched operations
+# client-visible batched operations — every cross-node phase below is ONE
+# ``run_exchange`` call: a fused request buffer plus a receiver-side apply
+# closure; the planner (exchange_plan.build_executor) owns all routing
 # ---------------------------------------------------------------------------
-LOCAL_WRITE_MODES = frozenset({LayoutMode.NODE_LOCAL, LayoutMode.HYBRID})
-
-
 def _client_ranks(L: int, node_ids: Optional[jax.Array]) -> jax.Array:
     return (jnp.arange(L, dtype=jnp.int32) if node_ids is None
             else node_ids.astype(jnp.int32))[:, None]
@@ -789,6 +287,12 @@ def _mode_array(policy: LayoutPolicy, mode: Optional[jax.Array],
     return jnp.asarray(mode).astype(jnp.int32)
 
 
+def _ones_col(ref: jax.Array) -> jax.Array:
+    """The fused occupancy column: arrives as the receiver validity mask
+    (empty plan slots gather the sentinel zero row)."""
+    return jnp.ones(ref.shape[:-1] + (1,), jnp.int32)
+
+
 def forward_write(state: BBState, layout, path_hash: jax.Array,
                   chunk_id: jax.Array, payload: jax.Array, valid: jax.Array,
                   mode: Optional[jax.Array] = None,
@@ -796,7 +300,8 @@ def forward_write(state: BBState, layout, path_hash: jax.Array,
                   node_ids: Optional[jax.Array] = None,
                   config: ExchangeConfig = DENSE,
                   global_sum: Callable = jnp.sum,
-                  update_meta: bool = True) -> BBState:
+                  update_meta: bool = True,
+                  shift: Callable = stacked_shift) -> BBState:
     """Each node writes a batch of chunks. path_hash/chunk_id/valid: (L, q);
     payload: (L, q, w).  L is the local node count (N stacked, 1 under
     shard_map); ``node_ids`` are the global ranks of the local nodes.
@@ -809,21 +314,19 @@ def forward_write(state: BBState, layout, path_hash: jax.Array,
 
     ``layout`` is a LayoutPolicy (or legacy LayoutParams); ``mode`` is the
     per-request mode array (policy default when omitted).  Requests of
-    different modes share one bucketize/exchange round.  Mode values MUST
-    be members of ``policy.modes_present()`` — the engine specializes its
+    different modes share one exchange round.  Mode values MUST be
+    members of ``policy.modes_present()`` — the engine specializes its
     fast paths on that static set (``BBClient`` enforces this).
 
-    ``config`` picks the exchange data plane: dense bucketize broadcast or
-    the sort/gather compacted plan — ragged one-round when
-    ``config.data_spec`` is set, else uniform budgets whose overflow is
-    carried into a cond-skipped second round (``config.lossless``, the
-    default) or dropped and accounted (``lossless=False``).
-    ``global_sum`` must reduce an (L,) array over ALL nodes (psum-composed
-    under shard_map) — it gates the carry round consistently."""
+    ``config`` picks the exchange data plane (see exchange_plan.py); the
+    planner resolves it to one executor per phase.  ``global_sum`` must
+    reduce an (L,) array over ALL nodes (psum-composed under shard_map) —
+    it gates the carry round consistently; ``shift`` is the node-axis
+    rotation collective the ppermute executor rides (``stacked_shift`` or
+    the mesh backend's ``lax.ppermute`` closure)."""
     policy = as_policy(layout)
     N = policy.n_nodes
-    L = state.data.shape[0]
-    client = _client_ranks(L, node_ids)
+    client = _client_ranks(state.data.shape[0], node_ids)
     mode = _mode_array(policy, mode, path_hash)
     # tables are int32; converting up front is the same truncation the
     # at-set append applies, and keeps the fused compacted buffer from
@@ -837,69 +340,25 @@ def forward_write(state: BBState, layout, path_hash: jax.Array,
         # every possible mode writes locally: no exchange at all
         # (the Mode-1/4 fast path, decided statically from the policy)
         state = _append_chunks(state, keys, payload, valid)
-    elif config.kind == "compacted":
-        q = path_hash.shape[1]
-        # keys, payload and a slot-occupancy column ride one fused buffer:
-        # one gather, ONE collective (a mesh all_to_all per exchange());
-        # empty budget slots gather the sentinel zero row, so the trailing
-        # ones-column doubles as the receiver's validity mask
-        fused = jnp.concatenate(
-            [keys, payload, jnp.ones(keys.shape[:-1] + (1,), jnp.int32)],
-            axis=-1)                                # (L, q, 2+w+1)
-        if config.data_spec is not None:
-            # ragged single round: per-destination segments sized from the
-            # measured histograms cover every request — lossless, and the
-            # receive order is exactly the dense source-major slot order
-            spec = config.data_spec
-            send_idx, _, _ = _compact_plan_ragged(dest, valid, N, spec)
-            rf = ragged_exchange(gather_rows_batched(fused, send_idx),
-                                 spec, N)           # (L, N·bmax, 2+w+1)
-            state = _append_chunks(state, rf[..., :2], rf[..., 2:-1],
-                                   rf[..., -1] > 0)
-        else:
-            B = data_budget(policy, q, config)
-            buffers, reply_idx, overflow = compact_bucketize(
-                dest, valid, N, B, {"fused": fused})
-            rf = exchange(buffers["fused"])       # (L, N_src, B, 2+w+1)
-            state = _append_chunks(state, rf[..., :2].reshape(L, -1, 2),
-                                   rf[..., 2:-1].reshape(L, N * B, -1),
-                                   (rf[..., -1] > 0).reshape(L, -1))
-            if config.lossless and B < q:
-                # carry round: requests beyond the round-1 budget go into
-                # a second exchange at the worst-case residual budget
-                # q − B (see _carry_budget); the whole round is inside a
-                # cond so a non-overflowing call pays nothing
-                resid = valid & (reply_idx < 0)
-                B2 = _carry_budget(q, B)
-
-                def _carry(st):
-                    buf2, _, _ = compact_bucketize(dest, resid, N, B2,
-                                                   {"fused": fused})
-                    rf2 = exchange(buf2["fused"])
-                    return _append_chunks(
-                        st, rf2[..., :2].reshape(L, -1, 2),
-                        rf2[..., 2:-1].reshape(L, N * B2, -1),
-                        (rf2[..., -1] > 0).reshape(L, -1))
-
-                state = jax.lax.cond(_carry_taken(overflow, global_sum),
-                                     _carry, lambda st: st, state)
-            elif not config.lossless:
-                state = _add_dropped(state, overflow)
-                # a write whose payload overflowed the data budget must
-                # not register metadata either — a phantom entry would
-                # make stat() report a chunk that read() cannot return
-                meta_valid = valid & (reply_idx >= 0)
     else:
-        # mask-combined path: local-mode requests route to self through the
-        # same exchange, hashed modes to their owners — one round for all
-        buckets, hit = bucketize(dest, valid, N,
-                                 {"keys": keys, "payload": payload})
-        rk = exchange(buckets["keys"])            # (L, N_src, q, 2)
-        rp = exchange(buckets["payload"])
-        rv = exchange(hit)
-        state = _append_chunks(state, rk.reshape(L, -1, 2),
-                               rp.reshape(L, rk.shape[1] * rk.shape[2], -1),
-                               rv.reshape(L, -1))
+        # keys, payload and the occupancy column ride one fused buffer:
+        # one gather, one collective per round
+        fields = jnp.concatenate([keys, payload, _ones_col(keys)], axis=-1)
+
+        def apply(st, recv, rvalid):
+            return _append_chunks(st, recv[..., :2], recv[..., 2:],
+                                  rvalid), None
+
+        state, _, served, overflow = run_exchange(
+            "data", policy, config, dest, valid, fields, apply,
+            exchange=exchange, shift=shift, global_sum=global_sum,
+            state=state, client=client)
+        if config.kind == "compacted" and not config.lossless:
+            state = _add_dropped(state, overflow)
+            # a write whose payload overflowed the data budget must not
+            # register metadata either — a phantom entry would make
+            # stat() report a chunk that read() cannot return
+            meta_valid = valid & served
     if not update_meta:
         return state
     # metadata: create/update file entries at their owners
@@ -910,7 +369,7 @@ def forward_write(state: BBState, layout, path_hash: jax.Array,
                     jnp.full_like(dest, -1))
     state, _, _, _ = meta_op(state, policy, op, path_hash,
                              chunk_id + 1, loc, meta_valid, mode, exchange,
-                             node_ids, config, global_sum)
+                             node_ids, config, global_sum, shift)
     return state
 
 
@@ -920,42 +379,44 @@ def forward_read(state: BBState, layout, path_hash: jax.Array,
                  exchange: Callable = stacked_exchange,
                  node_ids: Optional[jax.Array] = None,
                  config: ExchangeConfig = DENSE,
-                 global_sum: Callable = jnp.sum
+                 global_sum: Callable = jnp.sum,
+                 data_loc: Optional[jax.Array] = None,
+                 shift: Callable = stacked_shift
                  ) -> Tuple[jax.Array, jax.Array]:
     """Each node reads a batch of chunks → (payload (L, q, w), found (L, q)).
 
-    See ``forward_write`` for the ``config``/``global_sum`` semantics; in
-    lossless compacted mode read requests beyond the round-1 budget are
-    retried in the carry round rather than answered found=False."""
+    See ``forward_write`` for the ``config``/``global_sum``/``shift``
+    semantics; in lossless compacted mode read requests beyond the round-1
+    budget are retried in the carry round rather than answered
+    found=False.
+
+    ``data_loc`` (optional, (L, q)) short-circuits the hybrid metadata
+    phase with precomputed data-location ranks — the client's two-phase
+    read runs the probe itself (the identical ``meta_op`` STAT call),
+    resolves destinations eagerly, and sizes a measured ragged plan for
+    the data round that the one-phase path must over-budget for."""
     policy = as_policy(layout)
     N = policy.n_nodes
-    L = state.data.shape[0]
-    client = _client_ranks(L, node_ids)
+    client = _client_ranks(state.data.shape[0], node_ids)
     mode = _mode_array(policy, mode, path_hash)
     present = policy.modes_present()
     keys = jnp.stack([path_hash, chunk_id], axis=-1)
 
-    data_loc = None
-    if LayoutMode.HYBRID in present:
+    if LayoutMode.HYBRID in present and data_loc is None:
         # phase 1 (hybrid requests only): metadata lookup for
         # data_location_rank; other modes ride along as invalid slots
         _, found_m, _, loc = meta_op(
             state, policy, jnp.full_like(path_hash, OP_STAT), path_hash,
             jnp.zeros_like(path_hash), jnp.full_like(path_hash, -1),
             valid & (mode == LayoutMode.HYBRID), mode, exchange, node_ids,
-            config, global_sum)
+            config, global_sum, shift)
         data_loc = jnp.where(found_m & (loc >= 0), loc,
                              jnp.broadcast_to(client, path_hash.shape))
     dest = route_data(mode, N, path_hash, chunk_id, client,
                       data_loc=data_loc, xp=jnp)
-
-    if config.kind == "compacted":
-        payload, found = _compact_lookup(state, dest, keys, valid, exchange,
-                                         N, policy, config, global_sum)
-    else:
-        payload, found = _routed_lookup(state, dest, keys, valid, exchange,
-                                        N)
-
+    payload, found = routed_lookup(state, policy, dest, keys, valid,
+                                   exchange, shift, config, global_sum,
+                                   client)
     if present & LOCAL_WRITE_MODES:
         # Stranded-data fallback: broadcast-search all nodes for Mode-1/4
         # misses.  Mode 1: any cross-node read is stranded (the paper's
@@ -970,86 +431,37 @@ def forward_read(state: BBState, layout, path_hash: jax.Array,
     return payload, found
 
 
-def _routed_lookup(state, dest, keys, valid, exchange, N):
-    L = state.data.shape[0]
-    buckets, hit = bucketize(dest, valid, N, {"keys": keys})
-    rk = exchange(buckets["keys"])                     # (L, N_src, q, 2)
-    rv = exchange(hit)
-    q = rk.shape[2]
-    pay, fnd = _lookup_chunks(state, rk.reshape(L, -1, 2), rv.reshape(L, -1))
-    pay = exchange(pay.reshape(L, N, q, -1))           # back to requesters
-    fnd = exchange(fnd.reshape(L, N, q))
-    payload = collect_replies(dest, pay, N)
-    found = collect_replies(dest, fnd.astype(jnp.int32), N) > 0
-    return payload, found & valid
+def routed_lookup(state: BBState, layout, dest: jax.Array, keys: jax.Array,
+                  valid: jax.Array, exchange: Callable = stacked_exchange,
+                  shift: Callable = stacked_shift,
+                  config: ExchangeConfig = DENSE,
+                  global_sum: Callable = jnp.sum,
+                  client: Optional[jax.Array] = None
+                  ) -> Tuple[jax.Array, jax.Array]:
+    """One planned chunk lookup at explicit destinations → (payload, found).
 
+    The shared read-side data plane: ``forward_read``'s data phase and
+    ``migrate_rows``' placement-only probe are the same call — route keys
+    to ``dest`` through whatever executor the planner picks, look the
+    chunks up, route the fused (payload, found) reply back.  Requests the
+    round-1 plan could not serve are retried in the shared carry round
+    (lossless configs) or come back found=False (legacy drop plane).
+    """
+    policy = as_policy(layout)
+    if client is None:
+        client = _client_ranks(state.data.shape[0], None)
+    fields = jnp.concatenate([keys, _ones_col(keys)], axis=-1)
 
-def _compact_lookup_ragged(state, dest, keys, valid, N, spec):
-    """Ragged single-round lookup: segments cover every request, so every
-    valid request reaches its destination and gets its reply back."""
-    L = state.data.shape[0]
-    req = jnp.concatenate(
-        [keys, jnp.ones(keys.shape[:-1] + (1,), jnp.int32)], axis=-1)
-    send_idx, reply_idx, _ = _compact_plan_ragged(dest, valid, N, spec)
-    rk = ragged_exchange(gather_rows_batched(req, send_idx), spec, N)
-    pay, fnd = _lookup_chunks(state, rk[..., :2], rk[..., 2] > 0)
-    reply = jnp.concatenate([pay, fnd[..., None].astype(jnp.int32)],
-                            axis=-1)
-    rr = ragged_reply_exchange(reply, spec, N)          # (L, Σbᵢ, w+1)
-    out = compact_collect_flat(reply_idx, rr)
+    def apply(st, recv, rvalid):
+        pay, fnd = _lookup_chunks(st, recv[..., :2], rvalid)
+        return None, jnp.concatenate(
+            [pay, fnd[..., None].astype(jnp.int32)], axis=-1)
+
+    _, out, _, _ = run_exchange(
+        "data", policy, config, dest, valid, fields, apply,
+        exchange=exchange, shift=shift, global_sum=global_sum,
+        state=state, client=client)
     return out[..., :-1], (out[..., -1] > 0) & valid
-
-
-def _compact_lookup_round(state, dest, keys, valid, exchange, N, budget):
-    """One uniform-budget lookup round → (payload, found, reply_idx,
-    overflow); requests beyond the budget come back found=False with
-    reply_idx == -1 so the caller can retry them in the carry round."""
-    L = state.data.shape[0]
-    req = jnp.concatenate(
-        [keys, jnp.ones(keys.shape[:-1] + (1,), jnp.int32)], axis=-1)
-    buffers, reply_idx, overflow = compact_bucketize(
-        dest, valid, N, budget, {"req": req})
-    rk = exchange(buffers["req"])                       # (L, N_src, B, 3)
-    pay, fnd = _lookup_chunks(state, rk[..., :2].reshape(L, -1, 2),
-                              (rk[..., 2] > 0).reshape(L, -1))
-    # payload and found return fused in one reply collective
-    reply = jnp.concatenate([pay, fnd[..., None].astype(jnp.int32)],
-                            axis=-1)
-    reply = exchange(reply.reshape(L, N, budget, -1))   # back to requesters
-    out = compact_collect(reply_idx, reply)
-    return (out[..., :-1], (out[..., -1] > 0) & valid, reply_idx, overflow)
-
-
-def _compact_lookup(state, dest, keys, valid, exchange, N, policy, config,
-                    global_sum):
-    """Compacted twin of ``_routed_lookup``: ragged one round, or uniform
-    budget + lossless carry round, or legacy drop (found=False) — per
-    ``config``.  Local-mode misses still reach the broadcast fallback in
-    ``forward_read`` either way."""
-    if config.data_spec is not None:
-        return _compact_lookup_ragged(state, dest, keys, valid, N,
-                                      config.data_spec)
-    q = keys.shape[1]
-    budget = data_budget(policy, q, config)
-    payload, found, reply_idx, overflow = _compact_lookup_round(
-        state, dest, keys, valid, exchange, N, budget)
-    if config.lossless and budget < q:
-        resid = valid & (reply_idx < 0)
-        B2 = _carry_budget(q, budget)
-
-        def _carry(_):
-            pay2, fnd2, _, _ = _compact_lookup_round(
-                state, dest, keys, resid, exchange, N, B2)
-            return pay2, fnd2
-
-        def _skip(_):
-            return jnp.zeros_like(payload), jnp.zeros_like(found)
-
-        pay2, fnd2 = jax.lax.cond(_carry_taken(overflow, global_sum),
-                                  _carry, _skip, 0)
-        payload = jnp.where(resid[..., None], pay2, payload)
-        found = jnp.where(resid, fnd2, found)
-    return payload, found
 
 
 def _broadcast_lookup(state, keys, valid, exchange, N):
@@ -1071,53 +483,14 @@ def _broadcast_lookup(state, keys, valid, exchange, N):
     return jnp.where(found_any[..., None], payload, 0), found_any & valid
 
 
-def _compact_meta_round(state, owner, op, path_hash, size, loc, valid,
-                        exchange, N, budget):
-    """One uniform-budget metadata round → (state, found, size, loc,
-    reply_idx, overflow); ops beyond the budget are left unapplied with
-    reply_idx == -1 so the caller can retry them in the carry round."""
-    L, q = path_hash.shape
-    # one fused gather+exchange for the request (the trailing ones-column
-    # is the receiver's validity mask — empty budget slots gather the
-    # sentinel zero row), one fused reply collective
-    fields = jnp.stack([op, path_hash, size, loc,
-                        jnp.ones_like(op)], axis=-1)         # (L, q, 5)
-    buffers, reply_idx, overflow = compact_bucketize(
-        owner, valid, N, budget, {"fields": fields})
-    r = exchange(buffers["fields"]).reshape(L, -1, 5)
-    state, fnd, r_size, r_loc = _meta_apply(
-        state, r[..., 0], r[..., 1], r[..., 2], r[..., 3], r[..., 4] > 0)
-    reply = jnp.stack([fnd.astype(jnp.int32), r_size, r_loc], axis=-1)
-    reply = exchange(reply.reshape(L, N, budget, 3))
-    # fill=-1 matches the dense plane's not-found value for size/loc
-    # and still reads as found=False in the first column
-    out = compact_collect(reply_idx, reply, fill=-1)
-    return (state, (out[..., 0] > 0) & valid, out[..., 1], out[..., 2],
-            reply_idx, overflow)
-
-
-def _compact_meta_ragged(state, owner, op, path_hash, size, loc, valid, N,
-                         spec):
-    """Ragged single-round metadata exchange (lossless by construction)."""
-    fields = jnp.stack([op, path_hash, size, loc,
-                        jnp.ones_like(op)], axis=-1)         # (L, q, 5)
-    send_idx, reply_idx, _ = _compact_plan_ragged(owner, valid, N, spec)
-    r = ragged_exchange(gather_rows_batched(fields, send_idx), spec, N)
-    state, fnd, r_size, r_loc = _meta_apply(
-        state, r[..., 0], r[..., 1], r[..., 2], r[..., 3], r[..., 4] > 0)
-    reply = jnp.stack([fnd.astype(jnp.int32), r_size, r_loc], axis=-1)
-    rr = ragged_reply_exchange(reply, spec, N)
-    out = compact_collect_flat(reply_idx, rr, fill=-1)
-    return state, (out[..., 0] > 0) & valid, out[..., 1], out[..., 2]
-
-
 def meta_op(state: BBState, layout, op: jax.Array,
             path_hash: jax.Array, size: jax.Array, loc: jax.Array,
             valid: jax.Array, mode: Optional[jax.Array] = None,
             exchange: Callable = stacked_exchange,
             node_ids: Optional[jax.Array] = None,
             config: ExchangeConfig = DENSE,
-            global_sum: Callable = jnp.sum
+            global_sum: Callable = jnp.sum,
+            shift: Callable = stacked_shift
             ) -> Tuple[BBState, jax.Array, jax.Array, jax.Array]:
     """Batched metadata operations routed to their per-request-mode owners.
 
@@ -1131,58 +504,29 @@ def meta_op(state: BBState, layout, op: jax.Array,
     order-insensitive, so replies match the dense plane exactly."""
     policy = as_policy(layout)
     N = policy.n_nodes
-    L = state.data.shape[0]
-    q = path_hash.shape[1]
-    client = _client_ranks(L, node_ids)
+    client = _client_ranks(state.data.shape[0], node_ids)
     mode = _mode_array(policy, mode, path_hash)
     owner = route_meta(mode, N, policy.n_md_servers, path_hash, client,
                        xp=jnp)
-    if config.kind == "compacted":
-        if config.meta_spec is not None:
-            return _compact_meta_ragged(state, owner, op, path_hash, size,
-                                        loc, valid, N, config.meta_spec)
-        B = meta_budget(policy, q, config)
-        state, found, r_size, r_loc, reply_idx, overflow = \
-            _compact_meta_round(state, owner, op, path_hash, size, loc,
-                                valid, exchange, N, B)
-        if config.lossless and B < q:
-            resid = valid & (reply_idx < 0)
-            B2 = _carry_budget(q, B)
+    fields = jnp.stack([op, path_hash, size, loc, jnp.ones_like(op)],
+                       axis=-1)                              # (L, q, 5)
 
-            def _carry(st):
-                st2, f2, s2, l2, _, _ = _compact_meta_round(
-                    st, owner, op, path_hash, size, loc, resid, exchange,
-                    N, B2)
-                return st2, f2, s2, l2
+    def apply(st, recv, rvalid):
+        st2, fnd, r_size, r_loc = _meta_apply(
+            st, recv[..., 0], recv[..., 1], recv[..., 2], recv[..., 3],
+            rvalid)
+        return st2, jnp.stack([fnd.astype(jnp.int32), r_size, r_loc],
+                              axis=-1)
 
-            def _skip(st):
-                return (st, jnp.zeros_like(found),
-                        jnp.full_like(r_size, -1), jnp.full_like(r_loc, -1))
-
-            state, f2, s2, l2 = jax.lax.cond(
-                _carry_taken(overflow, global_sum), _carry, _skip, state)
-            found = jnp.where(resid, f2, found)
-            r_size = jnp.where(resid, s2, r_size)
-            r_loc = jnp.where(resid, l2, r_loc)
-        elif not config.lossless:
-            state = _add_dropped(state, overflow)
-        return state, found, r_size, r_loc
-    buckets, hit = bucketize(
-        owner, valid, N,
-        {"op": op, "key": path_hash, "size": size, "loc": loc})
-    r = {k: exchange(v) for k, v in buckets.items()}
-    rv = exchange(hit)
-    state, fnd, r_size, r_loc = _meta_apply(
-        state, r["op"].reshape(L, -1), r["key"].reshape(L, -1),
-        r["size"].reshape(L, -1), r["loc"].reshape(L, -1),
-        rv.reshape(L, -1))
-    fnd = exchange(fnd.reshape(L, N, q).astype(jnp.int32))
-    r_size = exchange(r_size.reshape(L, N, q))
-    r_loc = exchange(r_loc.reshape(L, N, q))
-    found = collect_replies(owner, fnd, N) > 0
-    size_out = collect_replies(owner, r_size, N)
-    loc_out = collect_replies(owner, r_loc, N)
-    return state, found & valid, size_out, loc_out
+    # fill=-1 matches the dense plane's not-found value for size/loc
+    # and still reads as found=False in the first column
+    state, out, _, overflow = run_exchange(
+        "meta", policy, config, owner, valid, fields, apply,
+        exchange=exchange, shift=shift, global_sum=global_sum,
+        state=state, client=client, reply_fill=-1)
+    if config.kind == "compacted" and not config.lossless:
+        state = _add_dropped(state, overflow)
+    return state, (out[..., 0] > 0) & valid, out[..., 1], out[..., 2]
 
 
 # ---------------------------------------------------------------------------
@@ -1263,7 +607,8 @@ def migrate_rows(state: BBState, layout, path_hash: jax.Array,
                  exchange: Callable = stacked_exchange,
                  node_ids: Optional[jax.Array] = None,
                  config: ExchangeConfig = COMPACTED,
-                 global_sum: Callable = jnp.sum
+                 global_sum: Callable = jnp.sum,
+                 shift: Callable = stacked_shift
                  ) -> Tuple[BBState, jax.Array, jax.Array]:
     """Move one installment of chunks from old-mode to new-mode placement.
 
@@ -1277,8 +622,10 @@ def migrate_rows(state: BBState, layout, path_hash: jax.Array,
 
     1. fetch under the old epoch (``forward_read`` with the old modes:
        hybrid meta phase and stranded-data broadcast included);
-    2. placement-only probe at the new destination (no fallback — an
-       unmigrated chunk must NOT appear present via its old copy);
+    2. placement-only probe at the new destination (``routed_lookup`` —
+       the same planned lookup the read path uses, and deliberately NO
+       fallback: an unmigrated chunk must NOT appear present via its old
+       copy);
     3. copy rows found old but absent new through ``forward_write`` under
        the new modes, data-only (``update_meta=False``);
     4. move the metadata: the old entry's EXACT stat size is propagated
@@ -1303,8 +650,7 @@ def migrate_rows(state: BBState, layout, path_hash: jax.Array,
             "ragged spec sized for one of them would drop requests of the "
             "other — use uniform budgets (lossless carry covers overflow)")
     N = policy.n_nodes
-    L = state.data.shape[0]
-    client = _client_ranks(L, node_ids)
+    client = _client_ranks(state.data.shape[0], node_ids)
     old_mode = jnp.asarray(old_mode).astype(jnp.int32)
     new_mode = jnp.asarray(new_mode).astype(jnp.int32)
     keys = jnp.stack([path_hash, chunk_id], axis=-1)
@@ -1313,7 +659,7 @@ def migrate_rows(state: BBState, layout, path_hash: jax.Array,
     payload, found_old = forward_read(
         state, policy, path_hash, chunk_id, valid, mode=old_mode,
         exchange=exchange, node_ids=node_ids, config=config,
-        global_sum=global_sum)
+        global_sum=global_sum, shift=shift)
 
     # 2. placement-only probe at the new destination.  ``write_dest`` is
     # where step 3's copy would land (local-row rank for HYBRID/NODE_LOCAL
@@ -1331,19 +677,15 @@ def migrate_rows(state: BBState, layout, path_hash: jax.Array,
         state, policy, jnp.full_like(path_hash, OP_STAT), path_hash,
         jnp.zeros_like(path_hash), jnp.full_like(path_hash, -1), valid,
         mode=new_mode, exchange=exchange, node_ids=node_ids, config=config,
-        global_sum=global_sum)
+        global_sum=global_sum, shift=shift)
     probe_dest = write_dest
     if LayoutMode.HYBRID in policy.modes_present():
         probe_dest = jnp.where(
             (new_mode == LayoutMode.HYBRID) & fm_new & (loc_new >= 0),
             loc_new, write_dest)
-    if config.kind == "compacted":
-        _, found_new = _compact_lookup(state, probe_dest, keys, valid,
-                                       exchange, N, policy, config,
-                                       global_sum)
-    else:
-        _, found_new = _routed_lookup(state, probe_dest, keys, valid,
-                                      exchange, N)
+    _, found_new = routed_lookup(state, policy, probe_dest, keys, valid,
+                                 exchange, shift, config, global_sum,
+                                 client)
 
     # 3. copy the missing rows to their new placement — data only
     # (update_meta=False): deriving sizes from chunk ids would "repair"
@@ -1352,7 +694,8 @@ def migrate_rows(state: BBState, layout, path_hash: jax.Array,
     state = forward_write(state, policy, path_hash, chunk_id, payload,
                           moved, mode=new_mode, exchange=exchange,
                           node_ids=node_ids, config=config,
-                          global_sum=global_sum, update_meta=False)
+                          global_sum=global_sum, update_meta=False,
+                          shift=shift)
 
     # 4. metadata epoch move: the old owner's EXACT stat size at the new
     # owner, then the old entry gone.  The old stat is issued under the
@@ -1369,7 +712,7 @@ def migrate_rows(state: BBState, layout, path_hash: jax.Array,
         state, policy, jnp.full_like(path_hash, OP_STAT), path_hash,
         jnp.zeros_like(path_hash), jnp.full_like(path_hash, -1), valid,
         mode=old_mode, exchange=exchange, node_ids=node_ids, config=config,
-        global_sum=global_sum)
+        global_sum=global_sum, shift=shift)
     size_fix = jnp.where(found_m, sz_old, sz_new)
     # hybrid targets record where the copy landed (this row); rows that
     # didn't move keep whatever loc the new epoch already has (-1 = keep)
@@ -1385,12 +728,13 @@ def migrate_rows(state: BBState, layout, path_hash: jax.Array,
         state, policy, jnp.full_like(path_hash, OP_UPDATE), path_hash,
         size_fix, loc_fix, valid & (found_m | fm_new), mode=new_mode,
         exchange=exchange, node_ids=node_ids, config=config,
-        global_sum=global_sum)
+        global_sum=global_sum, shift=shift)
     state, _, _, _ = meta_op(
         state, policy, jnp.full_like(path_hash, OP_REMOVE), path_hash,
         jnp.zeros_like(path_hash), jnp.full_like(path_hash, -1),
         valid & (owner_old != owner_new), mode=old_mode, exchange=exchange,
-        node_ids=node_ids, config=config, global_sum=global_sum)
+        node_ids=node_ids, config=config, global_sum=global_sum,
+        shift=shift)
 
     # 5. tombstone the old copies — keep the rank that actually holds the
     # surviving new-epoch copy (the write destination for rows copied this

@@ -22,12 +22,21 @@ Orthogonally, ``exchange=`` picks the exchange data plane *per call*:
   measured (N, q, words) crossover of the committed benchmark sweep
   (exchange_select.py); dense wins tiny exchanges, compacted wins at scale.
 * ``"compacted"`` — sort-based routing + budgeted Pallas gather, O(N·q)
-  exchange volume.  On the stacked backend budgets are *ragged*: sized per
-  destination from the measured ``chunk_router`` histograms of each call
-  (lossless by construction).  On the mesh backend — or with an explicit
-  ``budget=``/``ragged=False`` — budgets are uniform and jit-static, and
-  overflow is carried into a rarely-taken second exchange round
-  (``lossless=True``, default) instead of dropped.
+  exchange volume.  Budgets are *ragged* by default on BOTH backends:
+  sized per destination from the measured ``chunk_router`` histograms of
+  each call (lossless by construction).  The stacked backend packs them
+  into one (L, Σbᵢ) buffer; the mesh backend — whose ``all_to_all`` needs
+  uniform splits — plans a ``MeshRaggedSpec`` instead: pad to the global
+  max budget for the ordinary ``all_to_all``, or run the ``ppermute``
+  segmented rounds when the measured histogram is skewed (the executor
+  pick keys on the measured fabric model — ``exchange_select``).  With an
+  explicit ``budget=``/``ragged=False`` budgets are uniform and
+  jit-static, and overflow is carried into a rarely-taken second exchange
+  round (``lossless=True``, default) instead of dropped.  Hybrid reads —
+  whose destinations come from the metadata tables — go **two-phase**:
+  the client runs the metadata probe as its own call, resolves the data
+  destinations eagerly, and sizes a measured ragged plan for the data
+  round (``two_phase=False`` restores the single-call uniform plan).
 * ``"dense"`` — the PR-1 O(N²·q) bucketize broadcast, kept as the
   bit-for-bit parity oracle.
 
@@ -130,13 +139,41 @@ def _stacked_ops_for(engine_key, config: bb.ExchangeConfig):
         return bb.meta_op(state, policy, op, ph, size, loc, valid, mode=mode,
                           config=config)
 
-    return jax.jit(_write), jax.jit(_read), jax.jit(_meta)
+    def _read_loc(state, mode, ph, cid, valid, data_loc):
+        return bb.forward_read(state, policy, ph, cid, valid, mode=mode,
+                               config=config, data_loc=data_loc)
+
+    return (jax.jit(_write), jax.jit(_read), jax.jit(_meta),
+            jax.jit(_read_loc))
 
 
 def _build_stacked_ops(policy: LayoutPolicy,
                        config: bb.ExchangeConfig = bb.DENSE):
     """Resolve ``policy`` to its engine key and fetch the cached ops."""
     return _stacked_ops_for(policy.engine_key(), config)
+
+
+@functools.lru_cache(maxsize=256)
+def _stacked_probe_for(engine_key, config: bb.ExchangeConfig):
+    """Jitted hybrid-read probe: STAT → (found, loc) ONLY.
+
+    The two-phase read must not pay for state outputs it discards — a
+    jit returning the full post-STAT ``BBState`` materializes a copy of
+    every table per read.  Tracing ``meta_op`` but returning only the
+    two reply arrays lets XLA dead-code-eliminate the table outputs.
+    """
+    policy = LayoutPolicy.for_engine_key(engine_key)
+
+    def _probe(state, mode, ph, valid):
+        shape = ph.shape
+        op = jnp.full(shape, bb.OP_STAT, jnp.int32)
+        _, found, _, loc = bb.meta_op(
+            state, policy, op, ph, jnp.zeros(shape, jnp.int32),
+            jnp.full(shape, -1, jnp.int32), valid, mode=mode,
+            config=config)
+        return found, loc
+
+    return jax.jit(_probe)
 
 
 @functools.lru_cache(maxsize=64)
@@ -169,7 +206,7 @@ class BBClient:
                  exchange: str = "auto", budget: Optional[int] = None,
                  meta_budget: Optional[int] = None, capacity: float = 2.0,
                  lossless: bool = True, ragged: bool = True,
-                 telemetry: bool = False):
+                 two_phase: bool = True, telemetry: bool = False):
         """Build a client holding fresh (or adopted) node tables.
 
         Args:
@@ -191,14 +228,23 @@ class BBClient:
             round (default) instead of the legacy drop-and-account
             semantics (``dropped`` counter, found=False replies).
           ragged: size compacted budgets per destination from each call's
-            measured histograms (stacked backend only; jit ops then
-            specialize per traffic shape).  Ignored on a mesh backend,
-            whose all_to_all needs uniform splits.
+            measured histograms (jit ops then specialize per traffic
+            shape).  The stacked backend packs them (``RaggedSpec``); a
+            mesh backend plans a ``MeshRaggedSpec`` — global-max padded
+            ``all_to_all``, or the ``ppermute`` segmented exchange when
+            the measured fabric model says the histogram is skewed enough
+            to pay for the extra rounds.
+          two_phase: run hybrid reads as metadata probe → ragged data
+            round (both backends); ``False`` keeps the single-call
+            uniform-budget plan.  Only meaningful with ``ragged=True``.
           telemetry: accumulate per-scope intent counters on every call
             (jit-side — see repro.core.adapt.telemetry) and maintain the
             host-side write registry the ``LiveMigrator`` builds its
-            worklists from.  Adds a small host loop per call; off by
-            default for hot-path clients that don't adapt.
+            worklists from.  On a mesh backend the counters are kept
+            per-node so ``mesh_engine.build_telemetry_reduce`` can psum
+            them fleet-wide (drift fires from any host).  Adds a small
+            host loop per call; off by default for hot-path clients that
+            don't adapt.
         """
         self.policy = as_policy(policy)
         self.backend = backend
@@ -223,7 +269,20 @@ class BBClient:
                              "'stacked' or a jax.sharding.Mesh")
         self._mesh_ops: Dict[bb.ExchangeConfig, Tuple] = {}
         self._mesh_migrate: Dict[bb.ExchangeConfig, object] = {}
-        self.ragged = bool(ragged) and not self._is_mesh
+        self._mesh_probe: Dict[bb.ExchangeConfig, object] = {}
+        self.ragged = bool(ragged)
+        self.two_phase = bool(two_phase) and self.ragged
+        # ppermute segmented plans rotate the device ring, so they need
+        # nodes 1:1 with mesh devices; otherwise only the padded plan runs
+        self._ppermute_ok = (self._is_mesh and
+                             dict(backend.shape).get("node") == self.n_nodes)
+        # telemetry-seeded ragged presizing: running per-destination
+        # high-water budgets per (role, q) — a steady workload converges
+        # to ONE spec (one jit specialization) instead of re-planning
+        self._spec_floor: Dict[Tuple[str, int], np.ndarray] = {}
+        # suggest_align syncs the device (telemetry snapshot): refresh it
+        # every _ALIGN_REFRESH plans instead of per plan
+        self._align_state: Dict[int, Tuple[int, int]] = {}
         # ---- online adaptation state (repro.core.adapt) ----
         self.epoch = 0
         self.epoch_log: list = []
@@ -234,7 +293,9 @@ class BBClient:
         self._writer: Dict[int, int] = {}
         if telemetry:
             from repro.core.adapt.telemetry import ScopeTelemetry
-            self.telemetry = ScopeTelemetry(self.policy)
+            self.telemetry = ScopeTelemetry(
+                self.policy,
+                per_node=self.n_nodes if self._is_mesh else 0)
 
     # ---- request construction ----------------------------------------------
     def _path_codes_uncached(self, path: str) -> Tuple[int, int]:
@@ -380,6 +441,9 @@ class BBClient:
         self._path_codes.cache_clear()
         self._mesh_ops.clear()          # mesh ops close over the policy
         self._mesh_migrate.clear()
+        self._mesh_probe.clear()
+        self._spec_floor.clear()        # routing changed; floors are stale
+        self._align_state.clear()
         self.fallback = (None if migrating is None else
                          EpochFallback(str_hash(migrating), int(old_mode)))
         if self.telemetry is not None:
@@ -429,7 +493,7 @@ class BBClient:
             if op is None:
                 from repro.core.mesh_engine import build_mesh_migrate
                 op = build_mesh_migrate(self.backend, self.policy, cfg)
-                self._mesh_migrate[cfg] = op
+                self._cache_put(self._mesh_migrate, cfg, op)
         else:
             op = _stacked_migrate_for(self.policy.engine_key(), cfg)
         self.state, moved, found_old = op(
@@ -452,11 +516,72 @@ class BBClient:
     def _client_ranks(self) -> jax.Array:
         return jnp.arange(self.n_nodes, dtype=jnp.int32)[:, None]
 
-    def _call_config(self, op: str, mode, ph, cid,
-                     valid) -> bb.ExchangeConfig:
+    def _plan_spec(self, role: str, dest, valid, row_bytes: int):
+        """Measure one call's ragged spec, with convergent presizing.
+
+        The measured per-destination budgets are maxed into a running
+        per-(role, q) floor that seeds every later plan — so a steady
+        workload's specs grow monotonically to a fixed point (ONE jit
+        specialization) instead of re-planning per hashed batch.  When
+        telemetry rides the client, its live extent histogram picks the
+        quantization step (``suggest_align``), seeding the convergence
+        coarser for large steady workloads.  Mesh backends plan a
+        ``MeshRaggedSpec`` (padded vs ppermute picked from the measured
+        fabric model via ``row_bytes`` per exchanged column).
+        """
+        key = (role, dest.shape[1])
+        floor = self._spec_floor.get(key)
+        align = self._suggest_align(dest.shape[1])
+        if self._is_mesh:
+            spec = bb.plan_mesh_ragged_spec(
+                dest, valid, self.n_nodes, align=align,
+                row_bytes=row_bytes, allow_ppermute=self._ppermute_ok,
+                floor=floor)
+        else:
+            spec = bb.plan_ragged_spec(dest, valid, self.n_nodes,
+                                       align=align, floor=floor)
+        budgets = np.asarray(spec.budgets, np.int64)
+        self._spec_floor[key] = (budgets if floor is None
+                                 else np.maximum(floor, budgets))
+        return spec
+
+    #: plans between telemetry re-reads of the align hint (each re-read
+    #: snapshots the counter array: a device sync worth amortizing)
+    _ALIGN_REFRESH = 32
+
+    def _suggest_align(self, q: int) -> int:
+        """Cached quantization hint (see ``ScopeTelemetry.suggest_align``).
+
+        The hint changes at most a handful of times over a run, while
+        ``suggest_align`` itself costs a device→host counter snapshot —
+        so the live value is re-read only every ``_ALIGN_REFRESH`` plans
+        per batch width.
+        """
+        if self.telemetry is None:
+            return 8
+        align, left = self._align_state.get(q, (None, 0))
+        if align is None or left <= 0:
+            align, left = self.telemetry.suggest_align(q), self._ALIGN_REFRESH
+        self._align_state[q] = (align, left - 1)
+        return align
+
+    @staticmethod
+    def _cache_put(cache: Dict, key, value, cap: int = 64) -> None:
+        """Insert with FIFO eviction — mesh op caches hold compiled
+        shard_map executables and must not grow with drifting traffic."""
+        if len(cache) >= cap:
+            cache.pop(next(iter(cache)))
+        cache[key] = value
+
+    def _call_config(self, op: str, mode, ph, cid, valid,
+                     data_loc=None) -> bb.ExchangeConfig:
         """The exchange config for one call — including measured ragged
-        specs when this call is eligible (stacked backend, no explicit
-        budget override, destinations computable without table state)."""
+        specs when this call is eligible (no explicit budget override,
+        destinations computable without table state).  ``data_loc`` is
+        the two-phase hybrid read's probed data-location array: with it,
+        read destinations ARE computable here and the data round gets a
+        measured plan; without it a hybrid read keeps the uniform
+        lossless plan for the whole call."""
         q = ph.shape[1]
         kind = self._select_kind(q)
         if kind == "dense":
@@ -468,15 +593,17 @@ class BBClient:
             return cfg
         N, client = self.n_nodes, self._client_ranks()
         if op in ("write", "read") and cfg.budget is None:
-            if op == "read" and \
+            if op == "read" and data_loc is None and \
                     LayoutMode.HYBRID in self.policy.modes_present():
                 # hybrid read destinations come from the metadata phase
-                # (table state), which is invisible here — keep the
-                # uniform lossless plan for the whole call
+                # (table state), which is invisible here — the two-phase
+                # path probes first and calls back in with data_loc
                 return cfg
-            dest = route_data(mode, N, ph, cid, client, xp=jnp)
+            dest = route_data(mode, N, ph, cid, client, data_loc=data_loc,
+                              xp=jnp)
             cfg = dataclasses.replace(
-                cfg, data_spec=bb.plan_ragged_spec(dest, valid, N))
+                cfg, data_spec=self._plan_spec(
+                    "data", dest, valid, 4 * (self.words + 3)))
         if op in ("write", "meta") and cfg.meta_budget is None and \
                 cfg.budget is None:
             # an explicit ``budget`` historically also caps the metadata
@@ -485,18 +612,19 @@ class BBClient:
             owner = route_meta(mode, N, self.policy.n_md_servers, ph,
                                client, xp=jnp)
             cfg = dataclasses.replace(
-                cfg, meta_spec=bb.plan_ragged_spec(owner, valid, N))
+                cfg, meta_spec=self._plan_spec("meta", owner, valid,
+                                               4 * 8))
         return cfg
 
     def _ops(self, config: bb.ExchangeConfig) -> Tuple:
-        """(write, read, meta) jitted ops for one exchange config."""
+        """(write, read, meta, read_loc) jitted ops for one config."""
         if not self._is_mesh:
             return _stacked_ops_for(self.policy.engine_key(), config)
         ops = self._mesh_ops.get(config)
         if ops is None:
             from repro.core.mesh_engine import build_mesh_ops
             ops = build_mesh_ops(self.backend, self.policy, config)
-            self._mesh_ops[config] = ops
+            self._cache_put(self._mesh_ops, config, ops)
         return ops
 
     def _write(self, state, mode, ph, cid, payload, valid):
@@ -505,9 +633,56 @@ class BBClient:
         return self._ops(cfg)[0](state, mode, ph, cid, payload, valid)
 
     def _read(self, state, mode, ph, cid, valid):
-        """Engine read entry (state explicit — the benchmarks drive it)."""
+        """Engine read entry (state explicit — the benchmarks drive it).
+
+        Hybrid-capable ragged reads go two-phase: the metadata probe runs
+        as its own jitted call, the resolved data locations size a
+        measured ragged plan, and the data round runs with the engine's
+        internal meta phase skipped — identical answers (the probe IS the
+        same ``meta_op`` STAT), measured instead of worst-case budgets.
+        """
+        q = ph.shape[1]
+        if (self.two_phase and q > 0 and
+                LayoutMode.HYBRID in self.policy.modes_present() and
+                self.exchange_config.budget is None and
+                self._select_kind(q) == "compacted"):
+            return self._read_two_phase(state, mode, ph, cid, valid)
         cfg = self._call_config("read", mode, ph, cid, valid)
         return self._ops(cfg)[1](state, mode, ph, cid, valid)
+
+    def _read_two_phase(self, state, mode, ph, cid, valid):
+        """Metadata probe → ragged data round (see ``_read``)."""
+        shape = ph.shape
+        probe_valid = self._as_bool(valid) & (mode == LayoutMode.HYBRID)
+        ranks = jnp.broadcast_to(self._client_ranks(), shape)
+        if not bool(np.any(np.asarray(probe_valid))):
+            # no hybrid rows in THIS batch (e.g. an epoch-fallback re-read
+            # under a hashed old mode): skip the probe round entirely —
+            # every data destination resolves without table state
+            data_loc = ranks
+        else:
+            cfg_m = self._call_config("meta", mode, ph, None, probe_valid)
+            fm, loc = self._probe_op(cfg_m)(state, mode, ph, probe_valid)
+            data_loc = jnp.where(fm & (loc >= 0), loc, ranks)
+        cfg = self._call_config("read", mode, ph, cid, valid,
+                                data_loc=data_loc)
+        return self._ops(cfg)[3](state, mode, ph, cid, valid, data_loc)
+
+    def _probe_op(self, config: bb.ExchangeConfig):
+        """The (found, loc)-only STAT op for one config (both backends)."""
+        if not self._is_mesh:
+            return _stacked_probe_for(self.policy.engine_key(), config)
+        op = self._mesh_probe.get(config)
+        if op is None:
+            from repro.core.mesh_engine import build_mesh_probe
+            op = build_mesh_probe(self.backend, self.policy, config)
+            self._cache_put(self._mesh_probe, config, op)
+        return op
+
+    @staticmethod
+    def _as_bool(valid) -> jax.Array:
+        """Request mask as a bool array (callers may pass int masks)."""
+        return jnp.asarray(valid, bool)
 
     def _meta(self, state, mode, op, ph, size, loc, valid):
         """Engine metadata entry (state explicit)."""

@@ -27,6 +27,14 @@ from typing import Dict, Optional, Sequence, Tuple
 #: benchmark artifacts searched for crossover rows, newest first
 BENCH_FILES = ("BENCH_pr3.json", "BENCH_pr2.json")
 
+#: benchmark artifacts searched for mesh-fabric all_to_all timings
+FABRIC_FILES = ("BENCH_pr5.json", "BENCH_pr4.json", "BENCH_pr3.json")
+
+#: analytic fallback fabric model when no measured rows exist:
+#: (per-collective overhead µs, bytes per µs) — deliberately
+#: latency-heavy so the ppermute plan must EARN its extra rounds
+FALLBACK_FABRIC = (50.0, 500.0)
+
 #: (n_nodes, batch, words, winner) — fallback crossover measured on the
 #: CPU stacked backend when no benchmark JSON is on disk: dense wins the
 #: tiny cells, compacted everything at scale.
@@ -122,13 +130,107 @@ def load_crossover(root: Optional[str] = None
 
 
 def refresh() -> None:
-    """Drop the cached crossover table so the next pick re-reads disk.
+    """Drop the cached crossover/fabric tables so the next pick re-reads
+    disk.
 
     Call after writing a new benchmark artifact in-process (the bench
-    harness does); without this, ``load_crossover``'s per-process cache
-    would keep serving the table from before the run.
+    harness does); without this, the per-process caches would keep
+    serving the tables from before the run.
     """
     load_crossover.cache_clear()
+    fabric_model.cache_clear()
+
+
+def _fit_fabric(rows: Sequence[Dict]) -> Optional[Tuple[float, float]]:
+    """Least-squares (overhead µs, bytes/µs) fit of measured fabric rows.
+
+    Each row carries one collective's ``us_per_call`` and
+    ``exchanged_bytes``; the model is the affine ``us = a + bytes / bw``
+    every executor-pick cost below uses.  Returns None when fewer than 2
+    well-formed rows exist (an affine fit needs two points) or when the
+    fit degenerates (non-positive bandwidth — e.g. timing noise on equal
+    byte counts).
+    """
+    pts = []
+    for r in rows:
+        if not isinstance(r, dict):
+            continue
+        try:
+            us, nbytes = float(r["us_per_call"]), float(r["exchanged_bytes"])
+        except (KeyError, TypeError, ValueError):
+            continue
+        if us > 0 and nbytes > 0:
+            pts.append((nbytes, us))
+    if len(pts) < 2 or len({b for b, _ in pts}) < 2:
+        return None
+    n = len(pts)
+    sx = sum(b for b, _ in pts)
+    sy = sum(u for _, u in pts)
+    sxx = sum(b * b for b, _ in pts)
+    sxy = sum(b * u for b, u in pts)
+    denom = n * sxx - sx * sx
+    slope = (n * sxy - sx * sy) / denom          # µs per byte
+    a = (sy - slope * sx) / n                    # per-call overhead µs
+    if slope <= 0:
+        return None
+    return max(a, 0.0), 1.0 / slope
+
+
+@lru_cache(maxsize=8)
+def fabric_model(root: Optional[str] = None) -> Tuple[float, float, bool]:
+    """(overhead µs, bytes/µs, measured?) of the deployment's collectives.
+
+    Fit from the newest committed benchmark artifact carrying a
+    ``fabric`` section (the ``mesh_exchange`` all_to_all timings measured
+    under shard_map on real devices — see ``fabric_rows`` in
+    benchmarks/exchange_bench.py), falling back to the analytic
+    ``FALLBACK_FABRIC`` with ``measured? = False``.  This is what makes
+    the padded-vs-ppermute executor pick and the migration-cost gate key
+    on the fabric the deployment actually has, not on CPU transposes.
+    """
+    roots = (Path(root),) if root is not None else _bench_roots()
+    for r in roots:
+        for name in FABRIC_FILES:
+            p = r / name
+            if not p.is_file():
+                continue
+            try:
+                data = json.loads(p.read_text())
+            except (OSError, ValueError):
+                continue
+            fab = data.get("fabric") if isinstance(data, dict) else None
+            rows = fab.get("rows") if isinstance(fab, dict) else None
+            fit = _fit_fabric(rows) if isinstance(rows, list) else None
+            if fit is not None:
+                return fit[0], fit[1], True
+    return FALLBACK_FABRIC[0], FALLBACK_FABRIC[1], False
+
+
+def collective_us(nbytes: int, model: Optional[Tuple] = None) -> float:
+    """Modeled wall time of one collective carrying ``nbytes`` bytes."""
+    model = model if model is not None else fabric_model()
+    a, bw = model[0], model[1]
+    return a + nbytes / max(bw, 1e-9)
+
+
+def pick_mesh_executor(n_nodes: int, padded_bytes: int,
+                       round_bytes: Sequence[int],
+                       model: Optional[Tuple] = None) -> str:
+    """Pick "padded" or "ppermute" for one measured mesh-ragged plan.
+
+    ``padded_bytes`` is the global-max-padded ``all_to_all``'s per-row
+    payload (N · bmax · row bytes); ``round_bytes`` the nonzero
+    off-diagonal ppermute round widths in bytes (round 0 is local and
+    free).  Costed under the measured fabric model: one collective for
+    the padded plan vs one per shift round — so the segmented plan wins
+    exactly when its Σ-bytes saving beats the extra per-collective
+    overhead, which is the skewed-histogram regime (a few hot
+    (source, destination) pairs) the padding approach degenerates on.
+    """
+    model = model if model is not None else fabric_model()
+    padded_us = collective_us(padded_bytes, model)
+    permute_us = sum(collective_us(b, model) for b in round_bytes)
+    return "ppermute" if permute_us < padded_us else "padded"
 
 
 def auto_accuracy(table) -> Optional[float]:

@@ -662,6 +662,7 @@ MESH_MIGRATE_SCRIPT = textwrap.dedent("""
 
 
 @pytest.mark.slow
+@pytest.mark.mesh
 def test_mesh_relayout_matches_stacked():
     r = subprocess.run([sys.executable, "-c", MESH_MIGRATE_SCRIPT],
                        capture_output=True, text=True, timeout=900,

@@ -780,6 +780,7 @@ MESH_COMPACT_SCRIPT = textwrap.dedent("""
 
 
 @pytest.mark.slow
+@pytest.mark.mesh
 def test_mesh_compacted_overflow_parity():
     """The compacted plane on a real 4-device shard_map mesh with a budget
     SMALLER than q: the (L, N, B) all_to_all wiring, fused reply
@@ -830,6 +831,7 @@ MESH_LOSSLESS_SCRIPT = textwrap.dedent("""
 
 
 @pytest.mark.slow
+@pytest.mark.mesh
 def test_mesh_lossless_carry_parity():
     """The cond-gated carry round on a real 4-device shard_map mesh: the
     psum-composed predicate must take the same branch on every device, the
@@ -841,18 +843,30 @@ def test_mesh_lossless_carry_parity():
     assert "MESH_LOSSLESS_OK" in r.stdout, r.stdout + r.stderr
 
 
-def test_mesh_rejects_ragged_specs():
-    """build_mesh_ops must refuse ragged configs (all_to_all needs uniform
-    splits) and the client must silently fall back to uniform budgets."""
+def test_mesh_rejects_packed_ragged_specs():
+    """build_mesh_ops must refuse PACKED ragged configs (all_to_all needs
+    uniform splits) while accepting the mesh-ragged plans; the client now
+    keeps ragged planning on, producing MeshRaggedSpec configs instead."""
     from repro.core.mesh_engine import build_mesh_ops, make_node_mesh
     policy = LayoutPolicy.uniform(LayoutMode.DIST_HASH, 1)
     spec = bb.RaggedSpec((1,))
     with pytest.raises(ValueError, match="ragged"):
         build_mesh_ops(make_node_mesh(1), policy,
                        bb.ExchangeConfig("compacted", data_spec=spec))
+    # a MeshRaggedSpec is carried fine (padded path = uniform bmax)
+    mspec = bb.MeshRaggedSpec((1,), (1,), "padded")
+    build_mesh_ops(make_node_mesh(1), policy,
+                   bb.ExchangeConfig("compacted", data_spec=mspec))
+    # the ppermute plan needs nodes 1:1 with devices
+    pol2 = LayoutPolicy.uniform(LayoutMode.DIST_HASH, 2)
+    pspec = bb.MeshRaggedSpec((1, 1), (1, 1), "ppermute")
+    with pytest.raises(ValueError, match="ppermute"):
+        build_mesh_ops(make_node_mesh(1), pol2,
+                       bb.ExchangeConfig("compacted", data_spec=pspec))
     client = BBClient(policy, make_node_mesh(1), cap=16, words=4, mcap=16,
                       exchange="compacted", ragged=True)
-    assert client.ragged is False                    # forced off on mesh
+    assert client.ragged is True                 # mesh plans ragged now
+    assert client._ppermute_ok is True           # 1 node on 1 device
 
 
 def test_exchange_footprint_scaling():

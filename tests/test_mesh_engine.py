@@ -43,6 +43,7 @@ SCRIPT = textwrap.dedent("""
 
 
 @pytest.mark.slow
+@pytest.mark.mesh
 def test_shard_map_engine_matches_stacked():
     r = subprocess.run([sys.executable, "-c", SCRIPT], capture_output=True,
                        text=True, timeout=600, cwd=".")

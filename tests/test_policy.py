@@ -273,6 +273,7 @@ MESH_SCRIPT = textwrap.dedent("""
 
 
 @pytest.mark.slow
+@pytest.mark.mesh
 def test_mixed_policy_stacked_vs_mesh_parity():
     """The SAME heterogeneous batch on a 4-device shard_map mesh backend
     must produce identical payloads AND identical node tables."""
