@@ -1,14 +1,18 @@
 PY := PYTHONPATH=src python
 
-.PHONY: test test-fast examples bb-dryrun bench bench-adapt bench-mesh docs-check
+.PHONY: test test-fast lint examples bb-dryrun bench bench-adapt bench-mesh docs-check
 
 # full tier-1 suite (~minutes: includes model smoke + subprocess mesh tests)
 test:
 	$(PY) -m pytest -q
 
 # quick pre-commit subset: skips the >30 s `slow`-marked tests
-test-fast:
+test-fast: lint
 	$(PY) -m pytest -q -m "not slow"
+
+# jit/caching safety lint (tools/repo_lint.py); also run as a tier-1 test
+lint:
+	python tools/repo_lint.py src/repro
 
 examples:
 	$(PY) examples/quickstart.py

@@ -26,9 +26,16 @@ class HybridContext:
     # ---- consolidated evidence (merging rules of §III-C) -------------------
     @property
     def topology(self) -> str:
-        """File-sharing topology: "N-1", "N-N" or "unknown"."""
+        """File-sharing topology: "N-1", "N-N" or "unknown".
+
+        Confidence-weighted merge: observed shared-file traffic overrides
+        the static hint only when the hint is weak — unknown, or carried
+        by low-confidence (regex-tier) evidence.  A dataflow-proven hint
+        (confidence ≥ 0.8) stands even against noisy probe counters.
+        """
         if self.runtime is not None and self.runtime.shared_file_ops > 0 and \
-                self.static.topology_hint == "unknown":
+                (self.static.topology_hint == "unknown" or
+                 self.static.confidence("topology_hint") < 0.8):
             return "N-1"
         return self.static.topology_hint
 
@@ -119,4 +126,12 @@ class HybridContext:
                               "UNAVAILABLE (static-only ablation)"),
             "scale": {"n_nodes": self.n_nodes, "ppn": self.static.ppn},
         }
+        evidence = self.static.provenance_dict()
+        if evidence:
+            payload["evidence"] = evidence
         return json.dumps(payload, indent=2)
+
+
+#: Alias used by callers that think of the profile as a portable pack
+#: of evidence rather than a live merge object.
+ContextPack = HybridContext

@@ -36,3 +36,20 @@ def oracle_table(n_nodes: int = 32, hw: Hardware = DEFAULT_HW
                  ) -> Dict[str, LayoutMode]:
     """Workload-name → oracle mode over the whole suite."""
     return {w.name: oracle_mode(w, hw) for w in build_workloads(n_nodes)}
+
+
+def suite_accuracy(workloads: List[Workload], hw: Hardware = DEFAULT_HW,
+                   seed: int = 0, **select_kw) -> tuple:
+    """(correct, total) of the pipeline against the per-workload oracle.
+
+    ``select_kw`` is forwarded to ``select_layout`` (ablation switches,
+    ``static_engine=...``), so the same scorer drives both the headline
+    accuracy pins and the regex-vs-AST differential comparisons.
+    """
+    from repro.core.intent.selector import select_layout
+    correct = 0
+    for w in workloads:
+        decided = select_layout(w, probe_seed=seed, **select_kw).mode
+        if decided == oracle_mode(w, hw, seed):
+            correct += 1
+    return correct, len(workloads)

@@ -32,6 +32,9 @@ most suitable GekkoFS architecture mode.
 ### Reasoning Strategy
 Perform step-by-step reasoning over the provided context and avoid
 unsupported assumptions.
+Static features carry an "evidence" block grading each field by its
+extraction rule and confidence tier (ast-dataflow > script > ast-struct
+> regex); weigh low-confidence hints accordingly.
 
 ### Mode Selection Task
 Select the layout mode that best matches the workload characteristics.

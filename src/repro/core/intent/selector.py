@@ -55,8 +55,9 @@ class LayoutDecision:
 
 def _decide_one(workload: Workload, *, use_runtime: bool, use_app_ref: bool,
                 use_mode_know: bool, backend: Optional[LLMBackend],
-                probe_seed: int):
-    static = extract_static(workload.source_code, workload.job_script)
+                probe_seed: int, static_engine: str = "auto"):
+    static = extract_static(workload.source_code, workload.job_script,
+                            engine=static_engine)
     runtime = run_probe(workload, seed=probe_seed) if use_runtime else None
     ctx = HybridContext(app=workload.app, static=static, runtime=runtime,
                         n_nodes=workload.n_nodes)
@@ -74,17 +75,22 @@ def _decide_one(workload: Workload, *, use_runtime: bool, use_app_ref: bool,
 def select_layout(workload: Workload, *, use_runtime: bool = True,
                   use_app_ref: bool = True, use_mode_know: bool = True,
                   backend: Optional[LLMBackend] = None,
-                  probe_seed: int = 0) -> LayoutDecision:
+                  probe_seed: int = 0,
+                  static_engine: str = "auto") -> LayoutDecision:
     """The full Proteus decision pipeline for one job.
 
     The whole-job decision is unchanged from the single-mode pipeline; when
     the workload's phases carry distinct path scopes, each scope's phase
     group is additionally reasoned over in isolation, yielding the per-scope
     assignments of the heterogeneous plan.
+
+    ``static_engine`` selects the extraction engine: ``"auto"`` tries the
+    AST/dataflow analyzer and falls back to regex for non-C inputs,
+    ``"regex"`` forces the legacy extractor (the differential oracle).
     """
     kw = dict(use_runtime=use_runtime, use_app_ref=use_app_ref,
               use_mode_know=use_mode_know, backend=backend,
-              probe_seed=probe_seed)
+              probe_seed=probe_seed, static_engine=static_engine)
     decision, prompt, ctx = _decide_one(workload, **kw)
     result = LayoutDecision(workload.name, decision.mode, decision.confidence,
                             decision, prompt, ctx.to_json())

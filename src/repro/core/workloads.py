@@ -483,6 +483,154 @@ def workload_by_name(name: str, n_nodes: int = 32) -> Workload:
 
 
 # ---------------------------------------------------------------------------
+# adversarial corpus: kernels the regex engine misreads (AST engine wins)
+# ---------------------------------------------------------------------------
+_ADV_DEAD_COLLECTIVE_SRC = r"""
+/* v2 checkpoint: file-per-process; the old shared-file path is compiled
+   out but still present in the source. */
+void ckpt_v2(int rank, size_t nblk) {
+  char fname[256];
+  int id = rank;                             /* local alias */
+  sprintf(fname, "ckpt2.%07d", id);
+  int fd = open(fname, O_CREAT | O_WRONLY, 0664);
+  if (0) {
+    /* legacy shared-file path, disabled since v2 */
+    MPI_File_write_at_all(gfh, (MPI_Offset)id * nblk, buf, nblk,
+                          MPI_BYTE, &st);
+  }
+  for (size_t b = 0; b < nblk; b++)
+    pwrite(fd, buf, BLK, b * BLK);
+  close(fd);
+}
+"""
+
+_ADV_WRAPPER_SRC = r"""
+/* Streaming writer behind a thin wrapper; the verify read-back helper
+   is referenced only from a disabled branch. */
+static void put_block(int fd, const char *p, size_t nb, size_t off) {
+  pwrite(fd, p, nb, off);
+}
+static void get_block(int fd, char *p, size_t nb, size_t off) {
+  pread(fd, p, nb, off);
+}
+void stream_out(int rank, int nblk) {
+  char fname[256];
+  sprintf(fname, "stream.%05d", rank);
+  int fd = open(fname, O_CREAT | O_WRONLY, 0664);
+  for (int b = 0; b < nblk; b++) {
+    put_block(fd, buf, BLK, (size_t)b * BLK);
+    if (0)
+      get_block(fd, chk, BLK, (size_t)b * BLK);   /* paranoid verify */
+  }
+  close(fd);
+}
+"""
+
+_ADV_SHARED_COMMENT_SRC = r"""
+/* All ranks dump into the shared scratch tree. */
+void scratch_dump(int rank, int nblk) {
+  char fname[256];
+  int me = rank;
+  sprintf(fname, "scratch/%07d.blk", me);      /* per-rank file names */
+  int fd = open(fname, O_CREAT | O_WRONLY, 0664);
+  for (int b = 0; b < nblk; b++)
+    pwrite(fd, buf, BLK, (size_t)b * BLK);
+  close(fd);
+}
+"""
+
+_ADV_GUARDED_META_SRC = r"""
+/* Append-only logger: health-check metadata only every 4096 records. */
+void rolling_log(int rank, int nrec) {
+  char fname[256];
+  sprintf(fname, "log.%05d", rank);
+  int fd = open(fname, O_CREAT | O_WRONLY | O_APPEND, 0664);
+  for (int i = 0; i < nrec; i++) {
+    write(fd, rec, RECSZ);
+    if (i % 4096 == 0)
+      fstat(fd, &sb);
+    if (i % 4096 == 0)
+      utime(fname, 0);
+  }
+  close(fd);
+}
+"""
+
+_ADV_COMM_SELF_SRC = r"""
+/* MPI-IO used purely per-process: every rank opens its own file on
+   MPI_COMM_SELF -- no file is ever shared. */
+void private_dump(int rank, int nb) {
+  char fname[256];
+  MPI_File fh;
+  int me = rank;
+  sprintf(fname, "part.%06d.bin", me);
+  MPI_File_open(MPI_COMM_SELF, fname, MPI_MODE_CREATE | MPI_MODE_WRONLY,
+                MPI_INFO_NULL, &fh);
+  MPI_File_write(fh, buf, nb, MPI_BYTE, &st);
+  MPI_File_close(&fh);
+}
+"""
+
+_ADV_HIDDEN_NEIGHBOR_SRC = r"""
+/* Halo exchange via files: write own block, then read the wraparound
+   neighbor's block (the neighbor index is computed, not inlined). */
+void halo_exchange(int rank, int np, int nseg) {
+  char fname[256];
+  sprintf(fname, "halo.%06d", rank);
+  int fd = open(fname, O_WRONLY);
+  for (int i = 0; i < nseg; i++)
+    pwrite(fd, buf, XFER, i * XFER);
+  close(fd);
+  MPI_Barrier(MPI_COMM_WORLD);
+  int peer = rank + 1;
+  if (peer == np)
+    peer = 0;                                /* wraparound neighbor */
+  sprintf(fname, "halo.%06d", peer);
+  fd = open(fname, O_RDONLY);
+  for (int i = 0; i < nseg; i++)
+    pread(fd, buf, XFER, i * XFER);
+  close(fd);
+}
+"""
+
+
+def adversarial_workloads(n_nodes: int = 32) -> List[Workload]:
+    """Kernels crafted so textual pattern-matching misclassifies them.
+
+    Each case targets one regex blind spot — dead branches, wrapper
+    indirection, comment words, unbraced sampling guards, communicator
+    scope, computed neighbor indices — while the AST/dataflow engine
+    recovers the true intent.  Evaluated statically (``use_runtime=
+    False``) against the simulator oracle; not part of the 23-scenario
+    paper matrix.
+    """
+    gb = 1024.0
+    nn_write = [Phase("bw", op="write", topology="NN", pattern="seq",
+                      total_mib=n_nodes * 4 * gb, req_kib=4096)]
+    script = _script("ADV", n_nodes, 8, "adv_io /bb/adv")
+    W = [
+        Workload("ADV", "A", "Dead-branch collective: live path is N-N",
+                 list(nn_write), _ADV_DEAD_COLLECTIVE_SRC, script, n_nodes),
+        Workload("ADV", "B", "Wrapper write + dead verify read",
+                 list(nn_write), _ADV_WRAPPER_SRC, script, n_nodes),
+        Workload("ADV", "C", "Rank files under shared parent (comment bait)",
+                 list(nn_write), _ADV_SHARED_COMMENT_SRC, script, n_nodes),
+        Workload("ADV", "D", "Guarded metadata: unbraced modulo sampling",
+                 list(nn_write), _ADV_GUARDED_META_SRC, script, n_nodes),
+        Workload("ADV", "E", "MPI_COMM_SELF: per-process MPI-IO, not N-1",
+                 list(nn_write), _ADV_COMM_SELF_SRC, script, n_nodes),
+        Workload("ADV", "F", "Hidden wraparound-neighbor read-back",
+                 [Phase("bw", op="write", topology="NN", pattern="seq",
+                        total_mib=n_nodes * 2 * gb, req_kib=1024),
+                  Phase("bw", op="read", topology="NN", pattern="seq",
+                        total_mib=n_nodes * 2 * gb, req_kib=1024,
+                        written_by="other")],
+                 _ADV_HIDDEN_NEIGHBOR_SRC, script, n_nodes),
+    ]
+    return W
+
+
+# ---------------------------------------------------------------------------
 # heterogeneous-scope workload (layout-heterogeneity demo + tests)
 # ---------------------------------------------------------------------------
 _HETERO_SRC = _FIO_CKPT_SRC + _FIO_META_SRC

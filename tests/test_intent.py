@@ -43,6 +43,42 @@ def test_static_extractor_mdtest_flags():
     assert extract_static(c.source_code, c.job_script).dir_pattern == "deep"
 
 
+def test_shared_file_needs_real_evidence():
+    """Tightened rule: an independent MPI_File_read/write on a handle of
+    unknown provenance is NOT shared-file evidence for the regex engine."""
+    from repro.core.intent.static_extractor import extract_source_features
+    f = extract_source_features(
+        "void r(MPI_File fh) { MPI_File_read(fh, buf, n, MPI_BYTE, &st); }")
+    assert not f.shared_file
+    # the four corpus MPI sources still carry genuine shared evidence
+    for name in ("IOR-B", "HACC-A", "HACC-B", "MAD-A"):
+        w = workload_by_name(name)
+        for engine in ("regex", "auto"):
+            assert extract_static(w.source_code, w.job_script,
+                                  engine=engine).shared_file, (name, engine)
+
+
+def test_phase_order_from_structure_not_substring():
+    """write_then_read derives from call/mode ordering (or a barrier),
+    not from the old `src.find("rite")` substring hack."""
+    from repro.core.intent.static_extractor import extract_source_features
+    rw = extract_source_features(
+        "void m(int fd) { pwrite(fd, b, n, 0); pread(fd, b, n, 0); }")
+    assert rw.multi_phase and rw.phase_pattern == "write_then_read"
+    wr = extract_source_features(
+        "void m(int fd) { pread(fd, b, n, 0); pwrite(fd, b, n, 0); }")
+    assert not wr.multi_phase and wr.phase_pattern == "single"
+    # the word "write" appearing only in prose must not fake a write phase
+    prose = extract_source_features(
+        "/* writers wrote previously */"
+        " void m(int fd) { pread(fd, b, n, 0); }")
+    assert prose.direction_hint == "read" and not prose.multi_phase
+    # fio: rw= modes are ordering evidence (FIO-D keeps its two phases)
+    d = workload_by_name("FIO-D")
+    fd = extract_static(d.source_code, d.job_script, engine="regex")
+    assert fd.multi_phase and fd.phase_pattern == "write_then_read"
+
+
 def test_probe_counters_reflect_phases():
     w = workload_by_name("FIO-E90")
     rs = run_probe(w)

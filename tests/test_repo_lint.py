@@ -1,0 +1,142 @@
+"""repo_lint: the tree is clean and every rule positively detects."""
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(ROOT / "tools"))
+
+from repo_lint import lint_paths  # noqa: E402
+
+
+def _lint_snippet(tmp_path, src):
+    f = tmp_path / "case.py"
+    f.write_text(textwrap.dedent(src))
+    return [fi.rule for fi in lint_paths([str(f)])]
+
+
+def test_repo_is_clean():
+    assert lint_paths([str(ROOT / "src" / "repro")]) == []
+
+
+def test_make_lint_entrypoint():
+    out = subprocess.run(
+        [sys.executable, str(ROOT / "tools" / "repo_lint.py"),
+         str(ROOT / "src" / "repro")],
+        capture_output=True, text=True)
+    assert out.returncode == 0, out.stdout
+    assert "0 findings" in out.stdout
+
+
+def test_detects_traced_branch_in_decorated_jit(tmp_path):
+    rules = _lint_snippet(tmp_path, """
+        import jax
+        import jax.numpy as jnp
+
+        @jax.jit
+        def f(x):
+            y = jnp.sum(x)
+            if y > 0:
+                return x
+            return -x
+        """)
+    assert rules == ["jit-traced-branch"]
+
+
+def test_detects_traced_branch_in_wrapped_jit(tmp_path):
+    rules = _lint_snippet(tmp_path, """
+        import jax
+        import jax.numpy as jnp
+
+        def _step(x):
+            while jnp.any(x > 0):
+                x = x - 1
+            return x
+
+        step = jax.jit(_step)
+        """)
+    assert rules == ["jit-traced-branch"]
+
+
+def test_static_arg_branching_is_allowed(tmp_path):
+    # branching on a static python arg is the supported jit idiom
+    rules = _lint_snippet(tmp_path, """
+        import functools
+        import jax
+        import jax.numpy as jnp
+
+        @functools.partial(jax.jit, static_argnames=("interpret",))
+        def f(x, interpret=False):
+            if interpret:
+                return jnp.zeros_like(x)
+            return x * 2
+        """)
+    assert rules == []
+
+
+def test_detects_jnp_truthiness(tmp_path):
+    rules = _lint_snippet(tmp_path, """
+        import jax.numpy as jnp
+
+        def h(x):
+            m = jnp.isfinite(x)
+            if m:
+                return 1
+            if not m:
+                return 2
+            return 0
+        """)
+    assert rules == ["jnp-truthiness", "jnp-truthiness"]
+
+
+def test_detects_jnp_item_assignment(tmp_path):
+    rules = _lint_snippet(tmp_path, """
+        import jax.numpy as jnp
+
+        def k(n):
+            a = jnp.zeros(n)
+            a[0] = 1.0
+            a[1] += 2.0
+            return a
+        """)
+    assert rules == ["jnp-item-assignment", "jnp-item-assignment"]
+
+
+def test_detects_cached_mutation(tmp_path):
+    rules = _lint_snippet(tmp_path, """
+        import functools
+
+        @functools.lru_cache(maxsize=8)
+        def make_plan(n):
+            return {"slots": [n]}
+
+        def use(n):
+            p = make_plan(n)
+            p["slots"] = []
+            p["slots"].append(99)
+            return p
+        """)
+    assert rules == ["cached-mutation", "cached-mutation"]
+
+
+def test_rebinding_clears_tracking(tmp_path):
+    # a rebound name is no longer the cached/jnp object: no findings
+    rules = _lint_snippet(tmp_path, """
+        import functools
+        import jax.numpy as jnp
+
+        @functools.lru_cache(maxsize=8)
+        def make_plan(n):
+            return [n]
+
+        def use(n):
+            p = make_plan(n)
+            p = list(p)
+            p.append(99)
+            a = jnp.zeros(n)
+            a = a.tolist()
+            a[0] = 1.0
+            return p, a
+        """)
+    assert rules == []

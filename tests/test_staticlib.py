@@ -1,0 +1,406 @@
+"""Static-analysis engine: lexer/parser/CFG/dataflow units, the regex
+differential suite, golden provenance snapshots, dead-code invariance and
+the adversarial-corpus accuracy pins."""
+import dataclasses
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                     # pragma: no cover - env dependent
+    from _minihyp import given, settings, strategies as st
+
+from repro.core.intent import staticlib
+from repro.core.intent.staticlib import cparse as C
+from repro.core.intent.staticlib.cfg import (build_cfg, loop_nests,
+                                             walk_contexts)
+from repro.core.intent.staticlib.dataflow import (RANK_NAMES, ReachingDefs,
+                                                  TAINT_ALL, TAINT_NONE,
+                                                  TAINT_OTHER, TAINT_SELF,
+                                                  TaintEnv, classify_offset,
+                                                  eval_taint)
+from repro.core.intent.staticlib.lexer import LexError, tokenize
+from repro.core.intent.oracle import oracle_mode, suite_accuracy
+from repro.core.intent.selector import select_layout
+from repro.core.intent.static_extractor import (TIER_CONFIDENCE,
+                                                extract_static)
+from repro.core.workloads import (adversarial_workloads, build_workloads,
+                                  heterogeneous_workload, workload_by_name)
+
+WS = build_workloads(32)
+ADV = adversarial_workloads(32)
+
+
+# ---------------------------------------------------------------------------
+# lexer / parser units
+# ---------------------------------------------------------------------------
+def test_lexer_skips_comments_and_preproc():
+    toks = tokenize('/* shared */ #define X 1\nint a = 2; // shared\n')
+    texts = [t.text for t in toks]
+    assert "shared" not in texts and texts[:3] == ["int", "a", "="]
+
+
+def test_lexer_rejects_shell_chars():
+    with pytest.raises(LexError):
+        tokenize("numjobs=${NJOBS}")
+
+
+def test_parser_function_shape():
+    prog = C.parse("""
+    void f(int rank, size_t n) {
+      for (size_t i = 0; i < n; i++)
+        pwrite(fd, buf, 64, i * 64);
+    }
+    """)
+    assert [fn.name for fn in prog.funcs] == ["f"]
+    assert [p.name for p in prog.funcs[0].params] == ["rank", "n"]
+
+
+def test_parser_rejects_ini():
+    with pytest.raises(C.ParseError):
+        C.parse("rw=write\nbs=4m\nnumjobs=${NJOBS}\n")
+    assert not staticlib.looks_like_c("[global]\nrw=randread\n")
+
+
+# ---------------------------------------------------------------------------
+# CFG units
+# ---------------------------------------------------------------------------
+_DEAD_SRC = """
+void g(int rank) {
+  int live = 1;
+  if (0) { int dead_var = 7; creat(p, 0644); }
+  if (1) { int then_live = 2; } else { int else_dead = 3; }
+  for (int i = 0; i < 100; i += 4) {
+    if (i % 8 == 0) { stat(p, &sb); }
+  }
+}
+"""
+
+
+def test_walk_contexts_marks_dead_and_guards():
+    func = C.parse(_DEAD_SRC).funcs[0]
+    by_kind = {}
+    for ctx in walk_contexts(func):
+        if isinstance(ctx.stmt, C.Decl):
+            by_kind[ctx.stmt.name] = ctx
+    assert not by_kind["live"].dead
+    assert by_kind["dead_var"].dead
+    assert not by_kind["then_live"].dead
+    assert by_kind["else_dead"].dead
+    stat_ctx = next(ctx for ctx in walk_contexts(func)
+                    if isinstance(ctx.stmt, C.ExprStmt)
+                    and isinstance(ctx.stmt.expr, C.Call)
+                    and ctx.stmt.expr.name == "stat")
+    assert stat_ctx.guard_div == 8 and stat_ctx.depth == 1
+
+
+def test_cfg_excludes_dead_branches():
+    func = C.parse(_DEAD_SRC).funcs[0]
+    cfg = build_cfg(func)
+    decls = [s.name for s in cfg.iter_stmts() if isinstance(s, C.Decl)]
+    assert "dead_var" not in decls and "else_dead" not in decls
+    assert "live" in decls and "then_live" in decls
+
+
+def test_loop_nest_trip_counts():
+    func = C.parse("""
+    void h(int n) {
+      for (int i = 0; i < 128; i += 4)
+        for (int j = 0; j < n; j++)
+          write(fd, b, 1);
+    }
+    """).funcs[0]
+    loops = {l.var: l for l in loop_nests(func)}
+    assert loops["i"].trip == 32 and loops["i"].depth == 1
+    assert loops["j"].trip is None and loops["j"].trip_sym == "n"
+    assert loops["j"].depth == 2
+
+
+# ---------------------------------------------------------------------------
+# dataflow units
+# ---------------------------------------------------------------------------
+def _expr(src):
+    prog = C.parse("void t(int rank, int np) { x = %s; }" % src)
+    stmt = prog.funcs[0].body.stmts[0]
+    return stmt.expr.value
+
+
+def test_taint_lattice_rules():
+    env = TaintEnv({"r_all"})
+    assert eval_taint(_expr("rank"), env) == TAINT_SELF
+    assert eval_taint(_expr("rank + 1"), env) == TAINT_OTHER
+    assert eval_taint(_expr("(rank + 1) % np"), env) == TAINT_OTHER
+    assert eval_taint(_expr("rank % np"), env) == TAINT_SELF
+    assert eval_taint(_expr("r_all"), env) == TAINT_ALL
+    assert eval_taint(_expr("nblk * 4"), env) == TAINT_NONE
+    assert "myrank" in RANK_NAMES
+
+
+def test_taint_survives_loop_init_rebinding():
+    # `for (int r = 0; ...)` must not launder an np-bounded loop var
+    env = TaintEnv({"r"})
+    env.set("r", TAINT_NONE)
+    assert env.get("r") == TAINT_ALL
+
+
+def test_reaching_defs_compound_not_killed():
+    func = C.parse("""
+    void k(size_t block, size_t xfer, int np) {
+      size_t off = 0;
+      for (size_t i = 0; i < block; i++) {
+        pwrite(fd, buf, xfer, off);
+        off += xfer;
+      }
+    }
+    """).funcs[0]
+    rd = ReachingDefs(build_cfg(func))
+    defs = rd.reaching("off")
+    assert any(d.compound for d, _ in defs)      # off += xfer survives
+    assert any(not d.compound for d, _ in defs)  # off = 0 also present
+    pattern, why = classify_offset(
+        C.Ident(line=0, name="off"), rd, {"i": "1"})
+    assert pattern == "seq"
+
+
+def test_classify_offset_strided_and_random():
+    func = C.parse("""
+    void k(int np, size_t xfer) {
+      size_t off = 0;
+      size_t roff = 0;
+      for (size_t i = 0; i < 100; i++) {
+        off += np * xfer;
+        roff = rand() % 7777;
+      }
+    }
+    """).funcs[0]
+    rd = ReachingDefs(build_cfg(func))
+    assert classify_offset(C.Ident(line=0, name="off"), rd, {})[0] == \
+        "strided"
+    assert classify_offset(C.Ident(line=0, name="roff"), rd, {})[0] == \
+        "random"
+
+
+# ---------------------------------------------------------------------------
+# analyzer: corpus facts + engine routing
+# ---------------------------------------------------------------------------
+def test_analyzer_corpus_facts():
+    f = staticlib.analyze_source(workload_by_name("IOR-A").source_code)
+    assert f.engine == "ast"
+    assert f.rank_indexed_files and f.topology_hint == "N-N"
+    assert f.access_pattern == "seq" and f.direction_hint == "write"
+
+    f = staticlib.analyze_source(workload_by_name("IOR-B").source_code)
+    assert f.shared_file and f.collective_io and f.topology_hint == "N-1"
+    assert f.access_pattern == "strided" and not f.cross_rank_read
+
+    f = staticlib.analyze_source(workload_by_name("HACC-B").source_code)
+    assert f.cross_rank_read          # np-bounded loop var reaches offsets
+
+    f = staticlib.analyze_source(workload_by_name("MDTEST-A").source_code)
+    assert f.dir_pattern == "unique" and f.meta_intensity == "high"
+    assert f.phase_pattern == "create_then_stat"
+
+
+def test_fio_sources_reject_and_fall_back():
+    for name in ("FIO-A", "FIO-C", "FIO-D", "FIO-E50"):
+        w = workload_by_name(name)
+        with pytest.raises(staticlib.StaticAnalysisError):
+            staticlib.analyze_source(w.source_code)
+        with pytest.raises(staticlib.StaticAnalysisError):
+            extract_static(w.source_code, w.job_script, engine="ast")
+        f = extract_static(w.source_code, w.job_script, engine="auto")
+        assert f.engine == "regex"    # fell back, still fully featured
+    hw = heterogeneous_workload()
+    assert extract_static(hw.source_code, hw.job_script).engine == "regex"
+
+
+# ---------------------------------------------------------------------------
+# differential suite: AST vs regex on the original 23 workloads
+# ---------------------------------------------------------------------------
+_DIFF_FIELDS = [
+    "rank_indexed_files", "shared_file", "collective_io", "access_pattern",
+    "direction_hint", "cross_rank_read", "meta_intensity", "create_heavy",
+    "small_requests", "tiny_requests", "latency_sensitive", "multi_phase",
+    "phase_pattern", "dir_pattern", "topology_hint", "has_data_calls",
+    "n_nodes", "ppn",
+]
+
+
+def test_differential_refinement_compatible():
+    """AST agrees with regex on every field of every original workload,
+    except that it may *refine* an unknown access pattern (dataflow
+    resolves what text-matching cannot) — a decision-safe upgrade."""
+    for w in WS:
+        rx = extract_static(w.source_code, w.job_script, engine="regex")
+        au = extract_static(w.source_code, w.job_script, engine="auto")
+        for fld in _DIFF_FIELDS:
+            a, b = getattr(rx, fld), getattr(au, fld)
+            if fld == "access_pattern" and a == "unknown":
+                assert b in ("unknown", "seq", "strided"), (w.name, b)
+                continue
+            assert a == b, f"{w.name}.{fld}: regex={a!r} ast={b!r}"
+
+
+def test_decisions_identical_across_engines():
+    for w in WS:
+        rx = select_layout(w, use_runtime=False, static_engine="regex")
+        au = select_layout(w, use_runtime=False, static_engine="auto")
+        assert rx.mode == au.mode, w.name
+
+
+# ---------------------------------------------------------------------------
+# provenance: every decided feature is evidence-graded
+# ---------------------------------------------------------------------------
+def test_provenance_covers_decided_features():
+    for w in WS + ADV:
+        f = extract_static(w.source_code, w.job_script)
+        ev = f.provenance_dict()
+        assert ev, w.name
+        for entry in ev.values():
+            assert entry["rule"] and entry["tier"] in TIER_CONFIDENCE
+        # topology is always decided (default fill notes itself too)
+        assert "topology_hint" in ev, w.name
+
+
+def test_golden_provenance_ior_a():
+    w = workload_by_name("IOR-A")
+    ev = extract_static(w.source_code, w.job_script).provenance_dict()
+    assert ev["rank_indexed_files"]["rule"] == "taint-name-self"
+    assert ev["rank_indexed_files"]["tier"] == "ast-dataflow"
+    assert ev["topology_hint"]["value"] == "N-N"
+    assert ev["access_pattern"]["rule"] == "rd-offset-evolution"
+    assert ev["access_pattern"]["site"] == "write_phase:8"
+    assert ev["create_heavy"]["rule"] == "creat-or-ocreat"
+    assert ev["dir_pattern"]["tier"] == "default"
+
+
+def test_golden_provenance_hacc_a():
+    w = workload_by_name("HACC-A")
+    ev = extract_static(w.source_code, w.job_script).provenance_dict()
+    assert ev["shared_file"]["rule"] == "mpi-collective-data"
+    assert ev["topology_hint"]["value"] == "N-1"
+    assert ev["collective_io"]["rule"] == "mpi-collective-call"
+    assert ev["direction_hint"]["site"] == "hacc_checkpoint:5"
+
+
+def test_golden_provenance_mdtest_a():
+    w = workload_by_name("MDTEST-A")
+    ev = extract_static(w.source_code, w.job_script).provenance_dict()
+    assert ev["meta_intensity"]["rule"] == "loop-meta-density"
+    assert ev["dir_pattern"]["value"] == "unique"
+    assert ev["phase_pattern"]["value"] == "create_then_stat"
+    assert ev["cross_rank_read"]["rule"] == "flag-mdtest-N-shift"
+    assert ev["cross_rank_read"]["tier"] == "script"
+
+
+def test_confidence_weighted_topology_merge():
+    """Runtime shared-file counters override only weak static hints."""
+    from repro.core.intent.context import ContextPack, HybridContext
+    from repro.core.intent.probe import run_probe
+    assert ContextPack is HybridContext
+    w = workload_by_name("HACC-A")
+    static = extract_static(w.source_code, w.job_script)
+    assert static.confidence("topology_hint") >= 0.8
+    ctx = HybridContext(app=w.app, static=static,
+                        runtime=run_probe(w, seed=0), n_nodes=w.n_nodes)
+    assert ctx.topology == "N-1"
+    # weak (default-tier) hint + shared runtime traffic -> overridden
+    weak = extract_static(workload_by_name("FIO-E50").source_code,
+                          workload_by_name("FIO-E50").job_script)
+    assert weak.confidence("topology_hint") < 0.8
+    ctx2 = HybridContext(app="FIO", static=weak,
+                         runtime=run_probe(workload_by_name("FIO-E50"),
+                                           seed=0), n_nodes=32)
+    assert ctx2.topology == "N-1"
+
+
+# ---------------------------------------------------------------------------
+# dead-code invariance (property test)
+# ---------------------------------------------------------------------------
+_LIVE_TEMPLATE = """
+void kernel(int rank, size_t nblk) {
+  char fname[256];
+  sprintf(fname, "out.%05d", rank);
+  int fd0 = open(fname, O_CREAT | O_WRONLY, 0664);
+  for (size_t b = 0; b < nblk; b++)
+    pwrite(fd0, buf, BLK, b * BLK);
+  close(fd0);
+  if (0) {
+PAYLOAD
+  }
+}
+"""
+
+_PAYLOADS = [
+    'MPI_File_write_at_all(gfh, 0, buf, n, MPI_BYTE, &st);',
+    'for (int q = 0; q < np; q++) { creat(junk, 0644); stat(junk, &sb); }',
+    'sprintf(evil, "evil.%d/f", rank); int zfd = open(evil, O_CREAT, 0);',
+    'pread(fd0, buf, 512, (size_t)rand());',
+    'MPI_Barrier(MPI_COMM_WORLD);',
+    'unlink(junk); fsync(fd0); utime(junk, 0);',
+    'MPI_File_open(MPI_COMM_WORLD, evil, 0, MPI_INFO_NULL, &gfh);',
+]
+
+
+def _features_tuple(src):
+    f = staticlib.analyze_source(src)
+    return tuple(getattr(f, fld) for fld in _DIFF_FIELDS[:16])
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.integers(0, len(_PAYLOADS) - 1), min_size=0,
+                max_size=5))
+def test_dead_code_never_changes_features(picks):
+    """Any statement mix injected under ``if (0)`` is invisible: the
+    extracted features equal the empty-dead-block baseline."""
+    baseline = _features_tuple(_LIVE_TEMPLATE.replace("PAYLOAD", ";"))
+    payload = "\n".join("    " + _PAYLOADS[i] for i in picks) or ";"
+    mutated = _features_tuple(_LIVE_TEMPLATE.replace("PAYLOAD", payload))
+    assert mutated == baseline
+
+
+# ---------------------------------------------------------------------------
+# accuracy pins: original corpus preserved, adversarial corpus won
+# ---------------------------------------------------------------------------
+def test_original_accuracy_pins_both_engines():
+    for engine in ("auto", "regex"):
+        c, t = suite_accuracy(WS, static_engine=engine)
+        assert (c, t) == (21, 23), engine
+
+
+@pytest.mark.slow
+def test_ast_strictly_beats_regex_on_adversarial():
+    """The corpus regexes misread (dead code, wrappers, comment bait,
+    guards, communicator scope, computed neighbors): the AST engine must
+    match the oracle everywhere; the regex engine never does."""
+    ast_c, t = suite_accuracy(ADV, use_runtime=False, static_engine="auto")
+    rx_c, _ = suite_accuracy(ADV, use_runtime=False, static_engine="regex")
+    assert t == 6
+    assert ast_c > rx_c                  # the headline: strictly better
+    assert ast_c == 6 and rx_c == 0      # exact pin for regression
+
+
+def test_adversarial_feature_recovery():
+    by_id = {w.test_id: w for w in ADV}
+
+    f = staticlib.analyze_source(by_id["A"].source_code)
+    assert not f.collective_io and not f.shared_file    # dead branch
+    assert f.rank_indexed_files and f.topology_hint == "N-N"
+
+    f = staticlib.analyze_source(by_id["B"].source_code)
+    assert f.direction_hint == "write"    # dead verify read invisible
+    assert f.access_pattern == "seq"      # wrapper offset mapped back
+
+    f = staticlib.analyze_source(by_id["C"].source_code)
+    assert not f.shared_file              # comment word is not evidence
+    assert f.rank_indexed_files           # taint through `me = rank`
+
+    f = staticlib.analyze_source(by_id["D"].source_code)
+    assert f.meta_intensity == "medium"   # modulo-guarded meta sampled
+
+    f = staticlib.analyze_source(by_id["E"].source_code)
+    assert not f.shared_file and f.topology_hint == "N-N"  # COMM_SELF
+
+    f = staticlib.analyze_source(by_id["F"].source_code)
+    assert f.cross_rank_read              # peer = rank + 1, wrapped
+    assert f.phase_pattern == "write_then_read"

@@ -1,0 +1,266 @@
+#!/usr/bin/env python
+"""repo_lint: Python-AST lint for the repo's jit/caching safety rules.
+
+Flags the three bug classes that have historically been easy to ship
+and hard to debug in this codebase:
+
+* ``jit-traced-branch`` — Python-level ``if``/``while`` on a traced
+  value inside a jit-compiled function.  Tracing turns the condition
+  into an abstract value; the branch either raises a concretization
+  error or silently bakes in one path.
+* ``jnp-truthiness`` — bare truthiness of a ``jnp``-derived array
+  (``if x:`` with no reducer).  Ambiguous for non-scalars and a
+  concretization hazard under jit.
+* ``jnp-item-assignment`` — ``x[i] = v`` on a ``jnp``-derived array.
+  jax arrays are immutable; this raises at runtime (use
+  ``x.at[i].set(v)``).
+* ``cached-mutation`` — mutating the result of an ``lru_cache``/
+  ``cache``-decorated function (attribute/item assignment or a known
+  mutator method).  The mutation poisons the shared cached object for
+  every later caller with the same key.
+
+Usage: ``python tools/repo_lint.py [path ...]`` (default: ``src/repro``).
+Exits non-zero when any finding is reported.
+"""
+from __future__ import annotations
+
+import ast
+import sys
+from dataclasses import dataclass
+from pathlib import Path
+from typing import Iterable, List, Optional, Set
+
+MUTATOR_METHODS = {"append", "extend", "insert", "update", "add", "pop",
+                   "remove", "clear", "sort", "setdefault", "popitem"}
+
+
+@dataclass(frozen=True)
+class Finding:
+    """One lint hit: file, line, rule id and message."""
+    path: str
+    line: int
+    rule: str
+    message: str
+
+    def __str__(self) -> str:
+        return f"{self.path}:{self.line}: [{self.rule}] {self.message}"
+
+
+def _dotted(node: ast.AST) -> str:
+    """Dotted-name text of a Name/Attribute chain ('' otherwise)."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return ""
+
+
+def _is_jit_decorator(dec: ast.AST) -> bool:
+    """True for @jax.jit / @jit / @(functools.)partial(jax.jit, ...)."""
+    name = _dotted(dec)
+    if name in ("jax.jit", "jit"):
+        return True
+    if isinstance(dec, ast.Call):
+        fn = _dotted(dec.func)
+        if fn in ("jax.jit", "jit"):
+            return True
+        if fn in ("functools.partial", "partial") and dec.args:
+            return _dotted(dec.args[0]) in ("jax.jit", "jit")
+    return False
+
+
+def _is_cache_decorator(dec: ast.AST) -> bool:
+    name = _dotted(dec if not isinstance(dec, ast.Call) else dec.func)
+    return name in ("functools.lru_cache", "lru_cache",
+                    "functools.cache", "cache")
+
+
+def _jnp_aliases(tree: ast.Module) -> Set[str]:
+    """Module aliases bound to jax.numpy (typically {'jnp'})."""
+    out: Set[str] = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                if a.name == "jax.numpy":
+                    out.add(a.asname or "jax")
+        elif isinstance(node, ast.ImportFrom):
+            if node.module == "jax" and any(a.name == "numpy"
+                                            for a in node.names):
+                for a in node.names:
+                    if a.name == "numpy":
+                        out.add(a.asname or "numpy")
+    return out
+
+
+class _ModuleLinter(ast.NodeVisitor):
+    """Single-module pass: collects context, then lints each function."""
+
+    def __init__(self, path: str, tree: ast.Module):
+        self.path = path
+        self.tree = tree
+        self.findings: List[Finding] = []
+        self.jnp = _jnp_aliases(tree)
+        self.cached_fns: Set[str] = set()
+        self.jitted_fns: Set[str] = set()
+        for node in ast.walk(tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                if any(_is_cache_decorator(d) for d in node.decorator_list):
+                    self.cached_fns.add(node.name)
+                if any(_is_jit_decorator(d) for d in node.decorator_list):
+                    self.jitted_fns.add(node.name)
+            # local defs compiled later via jax.jit(fn_name)
+            if isinstance(node, ast.Call) and \
+                    _dotted(node.func) in ("jax.jit", "jit") and node.args:
+                target = node.args[0]
+                if isinstance(target, ast.Name):
+                    self.jitted_fns.add(target.id)
+
+    # -- helpers -------------------------------------------------------------
+    def _is_jnp_call(self, node: ast.AST) -> bool:
+        """True when ``node`` is a call into the jax.numpy namespace."""
+        if isinstance(node, ast.Call):
+            root = _dotted(node.func).split(".")[0]
+            return root in self.jnp
+        return False
+
+    def _contains_jnp_call(self, node: ast.AST) -> bool:
+        return any(self._is_jnp_call(n) for n in ast.walk(node))
+
+    def lint(self) -> List[Finding]:
+        """Run every rule over every function in the module."""
+        for node in ast.walk(self.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                self._lint_function(node)
+        return self.findings
+
+    def _emit(self, node: ast.AST, rule: str, message: str) -> None:
+        self.findings.append(Finding(self.path, node.lineno, rule, message))
+
+    # -- per-function rules ---------------------------------------------------
+    def _lint_function(self, fn: ast.FunctionDef) -> None:
+        jitted = fn.name in self.jitted_fns
+        jnp_names: Set[str] = set()      # names bound to jnp-call results
+        cached_names: Set[str] = set()   # names bound to cached-fn results
+
+        def value_src(v: ast.AST) -> Optional[str]:
+            if self._is_jnp_call(v):
+                return "jnp"
+            if isinstance(v, ast.Call) and isinstance(v.func, ast.Name) \
+                    and v.func.id in self.cached_fns:
+                return "cached"
+            return None
+
+        for node in ast.walk(fn):
+            # track name bindings
+            if isinstance(node, ast.Assign):
+                src = value_src(node.value)
+                for t in node.targets:
+                    if isinstance(t, ast.Name):
+                        if src == "jnp":
+                            jnp_names.add(t.id)
+                        elif src == "cached":
+                            cached_names.add(t.id)
+                        else:
+                            jnp_names.discard(t.id)
+                            cached_names.discard(t.id)
+
+            # R1: traced-value branching inside a jit-compiled function
+            if jitted and isinstance(node, (ast.If, ast.While)):
+                test = node.test
+                traced = self._contains_jnp_call(test) or any(
+                    isinstance(n, ast.Name) and n.id in jnp_names
+                    for n in ast.walk(test))
+                if traced:
+                    kw = "while" if isinstance(node, ast.While) else "if"
+                    self._emit(node, "jit-traced-branch",
+                               f"Python `{kw}` on a traced value inside "
+                               f"jit-compiled `{fn.name}` — use jnp.where/"
+                               "lax.cond instead")
+
+            # R2: bare truthiness of a jnp-derived name
+            if isinstance(node, (ast.If, ast.While)):
+                t = node.test
+                bare = t.id if isinstance(t, ast.Name) else (
+                    t.operand.id if isinstance(t, ast.UnaryOp) and
+                    isinstance(t.op, ast.Not) and
+                    isinstance(t.operand, ast.Name) else None)
+                if bare is not None and bare in jnp_names:
+                    self._emit(node, "jnp-truthiness",
+                               f"bare truthiness of jnp array `{bare}` — "
+                               "ambiguous for non-scalars; reduce with "
+                               "jnp.any/jnp.all and convert explicitly")
+
+            # R3: item assignment on a jnp-derived array
+            if isinstance(node, (ast.Assign, ast.AugAssign)):
+                targets = (node.targets if isinstance(node, ast.Assign)
+                           else [node.target])
+                for t in targets:
+                    if isinstance(t, ast.Subscript) and \
+                            isinstance(t.value, ast.Name) and \
+                            t.value.id in jnp_names:
+                        self._emit(node, "jnp-item-assignment",
+                                   f"item assignment on immutable jnp "
+                                   f"array `{t.value.id}` — use "
+                                   f"`{t.value.id}.at[...].set(...)`")
+
+            # R4: mutating a cached function's returned object
+            if isinstance(node, (ast.Assign, ast.AugAssign)):
+                targets = (node.targets if isinstance(node, ast.Assign)
+                           else [node.target])
+                for t in targets:
+                    base = t
+                    while isinstance(base, (ast.Attribute, ast.Subscript)):
+                        base = base.value
+                    if isinstance(t, (ast.Attribute, ast.Subscript)) and \
+                            isinstance(base, ast.Name) and \
+                            base.id in cached_names:
+                        self._emit(node, "cached-mutation",
+                                   f"mutation of `{base.id}`, the shared "
+                                   "result of a cached call — copy (e.g. "
+                                   "dataclasses.replace) before modifying")
+            if isinstance(node, ast.Call) and \
+                    isinstance(node.func, ast.Attribute) and \
+                    node.func.attr in MUTATOR_METHODS:
+                base = node.func.value
+                while isinstance(base, (ast.Attribute, ast.Subscript)):
+                    base = base.value
+                if isinstance(base, ast.Name) and base.id in cached_names:
+                    self._emit(node, "cached-mutation",
+                               f"`.{node.func.attr}()` on `{base.id}`, the "
+                               "shared result of a cached call — copy "
+                               "before modifying")
+
+
+def lint_paths(paths: Iterable[str]) -> List[Finding]:
+    """Lint every ``.py`` file under the given paths."""
+    findings: List[Finding] = []
+    for p in paths:
+        root = Path(p)
+        files = [root] if root.is_file() else sorted(root.rglob("*.py"))
+        for f in files:
+            try:
+                tree = ast.parse(f.read_text(), filename=str(f))
+            except SyntaxError as e:
+                findings.append(Finding(str(f), e.lineno or 0,
+                                        "syntax-error", str(e.msg)))
+                continue
+            findings.extend(_ModuleLinter(str(f), tree).lint())
+    return findings
+
+
+def main(argv: List[str]) -> int:
+    paths = argv or ["src/repro"]
+    findings = lint_paths(paths)
+    for fi in findings:
+        print(fi)
+    n = len(findings)
+    print(f"repo_lint: {n} finding{'s' if n != 1 else ''} in "
+          f"{', '.join(paths)}")
+    return 1 if findings else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
