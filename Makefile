@@ -10,9 +10,11 @@ test:
 test-fast: lint
 	$(PY) -m pytest -q -m "not slow"
 
-# jit/caching safety lint (tools/repo_lint.py); also run as a tier-1 test
+# jit/caching safety lint (tools/repo_lint.py); also run as a tier-1 test,
+# plus the committed BENCH_*.json schema gate (tools/bench_check.py)
 lint:
 	python tools/repo_lint.py src/repro
+	python tools/bench_check.py
 
 examples:
 	$(PY) examples/quickstart.py

@@ -170,6 +170,7 @@ def run(out: str, n: int = 8, q: int = 96, w: int = 16,
     ``exchange_bench._time_us``.  The cold pass is kept in the artifact
     (``cold``) so one-time compile cost stays visible.
     """
+    from repro.core import obs
     cold = None
     for _ in range(max(1, passes) - 1):
         cold = _one_pass(n, q, w, rounds_a, rounds_b, seed)
@@ -181,7 +182,8 @@ def run(out: str, n: int = 8, q: int = 96, w: int = 16,
                  "n_nodes": n, "batch": q, "words": w,
                  "rounds_a": rounds_a, "rounds_b": rounds_b,
                  "passes": passes,
-                 "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S")},
+                 "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
+                 **obs.provenance_meta(warm_passes=passes - 1)},
         "rounds": warm["rounds"],
         "summary": warm["summary"],
         "adaptation": warm["adaptation"],

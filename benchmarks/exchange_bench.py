@@ -55,7 +55,7 @@ def _mixed_policy(n_nodes: int):
 
 
 def bench_cell(n: int, q: int, w: int, kind: str, iters: int,
-               capacity: float) -> Dict:
+               capacity: float, trace=None) -> Dict:
     import jax.numpy as jnp
     from repro.core import burst_buffer as bb
     from repro.core.client import BBClient
@@ -68,7 +68,7 @@ def bench_cell(n: int, q: int, w: int, kind: str, iters: int,
     # lossless with no carry round
     client = BBClient(policy, cap=max(256, 4 * q), words=w,
                       mcap=max(256, 4 * q), exchange=kind,
-                      capacity=capacity)
+                      capacity=capacity, trace=trace)
     rng = np.random.RandomState(0)
     ph = jnp.asarray(rng.randint(1, 1 << 20, (n, q)), jnp.int32)
     cid = jnp.asarray(rng.randint(0, 8, (n, q)), jnp.int32)
@@ -121,12 +121,12 @@ def encode_bench(n_rows: int = 64, row_len: int = 32,
     from repro.core.client import BBClient
     client = BBClient(policy, cap=16, words=4, mcap=16)
     t0 = time.perf_counter()
-    client.encode(paths)
+    _block(client.encode(paths))
     cold_us = (time.perf_counter() - t0) * 1e6
     warm = []
     for _ in range(repeats):
         t0 = time.perf_counter()
-        client.encode(paths)
+        _block(client.encode(paths))
         warm.append((time.perf_counter() - t0) * 1e6)
     t0 = time.perf_counter()
     for row in paths:                                   # the old hot loop
@@ -286,47 +286,52 @@ def kernel_bench(iters: int = 5) -> List[Dict]:
 
 
 def run(nodes: List[int], batches: List[int], words: List[int],
-        iters: int, capacity: float, out: str, skip_micro: bool = False
-        ) -> Dict:
+        iters: int, capacity: float, out: str, skip_micro: bool = False,
+        trace_out: str = "") -> Dict:
+    from repro.core import obs
+    rec = obs.TraceRecorder() if trace_out else None
     rows = []
-    for n in nodes:
+    with obs.activate(rec):
+        for n in nodes:
+            for q in batches:
+                for w in words:
+                    for kind in ("dense", "compacted"):
+                        row = bench_cell(n, q, w, kind, iters, capacity,
+                                         trace=rec)
+                        rows.append(row)
+                        print(f"{kind:9s} N={n:3d} q={q:4d} w={w:3d} "
+                              f"write={row['write_us']:9.1f}us "
+                              f"read={row['read_us']:9.1f}us "
+                              f"xbytes={row['write_exchange_bytes']}")
+        # summary at the largest swept node count
+        n_max = max(nodes)
+        summary = {}
         for q in batches:
             for w in words:
-                for kind in ("dense", "compacted"):
-                    row = bench_cell(n, q, w, kind, iters, capacity)
-                    rows.append(row)
-                    print(f"{kind:9s} N={n:3d} q={q:4d} w={w:3d} "
-                          f"write={row['write_us']:9.1f}us "
-                          f"read={row['read_us']:9.1f}us "
-                          f"xbytes={row['write_exchange_bytes']}")
-    # summary at the largest swept node count
-    n_max = max(nodes)
-    summary = {}
-    for q in batches:
-        for w in words:
-            d = next(r for r in rows if r["backend"] == "dense" and
-                     r["n_nodes"] == n_max and r["batch"] == q and
-                     r["words"] == w)
-            c = next(r for r in rows if r["backend"] == "compacted" and
-                     r["n_nodes"] == n_max and r["batch"] == q and
-                     r["words"] == w)
-            d_round = d["write_us"] + d["read_us"] + d["stat_us"]
-            c_round = c["write_us"] + c["read_us"] + c["stat_us"]
-            summary[f"N{n_max}_q{q}_w{w}"] = {
-                "write_speedup": round(d["write_us"] / c["write_us"], 2),
-                "read_speedup": round(d["read_us"] / c["read_us"], 2),
-                "stat_speedup": round(d["stat_us"] / c["stat_us"], 2),
-                "round_speedup": round(d_round / c_round, 2),
-                "exchange_bytes_ratio": round(
-                    d["write_exchange_bytes"] / c["write_exchange_bytes"],
-                    2),
-            }
-    # measured dense/compacted crossover + leave-one-out accuracy of the
-    # auto selector (each cell predicted from the table WITHOUT itself —
-    # a self-lookup would score 1.0 on any data)
-    from repro.core import exchange_select
-    crossover = exchange_select.crossover_table(rows)
-    acc = exchange_select.auto_accuracy(crossover)
+                d = next(r for r in rows if r["backend"] == "dense" and
+                         r["n_nodes"] == n_max and r["batch"] == q and
+                         r["words"] == w)
+                c = next(r for r in rows if r["backend"] == "compacted" and
+                         r["n_nodes"] == n_max and r["batch"] == q and
+                         r["words"] == w)
+                d_round = d["write_us"] + d["read_us"] + d["stat_us"]
+                c_round = c["write_us"] + c["read_us"] + c["stat_us"]
+                summary[f"N{n_max}_q{q}_w{w}"] = {
+                    "write_speedup": round(d["write_us"] / c["write_us"], 2),
+                    "read_speedup": round(d["read_us"] / c["read_us"], 2),
+                    "stat_speedup": round(d["stat_us"] / c["stat_us"], 2),
+                    "round_speedup": round(d_round / c_round, 2),
+                    "exchange_bytes_ratio": round(
+                        d["write_exchange_bytes"] /
+                        c["write_exchange_bytes"], 2),
+                }
+        # measured dense/compacted crossover + leave-one-out accuracy of
+        # the auto selector (each cell predicted from the table WITHOUT
+        # itself — a self-lookup would score 1.0 on any data); runs under
+        # the recorder activation so its pick_backend calls audit too
+        from repro.core import exchange_select
+        crossover = exchange_select.crossover_table(rows)
+        acc = exchange_select.auto_accuracy(crossover)
     auto_accuracy = None if acc is None else round(acc, 3)
     result = {
         "meta": {
@@ -335,6 +340,7 @@ def run(nodes: List[int], batches: List[int], words: List[int],
                         "write/read/stat, stacked backend, ragged budgets",
             "capacity": capacity, "iters": iters,
             "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
+            **obs.provenance_meta(warm_passes=iters),
         },
         "rows": rows,
         "summary": summary,
@@ -354,6 +360,10 @@ def run(nodes: List[int], batches: List[int], words: List[int],
     # constructed after this run pick from the fresh artifact
     exchange_select.refresh()
     print(f"wrote {out}")
+    if rec is not None:
+        obs.write_recording(rec, trace_out, meta=result["meta"])
+        print(f"wrote {trace_out} ({len(rec.spans)} spans, "
+              f"{sum(rec.audit.counts().values())} decisions)")
     for k, v in summary.items():
         print(f"summary {k}: {v}")
     print(f"auto_accuracy (leave-one-out): {auto_accuracy} "
@@ -396,6 +406,10 @@ def main(argv=None) -> Dict:
     ap.add_argument("--capacity", type=float, default=2.0)
     ap.add_argument("--out", default="BENCH_pr3.json")
     ap.add_argument("--skip-micro", action="store_true")
+    ap.add_argument("--trace-out", default="",
+                    help="also write a flight-recorder capture of the "
+                         "sweep (Perfetto trace events + metrics snapshot "
+                         "+ decision audit) to this JSON path")
     ap.add_argument("--markdown", action="store_true",
                     help="also print the docs/exchange.md winner table")
     args = ap.parse_args(argv)
@@ -407,7 +421,7 @@ def main(argv=None) -> Dict:
         words = [int(x) for x in args.words.split(",")]
         iters = args.iters
     result = run(nodes, batches, words, iters, args.capacity, args.out,
-                 skip_micro=args.skip_micro)
+                 skip_micro=args.skip_micro, trace_out=args.trace_out)
     if args.markdown:
         print(markdown_table(result))
     return result

@@ -207,6 +207,7 @@ def main(argv=None) -> Dict:
     import pathlib
     sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
     from benchmarks.exchange_bench import fabric_bench
+    from repro.core import obs
     result = {
         "meta": {
             "bench": "mesh_bench", "pr": 5,
@@ -214,6 +215,7 @@ def main(argv=None) -> Dict:
                         "mix; ragged (MeshRaggedSpec) vs uniform budgets",
             "iters": args.iters,
             "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
+            **obs.provenance_meta(warm_passes=1),
         },
         "rows": rows,
         "summary": summarize(rows),

@@ -28,11 +28,16 @@ def main() -> None:
                     help="comma list: fig7,fig8,...,table2,engine,roofline")
     ap.add_argument("--skip-slow", action="store_true",
                     help="skip the GBDT LOO baseline (several minutes)")
+    ap.add_argument("--trace-out", default="",
+                    help="write a flight-recorder capture (one span per "
+                         "section + any engine spans) to this JSON path")
     args = ap.parse_args()
     want = args.sections.split(",") if args.sections != "all" else None
 
     from benchmarks import figures, tables
     from benchmarks.roofline_report import roofline_rows
+    from repro.core import obs
+    rec = obs.TraceRecorder() if args.trace_out else None
 
     sections = {
         "fig7": figures.fig7_checkpoint_restart,
@@ -53,15 +58,22 @@ def main() -> None:
         sections["table2"] = tables.table2_accuracy
 
     print("name,us_per_call,derived")
-    for name, fn in sections.items():
-        if want and name not in want:
-            continue
-        try:
-            for row in fn():
-                print(f"{row[0]},{row[1]:.1f},{row[2]}")
-        except Exception as e:  # keep the harness robust
-            print(f"{name}.ERROR,0.0,{type(e).__name__}:{e}",
-                  file=sys.stdout)
+    with obs.activate(rec):
+        for name, fn in sections.items():
+            if want and name not in want:
+                continue
+            try:
+                with obs.span(f"bench.{name}", cat="bench"):
+                    for row in fn():
+                        print(f"{row[0]},{row[1]:.1f},{row[2]}")
+            except Exception as e:  # keep the harness robust
+                print(f"{name}.ERROR,0.0,{type(e).__name__}:{e}",
+                      file=sys.stdout)
+    if rec is not None:
+        obs.write_recording(rec, args.trace_out,
+                            meta=obs.provenance_meta())
+        print(f"# wrote {args.trace_out} ({len(rec.spans)} spans)",
+              file=sys.stderr)
 
 
 if __name__ == "__main__":

@@ -27,6 +27,7 @@ from typing import Dict, List, Optional
 
 import numpy as np
 
+from repro.core import obs
 from repro.core.adapt.drift import DriftConfig, DriftDetector, DriftReport
 from repro.core.adapt.migrate import DEFAULT_STEP_CHUNKS, LiveMigrator
 from repro.core.adapt.redecide import (PolicyDelta, gate_delta,
@@ -90,6 +91,11 @@ class AdaptationController:
     def _take_snapshot(self) -> None:
         self._snap = self.client.telemetry.snapshot()
         self._snap_names = self.client.telemetry.scope_names
+        if self.client.obs is not None:
+            # the snapshot was already paid for — fold it into the
+            # per-scope gauges (subsumes the telemetry host plane)
+            self.client.obs.metrics.fold_telemetry(self.client.telemetry,
+                                                   snapshot=self._snap)
 
     def _tick_delta(self):
         """Per-scope signatures since the last tick, swap-safe.
@@ -108,7 +114,24 @@ class AdaptationController:
 
     # ---- the control loop ---------------------------------------------------
     def tick(self) -> TickReport:
-        """One adaptation step; see the module docstring for the phases."""
+        """One adaptation step; see the module docstring for the phases.
+
+        Runs under the client's flight-recorder activation (when one is
+        installed): the tick gets an ``adapt.tick`` span, drift outcomes
+        land on the metrics registry, and the redecide/gate audit records
+        go to the client's recorder.
+        """
+        rec = self.client.obs
+        if rec is None:
+            return self._tick_impl()
+        with obs.activate(rec), obs.span("adapt.tick", cat="adapt",
+                                         tick=self.tick_count + 1):
+            report = self._tick_impl()
+        rec.metrics.inc("adapt_ticks_total", phase=report.phase)
+        return report
+
+    def _tick_impl(self) -> TickReport:
+        """``tick`` body (recorder activation handled by the caller)."""
         self.tick_count += 1
         if self.migrator is not None:
             return self._drive_migration()

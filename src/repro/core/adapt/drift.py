@@ -26,6 +26,7 @@ from typing import Dict, Optional, Tuple
 
 import numpy as np
 
+from repro.core import obs
 from repro.core.adapt.telemetry import SIG_NAMES
 
 
@@ -82,6 +83,27 @@ class DriftDetector:
         w = self._weights()
         return float((w * np.abs(np.asarray(sig) - base)).sum() / w.sum())
 
+    @staticmethod
+    def _metric(scope: str, outcome: str, div: float,
+                st: "_ScopeState") -> None:
+        """Publish one tick's hysteresis state to the active recorder.
+
+        Counters (``drift_ticks_total{scope,outcome}``,
+        ``drift_fired_total{scope}``) and gauges (``drift_armed``,
+        ``drift_cooling``, ``drift_divergence``) expose exactly the
+        hysteresis evolution the private ``_ScopeState`` holds, so tests
+        and dashboards never need to peek at EWMA internals.
+        """
+        m = obs.current_metrics()
+        if m is None:
+            return
+        m.inc("drift_ticks_total", scope=scope, outcome=outcome)
+        if outcome == "fired":
+            m.inc("drift_fired_total", scope=scope)
+        m.set_gauge("drift_armed", float(st.armed), scope=scope)
+        m.set_gauge("drift_cooling", float(st.cooling), scope=scope)
+        m.set_gauge("drift_divergence", float(div), scope=scope)
+
     def observe(self, scope: str, sig: np.ndarray,
                 weight: float) -> DriftReport:
         """Fold one tick's live signature in; return the scope verdict.
@@ -90,16 +112,20 @@ class DriftDetector:
         baseline (self-calibration on the first observed tick) and cannot
         fire.  Low-volume ticks (< ``min_weight`` ops) neither advance nor
         reset the armed counter — silence is not evidence of stability.
+        Each tick's outcome lands on the active recorder's metrics (see
+        :meth:`_metric`).
         """
         st = self._state.setdefault(scope, _ScopeState())
         if weight < self.cfg.min_weight:
             if st.cooling:
                 st.cooling -= 1
+            self._metric(scope, "low_weight", 0.0, st)
             return DriftReport(scope, 0.0, st.armed, False, st.cooling)
         sig = np.asarray(sig, np.float64)
         if self.baseline.get(scope) is None:
             self.baseline[scope] = sig.copy()
             st.ewma = sig.copy()
+            self._metric(scope, "baseline_init", 0.0, st)
             return DriftReport(scope, 0.0, 0, False, st.cooling,
                                st.ewma, self.baseline[scope])
         a = self.cfg.alpha
@@ -109,10 +135,14 @@ class DriftDetector:
         if st.cooling:
             st.cooling -= 1
             st.armed = 0
+            self._metric(scope, "cooling", div, st)
             return DriftReport(scope, div, 0, False, st.cooling, st.ewma,
                                self.baseline[scope])
         st.armed = st.armed + 1 if div > self.cfg.threshold else 0
         fired = st.armed >= self.cfg.patience
+        self._metric(scope,
+                     "fired" if fired else
+                     "armed" if st.armed else "quiet", div, st)
         return DriftReport(scope, div, st.armed, fired, 0, st.ewma,
                            self.baseline[scope])
 
@@ -129,3 +159,8 @@ class DriftDetector:
             self.baseline[scope] = st.ewma.copy()
         st.armed = 0
         st.cooling = self.cfg.cooldown
+        m = obs.current_metrics()
+        if m is not None:
+            m.inc("drift_rebase_total", scope=scope)
+            m.set_gauge("drift_armed", 0.0, scope=scope)
+            m.set_gauge("drift_cooling", float(st.cooling), scope=scope)

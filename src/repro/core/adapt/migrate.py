@@ -34,6 +34,7 @@ from typing import List, Optional, Tuple
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import obs
 from repro.core.layouts import LayoutMode, str_hash
 from repro.core.policy import LayoutPolicy, _norm_scope
 
@@ -185,11 +186,20 @@ class LiveMigrator:
             valid[row, j] = True
             cursor[row] += 1
             taken += 1
-        self.client.migrate_rows(
-            jnp.asarray(ph), jnp.asarray(cid), jnp.asarray(valid),
-            old_mode=int(self.old_mode), new_mode=int(self.new_mode))
+        with obs.activate(self.client.obs), \
+                obs.span("migrate.installment", cat="adapt",
+                         scope=self.scope, installment=self.installments,
+                         watermark=self.watermark, chunks=taken):
+            self.client.migrate_rows(
+                jnp.asarray(ph), jnp.asarray(cid), jnp.asarray(valid),
+                old_mode=int(self.old_mode), new_mode=int(self.new_mode))
         self.watermark += taken
         self.installments += 1
+        if self.client.obs is not None:
+            m = self.client.obs.metrics
+            m.inc("migrate_installments_total", scope=self.scope)
+            m.set_gauge("migrate_watermark", float(self.watermark),
+                        scope=self.scope)
         return taken
 
     def run(self) -> int:

@@ -24,6 +24,7 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
+from repro.core import obs
 from repro.core.layouts import LayoutMode
 from repro.core.simulator import DEFAULT_HW, Hardware, Phase, simulate_phase
 
@@ -101,7 +102,9 @@ def propose_deltas(policy, live: Dict[str, Tuple[np.ndarray, float]],
     """Candidate mode changes for the drifted scopes, best-mode first.
 
     ``live`` maps scope name → (signature, op-volume weight); scopes whose
-    measured-best mode equals their current mode produce no delta.
+    measured-best mode equals their current mode produce no delta.  Every
+    scope costing emits a ``redecide`` audit record carrying the full
+    per-mode time table — the alternatives the winner beat.
     """
     out = []
     for scope, (sig, _w) in live.items():
@@ -111,6 +114,14 @@ def propose_deltas(policy, live: Dict[str, Tuple[np.ndarray, float]],
         times = mode_times(phases, policy.n_nodes, hw, seed)
         best = min(times, key=times.get)
         cur = policy.mode_for_path(scope)
+        obs.record_decision(
+            "redecide", best.name,
+            inputs={"scope": scope, "current": cur.name,
+                    "chosen_s": times[best], "n_phases": len(phases),
+                    "signature": [float(x) for x in np.asarray(sig)]},
+            alternatives={m.name: t for m, t in times.items() if m != best},
+            evidence={"grade": "runtime",
+                      "source": "telemetry-signature+simulator"})
         if best != cur:
             out.append(PolicyDelta(scope, cur, best, times[cur],
                                    times[best]))
@@ -197,10 +208,20 @@ def gate_delta(delta: PolicyDelta, n_chunks: int, words: int,
     cost = migration_cost_s(n_chunks, words, n_nodes, hw,
                             step_chunks=step_chunks)
     win = delta.gain_s * horizon_rounds
-    return win > cost, {"migration_cost_s": cost, "horizon_win_s": win,
-                        "gain_per_round_s": delta.gain_s,
-                        "n_chunks": float(n_chunks),
-                        "fabric_measured": float(measured)}
+    adopt = win > cost
+    audit = {"migration_cost_s": cost, "horizon_win_s": win,
+             "gain_per_round_s": delta.gain_s,
+             "n_chunks": float(n_chunks),
+             "fabric_measured": float(measured)}
+    obs.record_decision(
+        "gate_delta", "adopt" if adopt else "reject",
+        inputs={"scope": delta.scope, "old_mode": delta.old_mode.name,
+                "new_mode": delta.new_mode.name,
+                "horizon_rounds": float(horizon_rounds), **audit},
+        alternatives=({"reject": win} if adopt else {"adopt": cost}),
+        evidence={"grade": "measured" if measured else "analytic",
+                  "source": "fabric_model"})
+    return adopt, audit
 
 
 def signature_workload(scope: str, sig: np.ndarray, n_nodes: int):

@@ -57,6 +57,7 @@ from typing import Callable, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core import obs
 from repro.core.layouts import LayoutMode, route_data, route_meta
 from repro.core.policy import LayoutPolicy, as_policy
 from repro.kernels.chunk_pack.ops import gather_rows_batched
@@ -293,6 +294,7 @@ def _ones_col(ref: jax.Array) -> jax.Array:
     return jnp.ones(ref.shape[:-1] + (1,), jnp.int32)
 
 
+@obs.trace_span("engine.forward_write")
 def forward_write(state: BBState, layout, path_hash: jax.Array,
                   chunk_id: jax.Array, payload: jax.Array, valid: jax.Array,
                   mode: Optional[jax.Array] = None,
@@ -373,6 +375,7 @@ def forward_write(state: BBState, layout, path_hash: jax.Array,
     return state
 
 
+@obs.trace_span("engine.forward_read")
 def forward_read(state: BBState, layout, path_hash: jax.Array,
                  chunk_id: jax.Array, valid: jax.Array,
                  mode: Optional[jax.Array] = None,
@@ -483,6 +486,7 @@ def _broadcast_lookup(state, keys, valid, exchange, N):
     return jnp.where(found_any[..., None], payload, 0), found_any & valid
 
 
+@obs.trace_span("engine.meta_op")
 def meta_op(state: BBState, layout, op: jax.Array,
             path_hash: jax.Array, size: jax.Array, loc: jax.Array,
             valid: jax.Array, mode: Optional[jax.Array] = None,
@@ -601,6 +605,7 @@ def _tombstone_broadcast(state: BBState, keys: jax.Array, valid: jax.Array,
     return _clear_chunks(state, kb.reshape(L, -1, 2), ok)
 
 
+@obs.trace_span("engine.migrate_rows")
 def migrate_rows(state: BBState, layout, path_hash: jax.Array,
                  chunk_id: jax.Array, valid: jax.Array,
                  old_mode: jax.Array, new_mode: jax.Array,

@@ -67,6 +67,7 @@ import numpy as np
 
 from repro.core import burst_buffer as bb
 from repro.core import exchange_select
+from repro.core import obs
 from repro.core.layouts import LayoutMode, route_data, route_meta, str_hash
 from repro.core.policy import SCOPE_NONE, LayoutPolicy, as_policy
 
@@ -206,7 +207,8 @@ class BBClient:
                  exchange: str = "auto", budget: Optional[int] = None,
                  meta_budget: Optional[int] = None, capacity: float = 2.0,
                  lossless: bool = True, ragged: bool = True,
-                 two_phase: bool = True, telemetry: bool = False):
+                 two_phase: bool = True, telemetry: bool = False,
+                 trace: Optional[obs.TraceRecorder] = None):
         """Build a client holding fresh (or adopted) node tables.
 
         Args:
@@ -245,6 +247,12 @@ class BBClient:
             them fleet-wide (drift fires from any host).  Adds a small
             host loop per call; off by default for hot-path clients that
             don't adapt.
+          trace: an ``obs.TraceRecorder`` flight recorder.  Every engine
+            call then records a fenced ``client.*`` span, byte/carry/drop
+            accounting lands in ``trace.metrics``, and selector picks are
+            audited into ``trace.audit`` (see docs/observability.md).
+            ``None`` (default) compiles every instrumentation point down
+            to one branch.
         """
         self.policy = as_policy(policy)
         self.backend = backend
@@ -263,6 +271,11 @@ class BBClient:
         self._path_codes = functools.lru_cache(maxsize=1 << 16)(
             self._path_codes_uncached)
         self._pick_cache: Dict[int, str] = {}
+        self.obs = trace
+        # modeled-footprint memo per (q, config) — accounting must not
+        # re-derive budgets on every traced call
+        self._foot_cache: Dict[Tuple[int, bb.ExchangeConfig],
+                               Dict[str, int]] = {}
         self._is_mesh = not isinstance(backend, str)
         if not self._is_mesh and backend != "stacked":
             raise ValueError(f"unknown backend {backend!r}; pass "
@@ -444,6 +457,7 @@ class BBClient:
         self._mesh_probe.clear()
         self._spec_floor.clear()        # routing changed; floors are stale
         self._align_state.clear()
+        self._foot_cache.clear()        # budgets key on the policy
         self.fallback = (None if migrating is None else
                          EpochFallback(str_hash(migrating), int(old_mode)))
         if self.telemetry is not None:
@@ -453,6 +467,16 @@ class BBClient:
             self.epoch, policy, migrating,
             None if old_mode is None else LayoutMode(old_mode),
             None if new_mode is None else LayoutMode(new_mode)))
+        if self.obs is not None:
+            self.obs.metrics.set_gauge("policy_epoch", float(self.epoch))
+            self.obs.audit.record(
+                "policy_epoch", f"epoch-{self.epoch}",
+                inputs={"migrating": migrating,
+                        "old_mode": None if old_mode is None
+                        else int(old_mode),
+                        "new_mode": None if new_mode is None
+                        else int(new_mode)},
+                evidence={"grade": "runtime", "source": "install_policy"})
         return self
 
     def _migrate_config(self) -> bb.ExchangeConfig:
@@ -496,10 +520,22 @@ class BBClient:
                 self._cache_put(self._mesh_migrate, cfg, op)
         else:
             op = _stacked_migrate_for(self.policy.engine_key(), cfg)
-        self.state, moved, found_old = op(
-            self.state, jnp.asarray(path_hash),
-            jnp.asarray(chunk_id, jnp.int32), jnp.asarray(valid, bool),
-            old, new)
+        if self.obs is None:
+            self.state, moved, found_old = op(
+                self.state, jnp.asarray(path_hash),
+                jnp.asarray(chunk_id, jnp.int32), jnp.asarray(valid, bool),
+                old, new)
+            return moved, found_old
+        with obs.activate(self.obs), \
+                obs.span("client.migrate", cat="client",
+                         old_mode=int(old_mode), new_mode=int(new_mode)) as h:
+            self.state, moved, found_old = h.fence(op(
+                self.state, jnp.asarray(path_hash),
+                jnp.asarray(chunk_id, jnp.int32), jnp.asarray(valid, bool),
+                old, new))
+        m = self.obs.metrics
+        m.inc("migrate_calls_total", epoch=self.epoch)
+        m.inc("migrate_moved_total", float(np.asarray(moved).sum()))
         return moved, found_old
 
     # ---- per-call exchange dispatch -----------------------------------------
@@ -511,6 +547,8 @@ class BBClient:
         if kind is None:
             kind = exchange_select.pick_backend(self.n_nodes, q, self.words)
             self._pick_cache[q] = kind
+        elif self.obs is not None:
+            self.obs.metrics.inc("exchange_pick_cache_hits_total", kind=kind)
         return kind
 
     def _client_ranks(self) -> jax.Array:
@@ -541,8 +579,15 @@ class BBClient:
             spec = bb.plan_ragged_spec(dest, valid, self.n_nodes,
                                        align=align, floor=floor)
         budgets = np.asarray(spec.budgets, np.int64)
-        self._spec_floor[key] = (budgets if floor is None
-                                 else np.maximum(floor, budgets))
+        if floor is None:
+            grew, new_floor = True, budgets
+        else:
+            grew = bool((budgets > floor).any())
+            new_floor = np.maximum(floor, budgets) if grew else floor
+        if grew and self.obs is not None:
+            # a grown floor means a new spec → a fresh jit specialization
+            self.obs.metrics.inc("ragged_respecializations_total", role=role)
+        self._spec_floor[key] = new_floor
         return spec
 
     #: plans between telemetry re-reads of the align hint (each re-read
@@ -629,8 +674,17 @@ class BBClient:
 
     def _write(self, state, mode, ph, cid, payload, valid):
         """Engine write entry (state explicit — the benchmarks drive it)."""
-        cfg = self._call_config("write", mode, ph, cid, valid)
-        return self._ops(cfg)[0](state, mode, ph, cid, payload, valid)
+        if self.obs is None:
+            cfg = self._call_config("write", mode, ph, cid, valid)
+            return self._ops(cfg)[0](state, mode, ph, cid, payload, valid)
+        with obs.activate(self.obs), \
+                obs.span("client.write", cat="client",
+                         q=int(ph.shape[1])) as h:
+            cfg = self._call_config("write", mode, ph, cid, valid)
+            out = h.fence(
+                self._ops(cfg)[0](state, mode, ph, cid, payload, valid))
+        self._account("write", cfg, ph.shape[1], out, mode, ph, cid, valid)
+        return out
 
     def _read(self, state, mode, ph, cid, valid):
         """Engine read entry (state explicit — the benchmarks drive it).
@@ -641,14 +695,25 @@ class BBClient:
         internal meta phase skipped — identical answers (the probe IS the
         same ``meta_op`` STAT), measured instead of worst-case budgets.
         """
+        if self.obs is None:
+            return self._read_impl(state, mode, ph, cid, valid)
+        with obs.activate(self.obs):
+            return self._read_impl(state, mode, ph, cid, valid)
+
+    def _read_impl(self, state, mode, ph, cid, valid):
+        """``_read`` body, run under the recorder activation (if any)."""
         q = ph.shape[1]
         if (self.two_phase and q > 0 and
                 LayoutMode.HYBRID in self.policy.modes_present() and
                 self.exchange_config.budget is None and
                 self._select_kind(q) == "compacted"):
             return self._read_two_phase(state, mode, ph, cid, valid)
-        cfg = self._call_config("read", mode, ph, cid, valid)
-        return self._ops(cfg)[1](state, mode, ph, cid, valid)
+        with obs.span("client.read", cat="client", q=int(q)) as h:
+            cfg = self._call_config("read", mode, ph, cid, valid)
+            out = h.fence(self._ops(cfg)[1](state, mode, ph, cid, valid))
+        if self.obs is not None:
+            self._account("read", cfg, q, None, mode, ph, cid, valid)
+        return out
 
     def _read_two_phase(self, state, mode, ph, cid, valid):
         """Metadata probe → ragged data round (see ``_read``)."""
@@ -661,12 +726,23 @@ class BBClient:
             # every data destination resolves without table state
             data_loc = ranks
         else:
-            cfg_m = self._call_config("meta", mode, ph, None, probe_valid)
-            fm, loc = self._probe_op(cfg_m)(state, mode, ph, probe_valid)
+            with obs.span("client.read.probe", cat="client") as h:
+                cfg_m = self._call_config("meta", mode, ph, None,
+                                          probe_valid)
+                fm, loc = h.fence(
+                    self._probe_op(cfg_m)(state, mode, ph, probe_valid))
+            if self.obs is not None:
+                self._account("meta", cfg_m, shape[1], None, mode, ph,
+                              None, probe_valid)
             data_loc = jnp.where(fm & (loc >= 0), loc, ranks)
-        cfg = self._call_config("read", mode, ph, cid, valid,
-                                data_loc=data_loc)
-        return self._ops(cfg)[3](state, mode, ph, cid, valid, data_loc)
+        with obs.span("client.read.data", cat="client") as h:
+            cfg = self._call_config("read", mode, ph, cid, valid,
+                                    data_loc=data_loc)
+            out = h.fence(
+                self._ops(cfg)[3](state, mode, ph, cid, valid, data_loc))
+        if self.obs is not None:
+            self._account("read", cfg, shape[1], None, mode, ph, cid, valid)
+        return out
 
     def _probe_op(self, config: bb.ExchangeConfig):
         """The (found, loc)-only STAT op for one config (both backends)."""
@@ -686,8 +762,95 @@ class BBClient:
 
     def _meta(self, state, mode, op, ph, size, loc, valid):
         """Engine metadata entry (state explicit)."""
-        cfg = self._call_config("meta", mode, ph, None, valid)
-        return self._ops(cfg)[2](state, mode, op, ph, size, loc, valid)
+        if self.obs is None:
+            cfg = self._call_config("meta", mode, ph, None, valid)
+            return self._ops(cfg)[2](state, mode, op, ph, size, loc, valid)
+        with obs.activate(self.obs), \
+                obs.span("client.meta", cat="client",
+                         q=int(ph.shape[1])) as h:
+            cfg = self._call_config("meta", mode, ph, None, valid)
+            out = h.fence(
+                self._ops(cfg)[2](state, mode, op, ph, size, loc, valid))
+        self._account("meta", cfg, ph.shape[1], out[0], mode, ph, None,
+                      valid)
+        return out
+
+    # ---- traced-call accounting (tracing on only) ---------------------------
+    _FOOT_ELEMS = {"write": "write_elems", "read": "read_elems",
+                   "meta": "meta_elems"}
+
+    def _footprint(self, q: int, cfg: bb.ExchangeConfig) -> Dict[str, int]:
+        """Memoized ``exchange_footprint`` of one (q, config) pair."""
+        key = (q, cfg)
+        foot = self._foot_cache.get(key)
+        if foot is None:
+            foot = bb.exchange_footprint(self.policy, q, self.words, cfg)
+            self._cache_put(self._foot_cache, key, foot, cap=256)
+        return foot
+
+    def _account(self, op: str, cfg: bb.ExchangeConfig, q: int, state_out,
+                 mode, ph, cid, valid) -> None:
+        """Metrics for one engine call: op mix, modeled exchange bytes,
+        executor-reported drop accounting and the carry-round rate.
+
+        ``exchange_bytes_total{op}`` increments by exactly the modeled
+        footprint of the config the call ran under (4 bytes per int32
+        element — the same arithmetic the benchmarks report), and
+        ``exchange_dropped_rows`` mirrors the engine's own cumulative
+        ``state.dropped`` counter, so snapshot totals reconcile against
+        executor-reported accounting by construction.  For uniform
+        lossless under-budget plans the host mirrors the executor's
+        per-(row, destination) overflow count to expose the carry-round
+        rate jit's cond-gating hides.
+        """
+        m = self.obs.metrics
+        foot = self._footprint(q, cfg)
+        m.inc("client_ops_total", op=op, kind=foot["kind"],
+              epoch=self.epoch)
+        m.inc("exchange_bytes_total", 4 * foot[self._FOOT_ELEMS[op]], op=op)
+        if state_out is not None:
+            m.set_gauge("exchange_dropped_rows",
+                        float(np.asarray(state_out.dropped).sum()))
+        if foot["kind"] != "compacted" or not cfg.lossless:
+            return
+        # the carry mirror only applies to uniform under-budget plans —
+        # with ragged per-call specs (the default) neither branch fires,
+        # so the host routing replay is built strictly on demand
+        if op in ("write", "read") and cfg.data_spec is None and \
+                foot["data_budget"] < q:
+            ranks = np.arange(self.n_nodes, dtype=np.int64)[:, None]
+            dest = route_data(np.asarray(mode), self.n_nodes,
+                              np.asarray(ph), np.asarray(cid), ranks,
+                              xp=np)
+            self._carry_metrics(dest, valid, foot["data_budget"], "data")
+        elif op == "meta" and cfg.meta_spec is None and \
+                foot["meta_budget"] < q:
+            ranks = np.arange(self.n_nodes, dtype=np.int64)[:, None]
+            owner = route_meta(np.asarray(mode), self.n_nodes,
+                               self.policy.n_md_servers, np.asarray(ph),
+                               ranks, xp=np)
+            self._carry_metrics(owner, valid, foot["meta_budget"], "meta")
+
+    def _carry_metrics(self, dest: np.ndarray, valid, budget: int,
+                       plane: str) -> None:
+        """Host mirror of the executor's budget-overflow accounting.
+
+        Counts, per source row, the requests beyond the per-destination
+        budget — the same quantity ``ExchangePlan.overflow`` sums and
+        ``_carry_taken`` gates the carry round on — and feeds the
+        carry-rate counters and the overflow-pressure histogram.
+        """
+        v = np.asarray(valid).astype(bool)
+        over = 0
+        for row in range(dest.shape[0]):
+            c = np.bincount(np.asarray(dest[row])[v[row]],
+                            minlength=self.n_nodes)
+            over += int(np.clip(c - budget, 0, None).sum())
+        m = self.obs.metrics
+        m.inc("carry_eligible_total", plane=plane)
+        m.observe("carry_overflow_rows", over, plane=plane)
+        if over > 0:
+            m.inc("carry_rounds_total", plane=plane)
 
     # ---- data plane ---------------------------------------------------------
     def write(self, req: BBRequest) -> "BBClient":

@@ -60,6 +60,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import obs
 from repro.core.layouts import LayoutMode
 from repro.core.policy import LayoutPolicy, as_policy
 from repro.kernels.chunk_pack.ops import gather_rows_batched
@@ -1002,6 +1003,19 @@ def build_executor(role: str, policy, q: int,
                            drop=not config.lossless)
 
 
+def _spanned_collective(fn: Callable, name: str) -> Callable:
+    """Wrap a collective hook so each trace-time call records a span.
+
+    Only installed when a recorder is active: the wrapper exists for the
+    duration of one ``run_exchange`` trace, so span identity never leaks
+    into jit cache keys (the collective itself is unchanged).
+    """
+    def wrapped(*args, **kwargs):
+        with obs.span(name, cat="trace"):
+            return fn(*args, **kwargs)
+    return wrapped
+
+
 def run_exchange(role: str, policy, config: ExchangeConfig,
                  dest: jax.Array, valid: jax.Array, fields: jax.Array,
                  apply_fn: Callable, *, exchange: Callable,
@@ -1033,15 +1047,32 @@ def run_exchange(role: str, policy, config: ExchangeConfig,
     reduce over ALL nodes so the carry cond branches identically
     everywhere; ``client`` carries the local rows' global ranks for the
     shift-round executor.
+
+    When a flight recorder is active (``obs.activate``), each pipeline
+    stage records a ``cat="trace"`` span — ``exchange.plan`` →
+    ``exchange.pack`` (wrapping the ``exchange.all_to_all`` /
+    ``exchange.ppermute`` collective spans) → ``exchange.apply`` →
+    ``exchange.collect`` → ``exchange.carry``.  This code runs while jax
+    is *tracing*, so the spans fire once per specialization and measure
+    plan/lowering cost, giving the recording its nested structure.
     """
-    ex = build_executor(role, policy, dest.shape[1], config)
-    plan = ex.plan(dest, valid, client=client)
-    recv, rvalid = ex.send(plan, fields, exchange, shift)
-    new_state, reply = apply_fn(state, recv, rvalid)
+    if obs.current_recorder() is not None:
+        exchange = _spanned_collective(exchange, "exchange.all_to_all")
+        shift = _spanned_collective(shift, "exchange.ppermute")
+    with obs.span("exchange.plan", cat="trace", role=role,
+                  kind=config.kind):
+        ex = build_executor(role, policy, dest.shape[1], config)
+        plan = ex.plan(dest, valid, client=client)
+    with obs.span("exchange.pack", cat="trace", role=role,
+                  executor=type(ex).__name__):
+        recv, rvalid = ex.send(plan, fields, exchange, shift)
+    with obs.span("exchange.apply", cat="trace", role=role):
+        new_state, reply = apply_fn(state, recv, rvalid)
     mutates = new_state is not None
     st = new_state if mutates else state
-    out = (None if reply is None
-           else ex.collect(plan, reply, exchange, shift, reply_fill))
+    with obs.span("exchange.collect", cat="trace", role=role):
+        out = (None if reply is None
+               else ex.collect(plan, reply, exchange, shift, reply_fill))
     served = ex.served(plan)
     if ex.carry_budget:
         resid = valid & ~served
@@ -1064,8 +1095,11 @@ def run_exchange(role: str, policy, config: ExchangeConfig,
                 res += (jnp.full_like(out, reply_fill),)
             return res
 
-        got = jax.lax.cond(_carry_taken(plan.overflow, global_sum),
-                           _carry, _skip, st if mutates else jnp.int32(0))
+        with obs.span("exchange.carry", cat="trace", role=role,
+                      carry_budget=int(ex.carry_budget)):
+            got = jax.lax.cond(_carry_taken(plan.overflow, global_sum),
+                               _carry, _skip,
+                               st if mutates else jnp.int32(0))
         i = 0
         if mutates:
             st = got[i]

@@ -24,6 +24,8 @@ from functools import lru_cache
 from pathlib import Path
 from typing import Dict, Optional, Sequence, Tuple
 
+from repro.core.obs import record_decision
+
 #: benchmark artifacts searched for crossover rows, newest first
 BENCH_FILES = ("BENCH_pr3.json", "BENCH_pr2.json")
 
@@ -110,14 +112,18 @@ def load_crossover(root: Optional[str] = None
     Searches ``root`` (or the repo root / cwd) for ``BENCH_FILES`` in
     order and reduces the first parseable one via ``crossover_table``;
     returns ``FALLBACK_TABLE`` when nothing usable is on disk.  Cached —
-    the table is read once per process, not per client call.
+    the table is read once per process, not per client call.  Falling
+    back is never silent: a ``crossover_fallback`` audit record (reason
+    ``missing`` or ``malformed``) is emitted once per cache fill.
     """
     roots = (Path(root),) if root is not None else _bench_roots()
+    seen = []
     for r in roots:
         for name in BENCH_FILES:
             p = r / name
             if not p.is_file():
                 continue
+            seen.append(name)
             try:
                 data = json.loads(p.read_text())
                 rows = data.get("rows", []) if isinstance(data, dict) else []
@@ -125,7 +131,17 @@ def load_crossover(root: Optional[str] = None
                 continue
             table = crossover_table(rows)
             if table:
+                record_decision(
+                    "crossover_load", name,
+                    inputs={"cells": len(table), "root": str(r)},
+                    evidence={"grade": "measured", "source": name})
                 return table
+    record_decision(
+        "crossover_fallback", "fallback_table",
+        inputs={"reason": "malformed" if seen else "missing",
+                "searched": list(BENCH_FILES), "artifacts_seen": seen,
+                "roots": [str(r) for r in roots]},
+        evidence={"grade": "fallback", "source": "FALLBACK_TABLE"})
     return FALLBACK_TABLE
 
 
@@ -187,13 +203,17 @@ def fabric_model(root: Optional[str] = None) -> Tuple[float, float, bool]:
     ``FALLBACK_FABRIC`` with ``measured? = False``.  This is what makes
     the padded-vs-ppermute executor pick and the migration-cost gate key
     on the fabric the deployment actually has, not on CPU transposes.
+    Degrading to the analytic model emits a ``fabric_fallback`` audit
+    record (reason ``missing`` or ``malformed``) once per cache fill.
     """
     roots = (Path(root),) if root is not None else _bench_roots()
+    seen = []
     for r in roots:
         for name in FABRIC_FILES:
             p = r / name
             if not p.is_file():
                 continue
+            seen.append(name)
             try:
                 data = json.loads(p.read_text())
             except (OSError, ValueError):
@@ -202,7 +222,19 @@ def fabric_model(root: Optional[str] = None) -> Tuple[float, float, bool]:
             rows = fab.get("rows") if isinstance(fab, dict) else None
             fit = _fit_fabric(rows) if isinstance(rows, list) else None
             if fit is not None:
+                record_decision(
+                    "fabric_load", name,
+                    inputs={"a_us": fit[0], "bytes_per_us": fit[1],
+                            "root": str(r)},
+                    evidence={"grade": "measured", "source": name})
                 return fit[0], fit[1], True
+    record_decision(
+        "fabric_fallback", "analytic",
+        inputs={"reason": "malformed" if seen else "missing",
+                "searched": list(FABRIC_FILES), "artifacts_seen": seen,
+                "a_us": FALLBACK_FABRIC[0],
+                "bytes_per_us": FALLBACK_FABRIC[1]},
+        evidence={"grade": "fallback", "source": "FALLBACK_FABRIC"})
     return FALLBACK_FABRIC[0], FALLBACK_FABRIC[1], False
 
 
@@ -226,11 +258,27 @@ def pick_mesh_executor(n_nodes: int, padded_bytes: int,
     exactly when its Σ-bytes saving beats the extra per-collective
     overhead, which is the skewed-histogram regime (a few hot
     (source, destination) pairs) the padding approach degenerates on.
+
+    Every pick emits a ``mesh_executor`` audit record carrying both
+    modeled costs and the fabric-model evidence grade.
     """
     model = model if model is not None else fabric_model()
     padded_us = collective_us(padded_bytes, model)
     permute_us = sum(collective_us(b, model) for b in round_bytes)
-    return "ppermute" if permute_us < padded_us else "padded"
+    choice = "ppermute" if permute_us < padded_us else "padded"
+    costs = {"padded": padded_us, "ppermute": permute_us}
+    measured = bool(model[2]) if len(model) > 2 else None
+    record_decision(
+        "mesh_executor", choice,
+        inputs={"n_nodes": int(n_nodes), "padded_bytes": int(padded_bytes),
+                "n_rounds": len(round_bytes),
+                "round_bytes_total": int(sum(round_bytes)),
+                "chosen_us": costs[choice]},
+        alternatives={k: v for k, v in costs.items() if k != choice},
+        evidence={"grade": "measured" if measured else "analytic",
+                  "source": ("fabric_model" if measured is not None
+                             else "explicit-model")})
+    return choice
 
 
 def auto_accuracy(table) -> Optional[float]:
@@ -257,13 +305,29 @@ def pick_backend(n_nodes: int, q: int, words: int,
     act multiplicatively on exchange volume) → that cell's winner.  On the
     measured grid itself this reproduces the measured winner exactly,
     which is what the auto-accuracy regression pins.
+
+    Every pick emits an ``exchange_backend`` audit record whose
+    alternatives carry the nearest-cell log-space distance of each
+    losing backend (the margin by which it lost the lookup).
     """
     table = table if table is not None else load_crossover()
     best, best_d = "compacted", None
+    near: Dict[str, float] = {}
     for ni, qi, wi, winner in table:
         d = (math.log(max(n_nodes, 1) / ni) ** 2 +
              math.log(max(q, 1) / qi) ** 2 +
              math.log(max(words, 1) / wi) ** 2)
+        if winner not in near or d < near[winner]:
+            near[winner] = d
         if best_d is None or d < best_d:
             best, best_d = winner, d
+    record_decision(
+        "exchange_backend", best,
+        inputs={"n_nodes": int(n_nodes), "q": int(q), "words": int(words),
+                "table_cells": len(table),
+                "distance": best_d if best_d is not None else -1.0},
+        alternatives={k: v for k, v in near.items() if k != best},
+        evidence={"grade": ("fallback" if table is FALLBACK_TABLE
+                            else "measured"),
+                  "source": "crossover_table"})
     return best

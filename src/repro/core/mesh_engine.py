@@ -29,6 +29,7 @@ from jax.sharding import Mesh, PartitionSpec as PS
 from jax.experimental.shard_map import shard_map
 
 from repro.core import burst_buffer as bb
+from repro.core import obs
 from repro.core.exchange_plan import MeshRaggedSpec, RaggedSpec
 from repro.core.policy import LayoutPolicy, as_policy
 
@@ -103,6 +104,7 @@ def _check_specs(config: bb.ExchangeConfig, local_n: int) -> None:
                 "all_to_all) when nodes aren't 1:1 with devices")
 
 
+@obs.trace_span("mesh.build_ops", cat="build")
 def build_mesh_ops(mesh: Mesh, policy,
                    config: bb.ExchangeConfig = bb.DENSE) -> Tuple:
     """Returns jitted (write, read, meta, read_loc) ops bound to a mesh.
@@ -176,6 +178,7 @@ def build_mesh_ops(mesh: Mesh, policy,
     return write, read, meta, read_loc
 
 
+@obs.trace_span("mesh.build_migrate", cat="build")
 def build_mesh_migrate(mesh: Mesh, policy,
                        config: bb.ExchangeConfig = bb.COMPACTED):
     """Jitted ``migrate_rows`` bound to a mesh + policy (live relayout).
@@ -211,6 +214,7 @@ def build_mesh_migrate(mesh: Mesh, policy,
         out_specs=(state_specs, req_spec, req_spec), check_rep=False))
 
 
+@obs.trace_span("mesh.build_probe", cat="build")
 def build_mesh_probe(mesh: Mesh, policy,
                      config: bb.ExchangeConfig = bb.DENSE):
     """Jitted hybrid-read probe op: STAT → (found, loc) ONLY.

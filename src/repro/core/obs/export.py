@@ -1,0 +1,116 @@
+"""Recording exporters: Perfetto trace JSON, metrics snapshots, provenance.
+
+One recording file carries all three planes so a single artifact is
+both machine-readable (``tools/bbstat.py``, the bench scripts) and
+directly loadable in https://ui.perfetto.dev — the Chrome trace-event
+format tolerates extra top-level keys, so ``metrics``, ``audit`` and
+``meta`` ride alongside ``traceEvents``::
+
+    {"traceEvents": [...], "metrics": {...}, "audit": [...], "meta": {...}}
+
+:func:`provenance_meta` is the shared ``meta`` block every
+``BENCH_*.json`` now embeds (schema version, git SHA, jax version,
+device kind, warm-pass count) so a regression pin can explain *what*
+changed between two artifacts, not just that a ratio dropped.
+``tools/bench_check.py`` validates the committed artifacts against it.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import subprocess
+from typing import Dict, List, Optional
+
+from repro.core.obs.recorder import TraceRecorder
+
+#: current provenance schema (v1 artifacts predate provenance and are
+#: grandfathered by ``tools/bench_check.py``)
+SCHEMA_VERSION = 2
+
+#: provenance keys required of every schema-v2+ bench artifact
+PROVENANCE_KEYS = ("schema_version", "git_sha", "jax_version",
+                   "device_kind", "warm_passes")
+
+
+def trace_events(recorder: TraceRecorder) -> List[Dict[str, object]]:
+    """Chrome trace-event list: one complete ("X") event per span.
+
+    All spans share one pid/tid track; nesting is implied by timestamp
+    containment, which the recorder's stack discipline guarantees.
+    """
+    events: List[Dict[str, object]] = []
+    for sp in recorder.spans:
+        events.append({
+            "name": sp.name,
+            "cat": sp.cat,
+            "ph": "X",
+            "ts": round(sp.ts_us, 3),
+            "dur": round(max(sp.dur_us, 0.0), 3),
+            "pid": 0,
+            "tid": 0,
+            "args": dict(sp.args, depth=sp.depth),
+        })
+    return events
+
+
+def recording_dict(recorder: TraceRecorder,
+                   meta: Optional[Dict[str, object]] = None
+                   ) -> Dict[str, object]:
+    """Assemble the full recording: spans + metrics + audit + meta."""
+    return {
+        "traceEvents": trace_events(recorder),
+        "displayTimeUnit": "ms",
+        "metrics": recorder.metrics.snapshot(),
+        "audit": recorder.audit.to_json(),
+        "meta": dict(meta) if meta else provenance_meta(),
+    }
+
+
+def write_recording(recorder: TraceRecorder, path,
+                    meta: Optional[Dict[str, object]] = None) -> pathlib.Path:
+    """Write the recording JSON to ``path`` and return it."""
+    p = pathlib.Path(path)
+    p.write_text(json.dumps(recording_dict(recorder, meta), indent=1))
+    return p
+
+
+def _git_sha() -> Optional[str]:
+    root = pathlib.Path(__file__).resolve().parents[4]
+    try:
+        out = subprocess.run(
+            ["git", "-C", str(root), "rev-parse", "--short", "HEAD"],
+            capture_output=True, text=True, timeout=10)
+    except (OSError, subprocess.SubprocessError):
+        return None
+    sha = out.stdout.strip()
+    return sha if out.returncode == 0 and sha else None
+
+
+def provenance_meta(warm_passes: Optional[int] = None,
+                    **extra: object) -> Dict[str, object]:
+    """Shared provenance block for every bench artifact and recording.
+
+    Every lookup is guarded — a stripped container without git or a
+    device still produces a valid block (values fall back to ``None``
+    rather than raising), because provenance must never be the reason a
+    bench run fails.
+    """
+    jax_version: Optional[str] = None
+    device_kind: Optional[str] = None
+    try:
+        import jax
+
+        jax_version = jax.__version__
+        dev = jax.devices()[0]
+        device_kind = getattr(dev, "device_kind", None) or dev.platform
+    except Exception:  # noqa: BLE001 — provenance is best-effort
+        pass
+    meta: Dict[str, object] = {
+        "schema_version": SCHEMA_VERSION,
+        "git_sha": _git_sha(),
+        "jax_version": jax_version,
+        "device_kind": device_kind,
+        "warm_passes": warm_passes,
+    }
+    meta.update(extra)
+    return meta

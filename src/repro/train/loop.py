@@ -17,6 +17,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint.manager import CheckpointManager
+from repro.core import obs
 from repro.core.layouts import LayoutMode
 from repro.core.policy import LayoutPolicy
 from repro.data.pipeline import TokenPipeline
@@ -127,7 +128,10 @@ def run_training(model, cfg, batch_size: int, seq_len: int,
         ctl = loop_cfg.adapt_controller
         if ctl is not None and loop_cfg.adapt_every and \
                 step % loop_cfg.adapt_every == 0:
-            report = ctl.tick()
+            # drift-tick span on the adapting client's recorder (if any)
+            with obs.activate(getattr(ctl.client, "obs", None)), \
+                    obs.span("train.adapt_tick", cat="train", step=step):
+                report = ctl.tick()
             if report.phase in ("adopted", "completed"):
                 # checkpoint traffic follows the adapted per-scope plan
                 ckpt.set_policy(ctl.client.policy)

@@ -174,6 +174,64 @@ def test_low_volume_ticks_carry_no_signal():
     assert det.observe("s", DRIFTED, 100).fired
 
 
+def test_drift_fires_exactly_at_patience_boundary_per_metrics():
+    """Hysteresis edge, observed through the public metrics counters
+    only: tick N-1 of an over-threshold run is `armed`, tick N (N =
+    patience) is `fired` — never earlier."""
+    from repro.core import obs
+    rec = obs.TraceRecorder()
+    det = DriftDetector(baseline={"s": BASE.copy()},
+                        cfg=DriftConfig(patience=3, cooldown=3, alpha=1.0))
+    with obs.activate(rec):
+        for _ in range(2):                     # patience-1 armed ticks
+            det.observe("s", DRIFTED, 100)
+        m = rec.metrics
+        assert m.get("drift_ticks_total", scope="s", outcome="armed") == 2
+        assert m.get("drift_fired_total", scope="s") == 0
+        assert m.gauge("drift_armed", scope="s") == 2.0
+        det.observe("s", DRIFTED, 100)         # tick `patience`: fires
+        assert m.get("drift_fired_total", scope="s") == 1
+        assert m.get("drift_ticks_total", scope="s", outcome="fired") == 1
+
+
+def test_drift_rearms_and_refires_after_cooldown_per_metrics():
+    from repro.core import obs
+    rec = obs.TraceRecorder()
+    cfg = DriftConfig(patience=1, cooldown=3, alpha=1.0)
+    det = DriftDetector(baseline={"s": BASE.copy()}, cfg=cfg)
+    other = np.array([0.1, 0.9, 1.0, 0.9, 0.0, 0.5])
+    with obs.activate(rec):
+        det.observe("s", DRIFTED, 100)         # fire #1
+        det.rebase("s")                        # decision taken → cooldown
+        m = rec.metrics
+        assert m.get("drift_rebase_total", scope="s") == 1
+        assert m.gauge("drift_cooling", scope="s") == float(cfg.cooldown)
+        for _ in range(cfg.cooldown):
+            det.observe("s", other, 100)       # silenced
+        assert m.get("drift_ticks_total", scope="s",
+                     outcome="cooling") == cfg.cooldown
+        assert m.get("drift_fired_total", scope="s") == 1
+        det.observe("s", other, 100)           # cooldown spent: fire #2
+        assert m.get("drift_fired_total", scope="s") == 2
+        assert m.gauge("drift_cooling", scope="s") == 0.0
+
+
+def test_drift_transient_burst_never_fires_per_metrics():
+    from repro.core import obs
+    rec = obs.TraceRecorder()
+    det = DriftDetector(baseline={"s": BASE.copy()},
+                        cfg=DriftConfig(patience=2, alpha=1.0))
+    with obs.activate(rec):
+        for _ in range(4):                     # alternating burst/stable
+            det.observe("s", DRIFTED, 100)
+            det.observe("s", BASE, 100)
+    m = rec.metrics
+    assert m.get("drift_fired_total", scope="s") == 0
+    assert m.get("drift_ticks_total", scope="s", outcome="armed") == 4
+    assert m.get("drift_ticks_total", scope="s", outcome="quiet") == 4
+    assert m.gauge("drift_armed", scope="s") == 0.0
+
+
 # ---------------------------------------------------------------------------
 # re-decision + cost/benefit gate
 # ---------------------------------------------------------------------------

@@ -128,6 +128,85 @@ def test_mesh_bench_carries_measured_fabric():
     exchange_select.refresh()
 
 
+# ---------------------------------------------------------------------------
+# PR-9: flight-recorder overhead guard
+# ---------------------------------------------------------------------------
+@pytest.mark.slow
+def test_tracing_overhead_bounded_on_stacked_sweep():
+    """Tracing enabled must cost ≤ 1.05× the tracing-off round on the
+    stacked 8-node sweep cell (write + read + stat — the
+    ``exchange_bench`` round).  Spans fence at the same
+    ``block_until_ready`` boundary the bench itself uses, so the only
+    added work is host-side bookkeeping.
+
+    Methodology, because shared CI boxes are noisier than the 5% bound:
+    off/on rounds run back-to-back so machine drift cancels pairwise,
+    GC is paused while measuring, and the statistic is the *median*
+    paired ratio over 50 rounds (round times are heavy-tailed; a min or
+    mean flips verdicts on scheduler spikes alone).  Up to three
+    measurement attempts, passing on the first in-bound median — a real
+    regression (> 5% median overhead) fails all three."""
+    import gc
+    import sys
+    import time
+
+    import numpy as np
+
+    sys.path.insert(0, str(ROOT))
+    import jax.numpy as jnp
+
+    from benchmarks.exchange_bench import _block, _mixed_policy
+    from repro.core import burst_buffer as bb
+    from repro.core import obs
+    from repro.core.client import BBClient
+
+    n, q, w = 8, 64, 16                         # the stacked sweep cell
+    policy = _mixed_policy(n)
+    rng = np.random.RandomState(0)
+    ph = jnp.asarray(rng.randint(1, 1 << 20, (n, q)), jnp.int32)
+    cid = jnp.asarray(rng.randint(0, 8, (n, q)), jnp.int32)
+    payload = jnp.asarray(rng.randint(0, 9999, (n, q, w)), jnp.int32)
+    valid = jnp.ones((n, q), bool)
+    mode = jnp.asarray(rng.choice([2, 3], (n, q)), jnp.int32)
+    op = jnp.full((n, q), bb.OP_STAT, jnp.int32)
+    zeros = jnp.zeros((n, q), jnp.int32)
+    neg = jnp.full((n, q), -1, jnp.int32)
+
+    def mk(trace):
+        return BBClient(policy, cap=4 * q, words=w, mcap=4 * q,
+                        exchange="compacted", capacity=2.0, trace=trace)
+
+    def round_us(c, st):
+        t0 = time.perf_counter()
+        _block(c._write(c.state, mode, ph, cid, payload, valid))
+        _block(c._read(st, mode, ph, cid, valid))
+        _block(c._meta(st, mode, op, ph, zeros, neg, valid))
+        return (time.perf_counter() - t0) * 1e6
+
+    c_off, c_on = mk(None), mk(obs.TraceRecorder())
+    st_off = c_off._write(c_off.state, mode, ph, cid, payload, valid)
+    st_on = c_on._write(c_on.state, mode, ph, cid, payload, valid)
+    _block(st_off)
+    _block(st_on)
+    for _ in range(3):                          # compile + cache warmup
+        round_us(c_off, st_off)
+        round_us(c_on, st_on)
+
+    medians = []
+    for _ in range(3):
+        gc.collect()
+        gc.disable()
+        try:
+            ratios = [round_us(c_on, st_on) / round_us(c_off, st_off)
+                      for _ in range(50)]
+        finally:
+            gc.enable()
+        medians.append(float(np.median(ratios)))
+        if medians[-1] <= 1.05:
+            break
+    assert min(medians) <= 1.05, medians
+
+
 def test_mesh_ragged_does_not_regress_pr4_adaptation():
     """The frozen PR-4 artifact's adaptation win must still hold alongside
     the PR-5 plane (the bench contract other suites pin — reasserted here

@@ -741,6 +741,29 @@ def test_exchange_select_tolerates_missing_or_malformed_bench(tmp_path):
     (tmp_path / "BENCH_pr3.json").write_text(_json.dumps({"rows": bad}))
     xs.refresh()
     assert xs.load_crossover(str(tmp_path)) == xs.FALLBACK_TABLE
+    # 5. the degradation is never silent: with a recorder active, each
+    # fallback load emits a structured audit event carrying the reason
+    from repro.core import obs
+    rec = obs.TraceRecorder()
+    with obs.activate(rec):
+        xs.refresh()
+        assert xs.load_crossover(str(tmp_path)) == xs.FALLBACK_TABLE
+        assert xs.fabric_model(str(tmp_path))[2] is False
+    falls = rec.audit.records("crossover_fallback")
+    assert len(falls) == 1
+    assert falls[0].choice == "fallback_table"
+    assert falls[0].inputs["reason"] == "malformed"   # artifact exists
+    assert falls[0].evidence["grade"] == "fallback"
+    fabs = rec.audit.records("fabric_fallback")
+    assert len(fabs) == 1 and fabs[0].choice == "analytic"
+    assert fabs[0].evidence["grade"] == "fallback"
+    # a missing artifact is distinguished from a malformed one
+    (tmp_path / "BENCH_pr3.json").unlink()
+    with obs.activate(rec):
+        xs.refresh()
+        assert xs.load_crossover(str(tmp_path)) == xs.FALLBACK_TABLE
+    assert rec.audit.records("crossover_fallback")[-1] \
+        .inputs["reason"] == "missing"
     xs.refresh()                  # drop the tmp tables for other tests
 
 

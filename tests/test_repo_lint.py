@@ -140,3 +140,96 @@ def test_rebinding_clears_tracking(tmp_path):
             return p, a
         """)
     assert rules == []
+
+
+def test_detects_unfenced_timing(tmp_path):
+    rules = _lint_snippet(tmp_path, """
+        import time
+        import jax
+
+        def _f(x):
+            return x * 2
+
+        g = jax.jit(_f)
+
+        def bench(x):
+            t0 = time.perf_counter()
+            y = g(x)
+            return time.perf_counter() - t0
+        """)
+    assert rules == ["unfenced-timing"]
+
+
+def test_fenced_timing_is_allowed(tmp_path):
+    rules = _lint_snippet(tmp_path, """
+        import time
+        import jax
+
+        def _f(x):
+            return x * 2
+
+        g = jax.jit(_f)
+
+        def bench(x):
+            t0 = time.perf_counter()
+            y = jax.block_until_ready(g(x))
+            return time.perf_counter() - t0
+        """)
+    assert rules == []
+
+
+def test_fence_helper_is_recognized(tmp_path):
+    # a local helper whose body touches block_until_ready counts as a
+    # fence (the benches' `_block` idiom)
+    rules = _lint_snippet(tmp_path, """
+        import time
+        import jax
+
+        def _block(x):
+            jax.block_until_ready(x)
+
+        def _f(x):
+            return x * 2
+
+        g = jax.jit(_f)
+
+        def bench(x):
+            t0 = time.perf_counter()
+            out = g(x)
+            _block(out)
+            return time.perf_counter() - t0
+        """)
+    assert rules == []
+
+
+def test_host_conversion_counts_as_fence(tmp_path):
+    rules = _lint_snippet(tmp_path, """
+        import time
+        import jax
+
+        def _f(x):
+            return x * 2
+
+        g = jax.jit(_f)
+
+        def bench(x):
+            t0 = time.perf_counter()
+            out = float(g(x))
+            return time.perf_counter() - t0
+        """)
+    assert rules == []
+
+
+def test_timing_plain_python_is_allowed(tmp_path):
+    rules = _lint_snippet(tmp_path, """
+        import time
+
+        def slow(x):
+            return sum(range(x))
+
+        def bench(x):
+            t0 = time.perf_counter()
+            y = slow(x)
+            return time.perf_counter() - t0
+        """)
+    assert rules == []

@@ -1,0 +1,180 @@
+#!/usr/bin/env python
+"""bbstat: inspect a flight-recorder capture from the command line.
+
+Reads the JSON written by ``obs.write_recording`` (``--trace-out`` on the
+benchmarks, or any ``BBClient(trace=...)`` run that exported one) and
+prints the three views that answer most "what did the run actually do?"
+questions without opening Perfetto:
+
+* ``phases``    — wall-time breakdown by span name (count, total µs,
+                  mean µs, share of recorded time);
+* ``decisions`` — the decision audit history, grouped by kind, with the
+  chosen option, its evidence grade, and the rejected alternatives;
+* ``scopes``    — top scopes by exchanged bytes (the folded telemetry
+  gauges), with op counts and budget pressure;
+* ``counters``  — the raw metrics snapshot (counters + gauges).
+
+Stdlib-only on purpose: it must work on a login node with no jax.
+
+Usage:
+    python tools/bbstat.py TRACE.json                 # summary of all
+    python tools/bbstat.py TRACE.json --section phases
+    python tools/bbstat.py TRACE.json --section decisions --kind redecide
+    python tools/bbstat.py TRACE.json --top 5
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import re
+import sys
+from collections import defaultdict
+from typing import Dict, List
+
+_SCOPE_RE = re.compile(r"^scope_(\w+)\{(.*)\}$")
+
+
+def _load(path: str) -> Dict:
+    with open(path) as f:
+        d = json.load(f)
+    if not isinstance(d, dict) or "traceEvents" not in d:
+        raise SystemExit(f"{path}: not a flight-recorder capture "
+                         "(missing traceEvents)")
+    return d
+
+
+def _labels(raw: str) -> Dict[str, str]:
+    out = {}
+    for part in raw.split(","):
+        if "=" in part:
+            k, v = part.split("=", 1)
+            out[k] = v
+    return out
+
+
+def phase_rows(rec: Dict) -> List[Dict]:
+    """Per-span-name totals from the trace events, hottest first."""
+    agg: Dict[str, List[float]] = defaultdict(lambda: [0, 0.0])
+    for ev in rec.get("traceEvents", []):
+        a = agg[ev["name"]]
+        a[0] += 1
+        a[1] += float(ev.get("dur", 0.0))
+    total = sum(a[1] for a in agg.values()) or 1.0
+    return [{"span": name, "count": int(c), "total_us": round(us, 1),
+             "mean_us": round(us / c, 1), "share": round(us / total, 3)}
+            for name, (c, us) in
+            sorted(agg.items(), key=lambda kv: -kv[1][1])]
+
+
+def scope_rows(rec: Dict) -> List[Dict]:
+    """Per-scope traffic from the folded telemetry gauges, by bytes."""
+    gauges = rec.get("metrics", {}).get("gauges", {})
+    scopes: Dict[str, Dict] = defaultdict(dict)
+    for key, val in gauges.items():
+        m = _SCOPE_RE.match(key)
+        if not m:
+            continue
+        field, labels = m.group(1), _labels(m.group(2))
+        scope = labels.pop("scope", None)
+        if scope is None:
+            continue
+        if labels:                      # e.g. scope_ops{op=...,scope=...}
+            sub = "_".join(f"{k}_{v}" for k, v in sorted(labels.items()))
+            scopes[scope][f"{field}.{sub}"] = val
+        else:
+            scopes[scope][field] = val
+    return sorted(
+        ({"scope": s, **fields} for s, fields in scopes.items()),
+        key=lambda r: -r.get("bytes", 0.0))
+
+
+def decision_rows(rec: Dict, kind: str = "") -> List[Dict]:
+    """The audit history (optionally one kind), in decision order."""
+    recs = rec.get("audit", [])
+    if kind:
+        recs = [r for r in recs if r.get("kind") == kind]
+    return recs
+
+
+def _print_phases(rec: Dict, top: int) -> None:
+    rows = phase_rows(rec)[:top]
+    print(f"{'span':28s} {'count':>7s} {'total_us':>12s} "
+          f"{'mean_us':>10s} {'share':>6s}")
+    for r in rows:
+        print(f"{r['span']:28s} {r['count']:7d} {r['total_us']:12.1f} "
+              f"{r['mean_us']:10.1f} {r['share']:6.1%}")
+
+
+def _print_scopes(rec: Dict, top: int) -> None:
+    rows = scope_rows(rec)[:top]
+    if not rows:
+        print("(no folded telemetry gauges — run with telemetry=True "
+              "and an AdaptationController, or fold manually)")
+        return
+    for r in rows:
+        scope = r.pop("scope")
+        parts = ", ".join(f"{k}={v:g}" for k, v in sorted(r.items()))
+        print(f"{scope}: {parts}")
+
+
+def _print_decisions(rec: Dict, kind: str, top: int) -> None:
+    rows = decision_rows(rec, kind)
+    by_kind: Dict[str, int] = defaultdict(int)
+    for r in rows:
+        by_kind[r.get("kind", "?")] += 1
+    print("decision counts:", dict(sorted(by_kind.items())))
+    for r in rows[-top:]:
+        ev = r.get("evidence", {})
+        alts = r.get("alternatives", {})
+        alt_s = ", ".join(f"{k}={v:g}" if isinstance(v, (int, float))
+                          else f"{k}={v}" for k, v in alts.items())
+        print(f"  #{r.get('seq')} {r.get('kind')}: chose "
+              f"{r.get('choice')!r} [{ev.get('grade', '?')}]"
+              + (f" over {alt_s}" if alt_s else ""))
+
+
+def _print_counters(rec: Dict, top: int) -> None:
+    snap = rec.get("metrics", {})
+    for section in ("counters", "gauges"):
+        vals = snap.get(section, {})
+        print(f"{section} ({len(vals)}):")
+        for k in sorted(vals)[:top]:
+            print(f"  {k} = {vals[k]:g}")
+
+
+def main(argv=None) -> int:
+    """CLI entry point; returns a process exit code."""
+    ap = argparse.ArgumentParser(
+        description="inspect a flight-recorder capture")
+    ap.add_argument("trace", help="recording JSON from obs.write_recording")
+    ap.add_argument("--section", default="all",
+                    choices=["all", "phases", "decisions", "scopes",
+                             "counters"])
+    ap.add_argument("--kind", default="",
+                    help="filter decisions to one kind (e.g. redecide)")
+    ap.add_argument("--top", type=int, default=20,
+                    help="rows per section")
+    args = ap.parse_args(argv)
+    rec = _load(args.trace)
+    meta = rec.get("meta", {})
+    if meta:
+        print("meta:", json.dumps(meta, sort_keys=True))
+    n_ev = len(rec.get("traceEvents", []))
+    print(f"{n_ev} spans, {len(rec.get('audit', []))} decisions")
+    order = (["phases", "decisions", "scopes"] if args.section == "all"
+             else [args.section])
+    for sec in order:
+        print(f"\n== {sec} ==")
+        if sec == "phases":
+            _print_phases(rec, args.top)
+        elif sec == "scopes":
+            _print_scopes(rec, args.top)
+        elif sec == "decisions":
+            _print_decisions(rec, args.kind, args.top)
+        elif sec == "counters":
+            _print_counters(rec, args.top)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

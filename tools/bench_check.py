@@ -1,0 +1,90 @@
+#!/usr/bin/env python
+"""Schema gate for committed ``BENCH_*.json`` artifacts (``make lint``).
+
+The bench JSONs are load-bearing: ``exchange_select`` learns its backend
+crossover and fabric model from them, ``docs/exchange.md`` cites them,
+and the regression tests replay their cells.  A malformed artifact fails
+SILENTLY there (the selectors fall back to analytic tables), so the lint
+gate catches it at commit time instead:
+
+* the file parses as a JSON object with a ``meta`` object carrying
+  ``bench`` and ``timestamp``;
+* every entry of a top-level ``rows`` list is an object;
+* provenance: artifacts written at ``meta.schema_version >= 2`` must
+  carry the full provenance block (``obs.export.PROVENANCE_KEYS`` —
+  git SHA, jax version, device kind, warm-pass count).  Older artifacts
+  predate the flight recorder and are exempt — the version key is how
+  the schema ratchets without rewriting history.
+
+Exit code is the number of failing files.
+
+Usage:
+    python tools/bench_check.py                # all BENCH_*.json in repo
+    python tools/bench_check.py BENCH_pr3.json
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import sys
+from typing import List
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(ROOT / "src"))
+
+from repro.core.obs.export import PROVENANCE_KEYS  # noqa: E402
+
+
+def check_bench(path: pathlib.Path) -> List[str]:
+    """All schema violations in one artifact (empty list = clean)."""
+    errs: List[str] = []
+    try:
+        data = json.loads(path.read_text())
+    except (OSError, ValueError) as e:
+        return [f"unreadable: {e}"]
+    if not isinstance(data, dict):
+        return ["top level is not a JSON object"]
+    meta = data.get("meta")
+    if not isinstance(meta, dict):
+        return ["missing 'meta' object"]
+    for key in ("bench", "timestamp"):
+        if not isinstance(meta.get(key), str) or not meta[key]:
+            errs.append(f"meta.{key} missing or not a non-empty string")
+    rows = data.get("rows")
+    if rows is not None:
+        if not isinstance(rows, list):
+            errs.append("'rows' is not a list")
+        else:
+            bad = [i for i, r in enumerate(rows) if not isinstance(r, dict)]
+            if bad:
+                errs.append(f"rows[{bad[0]}] is not an object "
+                            f"({len(bad)} such rows)")
+    version = meta.get("schema_version", 1)
+    if isinstance(version, int) and version >= 2:
+        missing = [k for k in PROVENANCE_KEYS if k not in meta]
+        if missing:
+            errs.append(f"schema_version={version} but provenance keys "
+                        f"missing: {', '.join(missing)}")
+    return errs
+
+
+def main(argv=None) -> int:
+    """Check the given artifacts (default: every BENCH_*.json in repo)."""
+    paths = [pathlib.Path(p) for p in (argv if argv is not None
+                                       else sys.argv[1:])]
+    if not paths:
+        paths = sorted(ROOT.glob("BENCH_*.json"))
+    failures = 0
+    for path in paths:
+        errs = check_bench(path)
+        if errs:
+            failures += 1
+            for e in errs:
+                print(f"{path}: {e}")
+    if failures == 0:
+        print(f"bench_check: {len(paths)} artifact(s) clean")
+    return failures
+
+
+if __name__ == "__main__":
+    sys.exit(main())

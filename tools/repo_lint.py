@@ -18,6 +18,11 @@ and hard to debug in this codebase:
   ``cache``-decorated function (attribute/item assignment or a known
   mutator method).  The mutation poisons the shared cached object for
   every later caller with the same key.
+* ``unfenced-timing`` — a ``perf_counter()``/``time()`` delta spanning a
+  call to a jit-compiled function with no ``block_until_ready`` fence
+  (or host conversion) inside the timed region.  jax dispatch is async:
+  the delta measures enqueue time, not compute time, and the resulting
+  "benchmark" silently reports numbers that are orders of magnitude off.
 
 Usage: ``python tools/repo_lint.py [path ...]`` (default: ``src/repro``).
 Exits non-zero when any finding is reported.
@@ -32,6 +37,10 @@ from typing import Iterable, List, Optional, Set
 
 MUTATOR_METHODS = {"append", "extend", "insert", "update", "add", "pop",
                    "remove", "clear", "sort", "setdefault", "popitem"}
+
+#: wall-clock reads whose deltas the unfenced-timing rule tracks
+CLOCK_FNS = {"time.perf_counter", "perf_counter", "time.time",
+             "time.monotonic", "monotonic"}
 
 
 @dataclass(frozen=True)
@@ -117,6 +126,24 @@ class _ModuleLinter(ast.NodeVisitor):
                 target = node.args[0]
                 if isinstance(target, ast.Name):
                     self.jitted_fns.add(target.id)
+            # names BOUND to a jit-compiled callable: g = jax.jit(f)
+            if isinstance(node, ast.Assign) and \
+                    isinstance(node.value, ast.Call) and \
+                    _dotted(node.value.func) in ("jax.jit", "jit"):
+                for t in node.targets:
+                    if isinstance(t, ast.Name):
+                        self.jitted_fns.add(t.id)
+        # helper functions that ARE fences (their body touches
+        # block_until_ready — e.g. the benches' `_block`)
+        self.fence_fns: Set[str] = set()
+        for node in ast.walk(tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                if any((isinstance(s, ast.Attribute) and
+                        s.attr == "block_until_ready") or
+                       (isinstance(s, ast.Name) and
+                        s.id == "block_until_ready")
+                       for s in ast.walk(node)):
+                    self.fence_fns.add(node.name)
 
     # -- helpers -------------------------------------------------------------
     def _is_jnp_call(self, node: ast.AST) -> bool:
@@ -128,6 +155,25 @@ class _ModuleLinter(ast.NodeVisitor):
 
     def _contains_jnp_call(self, node: ast.AST) -> bool:
         return any(self._is_jnp_call(n) for n in ast.walk(node))
+
+    def _is_clock_call(self, node: ast.AST) -> bool:
+        return isinstance(node, ast.Call) and _dotted(node.func) in CLOCK_FNS
+
+    def _is_fence(self, node: ast.AST) -> bool:
+        """A node that forces device completion / host materialization."""
+        if isinstance(node, ast.Attribute) and \
+                node.attr == "block_until_ready":
+            return True
+        if isinstance(node, ast.Name) and node.id == "block_until_ready":
+            return True
+        if isinstance(node, ast.Call):
+            if isinstance(node.func, ast.Name) and \
+                    node.func.id in self.fence_fns | {"float", "int"}:
+                return True
+            if isinstance(node.func, ast.Attribute) and \
+                    node.func.attr in ("item", "asarray", "tolist"):
+                return True
+        return False
 
     def lint(self) -> List[Finding]:
         """Run every rule over every function in the module."""
@@ -232,6 +278,48 @@ class _ModuleLinter(ast.NodeVisitor):
                                f"`.{node.func.attr}()` on `{base.id}`, the "
                                "shared result of a cached call — copy "
                                "before modifying")
+
+        self._lint_timing(fn)
+
+    def _lint_timing(self, fn: ast.FunctionDef) -> None:
+        """R5: clock delta over a jitted call with no completion fence."""
+        clock_starts: dict = {}          # name -> [assign linenos]
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Assign) and \
+                    self._is_clock_call(node.value):
+                for t in node.targets:
+                    if isinstance(t, ast.Name):
+                        clock_starts.setdefault(t.id, []).append(node.lineno)
+        if not clock_starts:
+            return
+        for node in ast.walk(fn):
+            # the delta: <clock read> - t0
+            if not (isinstance(node, ast.BinOp) and
+                    isinstance(node.op, ast.Sub) and
+                    isinstance(node.right, ast.Name) and
+                    node.right.id in clock_starts and
+                    self._is_clock_call(node.left)):
+                continue
+            end = node.lineno
+            starts = [ln for ln in clock_starts[node.right.id] if ln < end]
+            if not starts:
+                continue
+            start = max(starts)          # nearest preceding clock read
+            region = [n for n in ast.walk(fn)
+                      if start < getattr(n, "lineno", start) <= end]
+            jit_call = next(
+                (n for n in region if isinstance(n, ast.Call) and
+                 isinstance(n.func, ast.Name) and
+                 n.func.id in self.jitted_fns), None)
+            if jit_call is None:
+                continue
+            if any(self._is_fence(n) for n in region):
+                continue
+            self._emit(jit_call, "unfenced-timing",
+                       f"timing jit-compiled `{jit_call.func.id}` with a "
+                       "wall clock but no fence in the timed region — jax "
+                       "dispatch is async; call jax.block_until_ready on "
+                       "the result before reading the clock")
 
 
 def lint_paths(paths: Iterable[str]) -> List[Finding]:
