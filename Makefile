@@ -1,6 +1,6 @@
 PY := PYTHONPATH=src python
 
-.PHONY: test test-fast lint examples bb-dryrun bench bench-adapt bench-mesh docs-check
+.PHONY: test test-fast lint examples bb-dryrun bench bench-adapt bench-mesh bench-pipeline docs-check
 
 # full tier-1 suite (~minutes: includes model smoke + subprocess mesh tests)
 test:
@@ -42,6 +42,14 @@ bench-adapt:
 # (tests/test_bench_regression.py pins the byte-reduction floor)
 bench-mesh:
 	$(PY) benchmarks/mesh_bench.py --quick --out BENCH_pr5.json
+
+# pipelined-exchange perf: sync vs software-pipelined multi-round
+# transports (ppermute shifts, lossless carry) against the same-run
+# fabric fit, plus serial vs fused write round-trips → BENCH_pr10.json
+# (tests/test_bench_regression.py pins the 32-node bound + speedup;
+# tools/bench_check.py gates the overlap schema)
+bench-pipeline:
+	$(PY) benchmarks/pipeline_bench.py --quick --out BENCH_pr10.json
 
 # fail on any undocumented public symbol in the core API (tools/docs_check.py)
 docs-check:

@@ -71,9 +71,10 @@ from repro.core.exchange_plan import (  # noqa: F401  (re-exports)
     RaggedSpec, UniformExecutor, _auto_budget, _carry_budget, _carry_taken,
     _compact_plan, _compact_plan_ragged, bucketize, build_executor,
     collect_replies, compact_bucketize, compact_collect,
-    compact_collect_flat, data_budget, exchange_footprint, meta_budget,
-    plan_mesh_ragged_spec, plan_ragged_spec, ragged_exchange,
-    ragged_reply_exchange, run_exchange, stacked_exchange, stacked_shift)
+    compact_collect_flat, data_budget, exchange_footprint, fuse_specs,
+    fused_send, fused_write_plan, meta_budget, plan_mesh_ragged_spec,
+    plan_ragged_spec, ragged_exchange, ragged_reply_exchange, run_exchange,
+    stacked_exchange, stacked_shift)
 
 EMPTY = jnp.int32(-1)
 
@@ -193,6 +194,15 @@ def _alloc_meta_slots(mk: jax.Array, new_mask: jax.Array
     return jnp.where(fits, slot, mcap), fits
 
 
+def _meta_find(mk: jax.Array, k: jax.Array, ok: jax.Array
+               ) -> Tuple[jax.Array, jax.Array]:
+    """(N, mcap) table scan: first slot holding each key (argmax of match)."""
+    eq = (mk[:, None, :] == k[:, :, None]) & (mk[:, None, :] != EMPTY)
+    fnd = eq.any(axis=2) & ok
+    idx = jnp.argmax(eq, axis=2)
+    return fnd, idx
+
+
 def _meta_apply(state: BBState, op: jax.Array, key: jax.Array,
                 size: jax.Array, loc: jax.Array, valid: jax.Array
                 ) -> Tuple[BBState, jax.Array, jax.Array, jax.Array]:
@@ -204,12 +214,7 @@ def _meta_apply(state: BBState, op: jax.Array, key: jax.Array,
     N, mcap = state.meta_key.shape
     m = key.shape[1]
     rows = jnp.broadcast_to(jnp.arange(N)[:, None], (N, m))
-
-    def find(mk, k, ok):
-        eq = (mk[:, None, :] == k[:, :, None]) & (mk[:, None, :] != EMPTY)
-        fnd = eq.any(axis=2) & ok
-        idx = jnp.argmax(eq, axis=2)
-        return fnd, idx
+    find = _meta_find
 
     mk, ms, ml = state.meta_key, state.meta_size, state.meta_loc
     dropped = state.dropped
@@ -270,6 +275,72 @@ def _meta_apply(state: BBState, op: jax.Array, key: jax.Array,
     return new_state, found, r_size, r_loc
 
 
+def _meta_write_apply(state: BBState, key: jax.Array, size: jax.Array,
+                      loc: jax.Array, valid: jax.Array, create: jax.Array
+                      ) -> BBState:
+    """``_meta_apply`` specialized for a write batch and its discarded reply.
+
+    A write's metadata plane carries only CREATE (chunk 0) and UPDATE
+    (upsert) ops, and the caller never consumes the reply.  The fused
+    round-trip hands the receiver that guarantee statically, so the STAT
+    and REMOVE passes — two O(m·mcap) table scans plus their gathers and
+    scatters — and the reply outputs never enter the trace.  The CREATE
+    and UPDATE passes below are copied verbatim from ``_meta_apply``
+    (with ``op == OP_CREATE`` pre-resolved to ``create``), so the
+    resulting tables are bit-for-bit those of the generic apply.
+
+    The three metadata columns also travel as ONE (N, mcap, 3) packed
+    table so each pass issues a single 3-wide scatter instead of three —
+    XLA CPU scatters pay per update row, not per scalar, so a third of
+    the scatter count is a third of the apply's wall-clock.  The values
+    written per slot are identical, so the unpacked tables match the
+    generic apply's exactly.
+    """
+    N, mcap = state.meta_key.shape
+    m = key.shape[1]
+    rows = jnp.broadcast_to(jnp.arange(N)[:, None], (N, m))
+    find = _meta_find
+
+    tbl = jnp.stack([state.meta_key, state.meta_size, state.meta_loc],
+                    axis=-1)                                     # (N, mcap, 3)
+    dropped = state.dropped
+
+    # CREATE (skip if exists — idempotent create)
+    c_ok = valid & create
+    exists, _ = find(tbl[..., 0], key, c_ok)
+    c_new = c_ok & ~exists
+    slot, fits = _alloc_meta_slots(tbl[..., 0], c_new)
+    rec_c = jnp.stack([key, size, loc], axis=-1)                 # (N, m, 3)
+    tbl = tbl.at[rows, slot].set(jnp.where(fits[..., None], rec_c, 0),
+                                 mode="drop")
+    dropped = dropped + (c_new & ~fits).sum(axis=1).astype(jnp.int32)
+
+    # UPDATE upsert on miss (implicit create: size 0, loc as sent)
+    u_ok = valid & ~create
+    fnd_u0, _ = find(tbl[..., 0], key, u_ok)
+    missing = u_ok & ~fnd_u0
+    slot_m, fits_m = _alloc_meta_slots(tbl[..., 0], missing)
+    rec_m = jnp.stack([key, jnp.zeros_like(size), loc], axis=-1)
+    tbl = tbl.at[rows, slot_m].set(jnp.where(fits_m[..., None], rec_m, 0),
+                                   mode="drop")
+    dropped = dropped + (missing & ~fits_m).sum(axis=1).astype(jnp.int32)
+
+    # UPDATE (size := max(size, new); loc := new if >= 0).  The key
+    # column rewrites the key the slot already holds (find matched it),
+    # keeping the scatter a single packed 3-wide write.
+    fnd_u, idx_u = find(tbl[..., 0], key, u_ok)
+    cur = jnp.take_along_axis(tbl, idx_u[..., None], axis=1)     # (N, m, 3)
+    new_sz = jnp.where(fnd_u, jnp.maximum(cur[..., 1], size), cur[..., 1])
+    new_loc = jnp.where(fnd_u & (loc >= 0), loc, cur[..., 2])
+    rec_u = jnp.stack([key, new_sz, new_loc], axis=-1)
+    tbl = tbl.at[rows, jnp.where(fnd_u, idx_u, mcap)].set(rec_u, mode="drop")
+
+    mk = tbl[..., 0]
+    mc = (mk != EMPTY).sum(axis=1).astype(jnp.int32)
+    return BBState(state.data, state.data_keys, state.data_count,
+                   mk, tbl[..., 1], tbl[..., 2], mc, dropped)
+
+
 # ---------------------------------------------------------------------------
 # client-visible batched operations — every cross-node phase below is ONE
 # ``run_exchange`` call: a fused request buffer plus a receiver-side apply
@@ -292,6 +363,71 @@ def _ones_col(ref: jax.Array) -> jax.Array:
     """The fused occupancy column: arrives as the receiver validity mask
     (empty plan slots gather the sentinel zero row)."""
     return jnp.ones(ref.shape[:-1] + (1,), jnp.int32)
+
+
+def _fused_write(state: BBState, policy: LayoutPolicy,
+                 executors, dest: jax.Array, valid: jax.Array,
+                 mode: jax.Array, path_hash: jax.Array,
+                 chunk_id: jax.Array, payload: jax.Array, keys: jax.Array,
+                 client: jax.Array, exchange: Callable) -> BBState:
+    """The fused write round-trip: data + metadata in ONE collective.
+
+    The synchronous write runs a data round (request collective) and then
+    a metadata round (request + reply collectives, replies discarded).
+    Under the pipeline each plane still packs with its OWN serial plan —
+    the data requests toward ``dest`` at the data budgets, the metadata
+    upserts toward their owners at the metadata budgets — but the two
+    packed buffers concatenate per destination segment into a single
+    collective launch (``fused_send``), with no reply round at all since
+    a write never consumes its metadata replies.  The receiver slices
+    the fused buffer back into per-plane views through static index
+    maps, so ``_append_chunks`` and the metadata apply each scan exactly
+    the rows the serial rounds handed them — fusion saves launches, not
+    by adding receiver-side masking work.  Because the fused plan also
+    certifies the op mix (CREATE/UPDATE only, reply discarded), the
+    metadata plane applies via ``_meta_write_apply``, which skips the
+    generic apply's STAT and REMOVE table scans.
+
+    Parity: per-plane plans and packed row order are bit-identical to
+    the serial rounds', so both tables append in the same source-major
+    arrival order and state digests are unchanged.  Callers gate on
+    ``fused_write_plan`` (compacted + lossless + pipelined,
+    overflow-free non-ppermute plans).
+    """
+    ex_d, ex_m = executors
+    N = policy.n_nodes
+    w = payload.shape[-1]
+    width = max(2 + w, 4)                       # widest plane row, unpadded
+    op = jnp.where(chunk_id == 0, OP_CREATE, OP_UPDATE)
+    loc = jnp.where(mode == LayoutMode.HYBRID,
+                    jnp.broadcast_to(client, dest.shape),
+                    jnp.full_like(dest, -1))
+    owner = route_meta(mode, N, policy.n_md_servers, path_hash, client,
+                       xp=jnp)
+
+    def padded(body):                           # body | pad | mask
+        fill = jnp.zeros(body.shape[:-1] + (width - body.shape[-1],),
+                         jnp.int32)
+        return jnp.concatenate([body, fill, _ones_col(body)], axis=-1)
+
+    fields_d = padded(jnp.concatenate([keys, payload], axis=-1))
+    fields_m = padded(jnp.stack([op, path_hash, chunk_id + 1, loc],
+                                axis=-1))
+    with obs.span("exchange.plan", cat="trace", role="fused_write",
+                  kind="compacted"):
+        plan_d = ex_d.plan(dest, valid, client=client)
+        plan_m = ex_m.plan(owner, valid, client=client)
+    with obs.span("exchange.pack", cat="trace", role="fused_write",
+                  executor=type(ex_d).__name__):
+        recv_d, rv_d, recv_m, rv_m = fused_send(
+            ex_d, plan_d, fields_d, ex_m, plan_m, fields_m, exchange)
+    with obs.span("exchange.apply", cat="trace", role="fused_write"):
+        state = _append_chunks(state, recv_d[..., :2],
+                               recv_d[..., 2:2 + w], rv_d)
+        state = _meta_write_apply(state, recv_m[..., 1], recv_m[..., 2],
+                                  recv_m[..., 3], rv_m,
+                                  create=recv_m[..., 0] == OP_CREATE)
+    return state
 
 
 @obs.trace_span("engine.forward_write")
@@ -338,6 +474,12 @@ def forward_write(state: BBState, layout, path_hash: jax.Array,
     dest = route_data(mode, N, path_hash, chunk_id, client, xp=jnp)
     keys = jnp.stack([path_hash, chunk_id], axis=-1)
     meta_valid = valid
+    if update_meta and not (policy.modes_present() <= LOCAL_WRITE_MODES):
+        fplan = fused_write_plan(policy, dest.shape[1], config)
+        if fplan is not None:
+            return _fused_write(state, policy, fplan, dest, valid, mode,
+                                path_hash, chunk_id, payload, keys, client,
+                                exchange)
     if policy.modes_present() <= LOCAL_WRITE_MODES:
         # every possible mode writes locally: no exchange at all
         # (the Mode-1/4 fast path, decided statically from the policy)

@@ -116,7 +116,8 @@ class BBRequest:
 
 
 @functools.lru_cache(maxsize=256)
-def _stacked_ops_for(engine_key, config: bb.ExchangeConfig):
+def _stacked_ops_for(engine_key, config: bb.ExchangeConfig,
+                     donate: bool = False):
     """Jitted stacked ops, cached per engine specialization.
 
     Keyed on ``policy.engine_key()`` (not the policy object) × the full
@@ -125,8 +126,17 @@ def _stacked_ops_for(engine_key, config: bb.ExchangeConfig):
     jitted ops and XLA's trace cache.  Ragged configs carry their
     ``RaggedSpec`` in the key, so each measured traffic shape gets (and
     re-uses) its own specialization.
+
+    ``donate=True`` marks the state argument of the *mutating* ops
+    (write / meta) as donated, so XLA reuses the input tables in place
+    instead of allocating a fresh copy per round.  The donated input is
+    DELETED after the call — callers must rebind (the public client API
+    does; raw ``client._write(client.state, ...)`` loops must not turn
+    donation on).  Read ops never donate.  The flag is part of the cache
+    key, so donating and non-donating clients get separate jits.
     """
     policy = LayoutPolicy.for_engine_key(engine_key)
+    dargs = (0,) if donate else ()
 
     def _write(state, mode, ph, cid, payload, valid):
         return bb.forward_write(state, policy, ph, cid, payload, valid,
@@ -144,14 +154,15 @@ def _stacked_ops_for(engine_key, config: bb.ExchangeConfig):
         return bb.forward_read(state, policy, ph, cid, valid, mode=mode,
                                config=config, data_loc=data_loc)
 
-    return (jax.jit(_write), jax.jit(_read), jax.jit(_meta),
-            jax.jit(_read_loc))
+    return (jax.jit(_write, donate_argnums=dargs), jax.jit(_read),
+            jax.jit(_meta, donate_argnums=dargs), jax.jit(_read_loc))
 
 
 def _build_stacked_ops(policy: LayoutPolicy,
-                       config: bb.ExchangeConfig = bb.DENSE):
+                       config: bb.ExchangeConfig = bb.DENSE,
+                       donate: bool = False):
     """Resolve ``policy`` to its engine key and fetch the cached ops."""
-    return _stacked_ops_for(policy.engine_key(), config)
+    return _stacked_ops_for(policy.engine_key(), config, donate)
 
 
 @functools.lru_cache(maxsize=256)
@@ -178,7 +189,8 @@ def _stacked_probe_for(engine_key, config: bb.ExchangeConfig):
 
 
 @functools.lru_cache(maxsize=64)
-def _stacked_migrate_for(engine_key, config: bb.ExchangeConfig):
+def _stacked_migrate_for(engine_key, config: bb.ExchangeConfig,
+                         donate: bool = False):
     """Jitted stacked ``migrate_rows``, cached like ``_stacked_ops_for``."""
     policy = LayoutPolicy.for_engine_key(engine_key)
 
@@ -186,7 +198,7 @@ def _stacked_migrate_for(engine_key, config: bb.ExchangeConfig):
         return bb.migrate_rows(state, policy, ph, cid, valid, old_mode,
                                new_mode, config=config)
 
-    return jax.jit(_migrate)
+    return jax.jit(_migrate, donate_argnums=(0,) if donate else ())
 
 
 class BBClient:
@@ -207,7 +219,8 @@ class BBClient:
                  exchange: str = "auto", budget: Optional[int] = None,
                  meta_budget: Optional[int] = None, capacity: float = 2.0,
                  lossless: bool = True, ragged: bool = True,
-                 two_phase: bool = True, telemetry: bool = False,
+                 two_phase: bool = True, pipeline: bool = True,
+                 donate: bool = False, telemetry: bool = False,
                  trace: Optional[obs.TraceRecorder] = None):
         """Build a client holding fresh (or adopted) node tables.
 
@@ -239,6 +252,17 @@ class BBClient:
           two_phase: run hybrid reads as metadata probe → ragged data
             round (both backends); ``False`` keeps the single-call
             uniform-budget plan.  Only meaningful with ``ragged=True``.
+          pipeline: enable the async exchange restructurings (default) —
+            fused write round-trips, software-pipelined ppermute rounds,
+            hoisted carry plans, and measured carry-width hints.  Every
+            result stays bit-for-bit identical; ``False`` restores the
+            synchronous PR-5 call structure (the A/B baseline).
+          donate: donate the state argument of mutating jitted ops
+            (write / meta / migrate), reusing the node tables in place
+            instead of reallocating per call.  Off by default because
+            donation DELETES the input state — safe through the public
+            API (which rebinds ``self.state``), unsafe for raw
+            ``client._write(client.state, ...)`` replay loops.
           telemetry: accumulate per-scope intent counters on every call
             (jit-side — see repro.core.adapt.telemetry) and maintain the
             host-side write registry the ``LiveMigrator`` builds its
@@ -262,10 +286,12 @@ class BBClient:
             raise ValueError(f"unknown exchange {exchange!r}; pass one of "
                              f"{EXCHANGE_KINDS}")
         self.exchange_mode = exchange
+        self.pipeline = bool(pipeline)
+        self.donate = bool(donate)
         self.exchange_config = bb.ExchangeConfig(
             kind=exchange if exchange != "auto" else "compacted",
             budget=budget, meta_budget=meta_budget, capacity=capacity,
-            lossless=lossless)
+            lossless=lossless, pipeline=self.pipeline)
         self.state = (state if state is not None
                       else bb.init_state(self.n_nodes, cap, words, mcap))
         self._path_codes = functools.lru_cache(maxsize=1 << 16)(
@@ -293,6 +319,9 @@ class BBClient:
         # high-water budgets per (role, q) — a steady workload converges
         # to ONE spec (one jit specialization) instead of re-planning
         self._spec_floor: Dict[Tuple[str, int], np.ndarray] = {}
+        # measured carry-width floor per q (see _carry_hint): same
+        # converge-to-one-specialization discipline as _spec_floor
+        self._hint_floor: Dict[int, int] = {}
         # suggest_align syncs the device (telemetry snapshot): refresh it
         # every _ALIGN_REFRESH plans instead of per plan
         self._align_state: Dict[int, Tuple[int, int]] = {}
@@ -456,6 +485,7 @@ class BBClient:
         self._mesh_migrate.clear()
         self._mesh_probe.clear()
         self._spec_floor.clear()        # routing changed; floors are stale
+        self._hint_floor.clear()
         self._align_state.clear()
         self._foot_cache.clear()        # budgets key on the policy
         self.fallback = (None if migrating is None else
@@ -516,10 +546,12 @@ class BBClient:
             op = self._mesh_migrate.get(cfg)
             if op is None:
                 from repro.core.mesh_engine import build_mesh_migrate
-                op = build_mesh_migrate(self.backend, self.policy, cfg)
+                op = build_mesh_migrate(self.backend, self.policy, cfg,
+                                        donate=self.donate)
                 self._cache_put(self._mesh_migrate, cfg, op)
         else:
-            op = _stacked_migrate_for(self.policy.engine_key(), cfg)
+            op = _stacked_migrate_for(self.policy.engine_key(), cfg,
+                                      self.donate)
         if self.obs is None:
             self.state, moved, found_old = op(
                 self.state, jnp.asarray(path_hash),
@@ -659,16 +691,81 @@ class BBClient:
             cfg = dataclasses.replace(
                 cfg, meta_spec=self._plan_spec("meta", owner, valid,
                                                4 * 8))
+        if cfg.pipeline and cfg.lossless and cfg.budget is not None:
+            # explicit uniform budgets skip ragged sizing, but the carry
+            # round need not pay the worst-case q − B width: measure the
+            # actual overflow histogram and cap the carry at the observed
+            # residual (same eager measurement the specs do)
+            hint = self._carry_hint(op, mode, ph, cid, valid, data_loc, q,
+                                    cfg)
+            if hint is not None:
+                cfg = dataclasses.replace(cfg, carry_budget_hint=hint)
         return cfg
+
+    def _carry_hint(self, op: str, mode, ph, cid, valid, data_loc,
+                    q: int, cfg: bb.ExchangeConfig) -> Optional[int]:
+        """Measured worst per-(row, destination) round-1 residual.
+
+        Every overflowable plane of this call (data at ``B_d``, metadata
+        at ``B_m``) contributes ``max(count − B, 0)`` over its measured
+        destination histogram; the maximum — quantized up to 8 and maxed
+        into a running per-q floor so steady traffic converges to ONE
+        jit specialization — upper-bounds the residual of either plane,
+        so capping the carry at it preserves losslessness.  ``None``
+        means no hint applies (destinations unknowable, or no plane can
+        overflow).
+        """
+        policy, N = self.policy, self.n_nodes
+        # budgets before routing: when no plane can overflow (B = q) the
+        # carry is already statically elided, and the hot write path must
+        # not pay eager destination routing just to discard it
+        b_d = bb.data_budget(policy, q, cfg)
+        b_m = bb.meta_budget(policy, q, cfg)
+        if b_d >= q and b_m >= q:
+            return None            # B = q everywhere: carry already elided
+        # host-side measurement (numpy routing, like the spec planners):
+        # this sits on the hot request path, so it must not dispatch
+        # device work just to read a histogram
+        mode_h, ph_h = np.asarray(mode), np.asarray(ph)
+        ranks = np.asarray(self._client_ranks())
+        planes = []
+        if op in ("write", "read") and b_d < q:
+            if op == "read" and data_loc is None and \
+                    LayoutMode.HYBRID in policy.modes_present():
+                return None        # destinations live in table state
+            loc_h = None if data_loc is None else np.asarray(data_loc)
+            planes.append((route_data(mode_h, N, ph_h, np.asarray(cid),
+                                      ranks, data_loc=loc_h, xp=np), b_d))
+        if op in ("write", "meta") and b_m < q:
+            planes.append((route_meta(mode_h, N, policy.n_md_servers,
+                                      ph_h, ranks, xp=np), b_m))
+        if not planes:
+            return None
+        v = np.asarray(valid)
+        worst = 0
+        for dest, b in planes:
+            d = np.asarray(dest)
+            for i in range(d.shape[0]):
+                counts = np.bincount(d[i][v[i]], minlength=N)
+                worst = max(worst, int(counts.max(initial=0)) - b)
+        hint = 0 if worst <= 0 else min(q, -(-worst // 8) * 8)
+        floor = self._hint_floor.get(q)
+        if floor is None or hint > floor:
+            if floor is not None and self.obs is not None:
+                self.obs.metrics.inc("carry_hint_respecializations_total")
+            self._hint_floor[q] = floor = hint
+        return floor
 
     def _ops(self, config: bb.ExchangeConfig) -> Tuple:
         """(write, read, meta, read_loc) jitted ops for one config."""
         if not self._is_mesh:
-            return _stacked_ops_for(self.policy.engine_key(), config)
+            return _stacked_ops_for(self.policy.engine_key(), config,
+                                    self.donate)
         ops = self._mesh_ops.get(config)
         if ops is None:
             from repro.core.mesh_engine import build_mesh_ops
-            ops = build_mesh_ops(self.backend, self.policy, config)
+            ops = build_mesh_ops(self.backend, self.policy, config,
+                                 donate=self.donate)
             self._cache_put(self._mesh_ops, config, ops)
         return ops
 

@@ -52,7 +52,7 @@ digesting the ppermute plan on the stacked backend first.
 from __future__ import annotations
 
 import math
-from dataclasses import dataclass
+from dataclasses import dataclass, replace
 from functools import cached_property
 from typing import Callable, Dict, Optional, Tuple, Union
 
@@ -415,6 +415,23 @@ class ExchangeConfig:
     ``all_to_all`` or ``ppermute`` segmented rounds — mesh-capable).
     ``BBClient`` measures and attaches these per call; they are part of
     the config's hash so jitted ops specialize per traffic shape.
+
+    ``pipeline`` (default True) enables the async restructurings that keep
+    every result bit-for-bit identical: lossless writes fuse the data and
+    metadata rounds into one collective round-trip, multi-round ppermute
+    transports software-pipeline round k's collective against round k+1's
+    gather, and the carry round's plan is hoisted out of its cond so it
+    overlaps the main round.  ``pipeline=False`` restores the fully
+    synchronous PR-5 call structure (the baseline the parity tests and
+    ``make bench-pipeline`` compare against).
+
+    ``carry_budget_hint`` tightens the cond-skipped carry round: the
+    worst-case residual is ``q − B``, but a caller that has measured the
+    actual per-(row, destination) overflow histogram (``BBClient`` does,
+    eagerly, like the ragged specs) can cap the carry width at the
+    observed maximum instead of paying the worst case.  The hint is an
+    upper bound on the residual, so losslessness is preserved; ``None``
+    keeps ``q − B``.
     """
 
     kind: str = "dense"
@@ -424,6 +441,8 @@ class ExchangeConfig:
     lossless: bool = True
     data_spec: Optional[Union[RaggedSpec, MeshRaggedSpec]] = None
     meta_spec: Optional[Union[RaggedSpec, MeshRaggedSpec]] = None
+    pipeline: bool = True
+    carry_budget_hint: Optional[int] = None
 
     def __post_init__(self):
         if self.kind not in ("dense", "compacted"):
@@ -852,12 +871,24 @@ class PermuteExecutor:
     half of a hybrid batch — never crosses the fabric.  Received columns
     are re-permuted to source-major order before the table apply, so the
     arrival order (hence every digest) is bit-for-bit the dense path's.
+
+    ``pipeline=True`` (default) software-pipelines the shift rounds with
+    the ragx double-buffer discipline: each round's send buffer is a
+    *load* (the ``chunk_pack`` gather) and its collective a *store*; the
+    loop keeps one round of lookahead — round k+1's load is issued
+    before round k's store — with a one-round prologue (first load) and
+    epilogue (last store).  Every round then depends only on its own
+    gather instead of one fused all-rounds gather, so the scheduler can
+    run round k's collective while round k+1 packs.  Identical values
+    either way; ``pipeline=False`` keeps the synchronous single-gather
+    structure for A/B benchmarking.
     """
 
     n_nodes: int
     spec: MeshRaggedSpec
     carry_budget: int = 0
     drop: bool = False
+    pipeline: bool = True
 
     def plan(self, dest: jax.Array, valid: jax.Array,
              client: Optional[jax.Array] = None) -> ExchangePlan:
@@ -931,15 +962,66 @@ class PermuteExecutor:
         return [(k, int(off[k]), int(w))
                 for k, w in enumerate(self.spec.round_widths) if w > 0]
 
+    def _ship_rounds(self, segments, load_fn, store_fn):
+        """Software-pipelined round loop (shared by send and collect).
+
+        ``load_fn(k, off, w)`` packs round k's buffer (the chunk gather
+        on the send side, the reply slice on the collect side);
+        ``store_fn(k, buf)`` ships it through the collective.  With
+        ``pipeline`` on, the loop keeps ragx-style one-round lookahead —
+        prologue issues load 0, each iteration issues load k+1 *before*
+        store k, the epilogue stores the final load — so no store ever
+        waits on a later round's pack.  Off, it degrades to the strict
+        load-all-then-store order of the synchronous plan.  Either way
+        the returned per-round buffers are value-identical.
+        """
+        if not self.pipeline:
+            loads = [load_fn(k, off, w) for k, off, w in segments]
+            return [store_fn(k, buf)
+                    for (k, _, _), buf in zip(segments, loads)]
+        parts = []
+        load_tag = None                                  # prologue: empty
+        for i, (k, off, w) in enumerate(segments):
+            with obs.span("exchange.pipeline.load", cat="trace", round=k):
+                next_load = load_fn(k, off, w)
+            if load_tag is not None:
+                prev_k = segments[i - 1][0]
+                with obs.span("exchange.pipeline.store", cat="trace",
+                              round=prev_k):
+                    parts.append(store_fn(prev_k, load_tag))
+            load_tag = next_load
+        if load_tag is not None:                         # epilogue
+            last_k = segments[-1][0]
+            with obs.span("exchange.pipeline.store", cat="trace",
+                          round=last_k):
+                parts.append(store_fn(last_k, load_tag))
+        return parts
+
     def send(self, plan: ExchangePlan, fields: jax.Array,
              exchange: Callable, shift: Callable
              ) -> Tuple[jax.Array, jax.Array]:
-        """Gather once, shift each nonzero round, restore source order."""
-        gathered = gather_rows_batched(fields, plan.send_idx)
-        parts = []
-        for k, off, w in self._segments():
-            seg = gathered[:, off:off + w]
-            parts.append(seg if k == 0 else shift(seg, k))
+        """Pack and shift each nonzero round, restore source order.
+
+        Pipelined: per-round ``chunk_pack`` gathers, one round of
+        lookahead.  Synchronous: one fused gather of every round before
+        any shift (the PR-5 structure, where the first collective waits
+        on the whole pack).  Round 0 is self traffic, no collective.
+        """
+        segments = self._segments()
+        if not self.pipeline:
+            gathered = gather_rows_batched(fields, plan.send_idx)
+            parts = [gathered[:, off:off + w] if k == 0
+                     else shift(gathered[:, off:off + w], k)
+                     for k, off, w in segments]
+        else:
+            def load(k, off, w):
+                return gather_rows_batched(fields,
+                                           plan.send_idx[:, off:off + w])
+
+            def store(k, buf):
+                return buf if k == 0 else shift(buf, k)
+
+            parts = self._ship_rounds(segments, load, store)
         if not parts:
             L = fields.shape[0]
             return (jnp.zeros((L, 0, fields.shape[-1] - 1), fields.dtype),
@@ -958,10 +1040,14 @@ class PermuteExecutor:
         back = jnp.take_along_axis(
             reply, plan.inv_perm.reshape(plan.inv_perm.shape +
                                          (1,) * (reply.ndim - 2)), axis=1)
-        parts = []
-        for k, off, w in self._segments():
-            seg = back[:, off:off + w]
-            parts.append(seg if k == 0 else shift(seg, -k))
+
+        def load(k, off, w):
+            return back[:, off:off + w]
+
+        def store(k, buf):
+            return buf if k == 0 else shift(buf, -k)
+
+        parts = self._ship_rounds(self._segments(), load, store)
         home = jnp.concatenate(parts, axis=1)           # round order
         return compact_collect_flat(plan.reply_idx, home, fill)
 
@@ -990,7 +1076,7 @@ def build_executor(role: str, policy, q: int,
     spec = config.data_spec if role == "data" else config.meta_spec
     if isinstance(spec, MeshRaggedSpec):
         if spec.executor == "ppermute":
-            return PermuteExecutor(N, spec)
+            return PermuteExecutor(N, spec, pipeline=config.pipeline)
         # padded path: uniform all_to_all at the measured global max —
         # lossless by construction, so no carry round is traced
         return UniformExecutor(N, max(1, spec.bmax))
@@ -999,8 +1085,183 @@ def build_executor(role: str, policy, q: int,
     B = (data_budget(policy, q, config) if role == "data"
          else meta_budget(policy, q, config))
     carry = _carry_budget(q, B) if (config.lossless and B < q) else 0
+    if carry and config.carry_budget_hint is not None:
+        # measured overflow histogram: cap the carry round at the observed
+        # residual (still an upper bound, so losslessness is preserved);
+        # a zero hint elides the carry round statically
+        carry = min(carry, max(0, int(config.carry_budget_hint)))
     return UniformExecutor(N, B, carry_budget=carry,
                            drop=not config.lossless)
+
+
+def fuse_specs(data_spec, meta_spec):
+    """Summed ragged spec for the fused write collective (None = not fusable).
+
+    The fused write ships both planes through ONE packed buffer whose
+    per-destination segment is the data segment followed by the metadata
+    segment, so the combined spec's budgets are the planewise sums: each
+    (source, destination) pair sends at most ``b_d[i] + b_m[i]`` fused
+    rows, which the summed budgets cover exactly — the fused plan stays
+    lossless whenever both component plans were.  Only stacked
+    ``RaggedSpec`` pairs need a summed spec (``ragged_exchange`` runs on
+    it); mesh padded plans fuse as two uniform budgets concatenated on
+    the ``all_to_all`` budget axis, and ppermute plans never fuse — see
+    ``fused_write_plan``.
+    """
+    if isinstance(data_spec, RaggedSpec) and isinstance(meta_spec,
+                                                        RaggedSpec):
+        if data_spec.n_nodes != meta_spec.n_nodes:
+            return None
+        return RaggedSpec(tuple(bd + bm for bd, bm in
+                                zip(data_spec.budgets, meta_spec.budgets)))
+    return None
+
+
+def _fused_pack_cols(spec_d: RaggedSpec, spec_m: RaggedSpec) -> np.ndarray:
+    """(Σbᵈ+Σbᵐ,) column of ``concat([data_packed, meta_packed])`` feeding
+    each fused packed column (destination-major, data plane first)."""
+    cols = []
+    for d in range(spec_d.n_nodes):
+        od, om = int(spec_d.offsets[d]), int(spec_m.offsets[d])
+        cols.append(np.arange(od, od + spec_d.budgets[d]))
+        cols.append(spec_d.total + np.arange(om, om + spec_m.budgets[d]))
+    return (np.concatenate(cols).astype(np.int32) if cols
+            else np.zeros(0, np.int32))
+
+
+def _fused_recv_cols(spec_d: RaggedSpec, spec_m: RaggedSpec,
+                     fused: RaggedSpec
+                     ) -> Tuple[np.ndarray, np.ndarray]:
+    """Per-plane receive maps into the fused ``ragged_exchange`` view.
+
+    Returns (data (N, N·bmaxᵈ), meta (N, N·bmaxᵐ)) int32 maps: entry
+    ``[i, s·bmaxᵖ + j]`` is the fused receive column holding receiver
+    ``i``'s j-th row from source ``s`` on plane p, or -1 for a pad slot
+    (zero-masked, so the occupancy column marks it invalid).  Each map
+    reproduces exactly the plane's serial receive view — source-major,
+    padded to the plane's own ``bmax`` — from the fused buffer, so the
+    receiver applies scan the same rows the serial rounds handed them.
+    """
+    n = spec_d.n_nodes
+    bf = max(fused.bmax, 0)
+
+    def plane(spec: RaggedSpec, base) -> np.ndarray:
+        bp = max(spec.bmax, 0)
+        idx = np.full((n, n * bp), -1, np.int32)
+        for i in range(n):
+            b = spec.budgets[i]
+            for s in range(n):
+                idx[i, s * bp:s * bp + b] = \
+                    s * bf + base[i] + np.arange(b)
+        return idx
+
+    return (plane(spec_d, [0] * n), plane(spec_m, list(spec_d.budgets)))
+
+
+def _take_recv_cols(recv: jax.Array, cols: np.ndarray) -> jax.Array:
+    """Static per-row column gather with -1 → zero-row masking."""
+    col = jnp.asarray(cols)
+    if col.shape[1] == 0:
+        return jnp.zeros((recv.shape[0], 0) + recv.shape[2:], recv.dtype)
+    ext = col.reshape(col.shape + (1,) * (recv.ndim - 2))
+    got = jnp.take_along_axis(recv, jnp.maximum(ext, 0), axis=1)
+    return jnp.where(ext >= 0, got, 0)
+
+
+def fused_write_plan(policy, q: int, config: ExchangeConfig
+                     ) -> Optional[Tuple[Executor, Executor]]:
+    """Per-plane executors for the fused write round-trip (None = elided).
+
+    Returns ``(data_executor, meta_executor)`` when the write's data and
+    metadata rounds can ship through one collective (``fused_send``), or
+    ``None`` when fusion is elided: dense kind, pipelining off, the drop
+    plane (``lossless=False`` skips overflowed metadata anyway),
+    measured specs of mismatched types, a ppermute plane (fusing would
+    serialize both planes' packs behind the 2(N−1) shift rounds the
+    serial path overlaps, and the receive split is not static across
+    rounds), or any plan that could overflow into a carry round.  The
+    overflow rule is a parity requirement, not a performance one: a
+    fused carry would re-split the metadata batch across two
+    ``_meta_apply`` calls, and within-batch duplicate keys allocate
+    differently in one call than in two — so only provably overflow-free
+    plans fuse (measured specs, which size every segment from the actual
+    histogram, or uniform budgets already at ``B = q`` on both planes).
+    The default client path measures specs, so stacked and mesh-padded
+    writes always fuse.
+    """
+    if config.kind != "compacted" or not config.pipeline \
+            or not config.lossless or q == 0:
+        return None
+    policy = as_policy(policy)
+    N = policy.n_nodes
+    ds, ms = config.data_spec, config.meta_spec
+    if ds is not None or ms is not None:
+        if isinstance(ds, MeshRaggedSpec) and isinstance(ms,
+                                                         MeshRaggedSpec):
+            if ds.n_nodes != ms.n_nodes \
+                    or "ppermute" in (ds.executor, ms.executor):
+                return None
+            return (UniformExecutor(N, max(1, ds.bmax)),
+                    UniformExecutor(N, max(1, ms.bmax)))
+        if isinstance(ds, RaggedSpec) and isinstance(ms, RaggedSpec) \
+                and fuse_specs(ds, ms) is not None:
+            return RaggedExecutor(N, ds), RaggedExecutor(N, ms)
+        return None
+    if data_budget(policy, q, config) < q \
+            or meta_budget(policy, q, config) < q:
+        return None
+    return UniformExecutor(N, q), UniformExecutor(N, q)
+
+
+def fused_send(ex_d: Executor, plan_d: ExchangePlan, fields_d: jax.Array,
+               ex_m: Executor, plan_m: ExchangePlan, fields_m: jax.Array,
+               exchange: Callable
+               ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Ship two planes' packed request buffers through ONE collective.
+
+    Returns ``(recv_d, rvalid_d, recv_m, rvalid_m)`` — each plane's
+    receive view and validity mask, exactly as the plane's own
+    ``Executor.send`` would have produced them over two collectives.
+    The per-plane plans and packed row order are the serial rounds'
+    (same ``_compact_plan`` / ``_compact_plan_ragged`` on the same
+    routing), and the receiver split hands each apply only its own
+    plane's rows — so both applies see bit-identical inputs to the
+    serial two-round write while the fabric sees a single launch.
+
+    Supported pairs (all ``fused_write_plan`` ever builds): two
+    ``UniformExecutor``\\ s — uniform budgets and the mesh padded plan,
+    whose segments concatenate on the static budget axis the
+    ``all_to_all`` splits — and two stacked ``RaggedExecutor``\\ s,
+    whose static per-destination offsets make the packed interleave and
+    the receive split constant index maps (``_fused_pack_cols`` /
+    ``_fused_recv_cols``).
+    """
+    if obs.current_recorder() is not None:
+        exchange = _spanned_collective(exchange, "exchange.all_to_all")
+    if isinstance(ex_d, UniformExecutor):
+        buf = jnp.concatenate(
+            [_compact_gather(fields_d, plan_d.send_idx),
+             _compact_gather(fields_m, plan_m.send_idx)], axis=2)
+        r = exchange(buf)                       # (L, N, B_d + B_m, F)
+        L, n = r.shape[0], r.shape[1]
+        rd = r[:, :, :ex_d.budget].reshape(
+            (L, n * ex_d.budget) + r.shape[3:])
+        rm = r[:, :, ex_d.budget:].reshape(
+            (L, n * ex_m.budget) + r.shape[3:])
+    else:
+        spec_d, spec_m = ex_d.spec, ex_m.spec
+        fused = fuse_specs(spec_d, spec_m)
+        packed = jnp.concatenate(
+            [gather_rows_batched(fields_d, plan_d.send_idx),
+             gather_rows_batched(fields_m, plan_m.send_idx)], axis=1)
+        packed = jnp.take(packed,
+                          jnp.asarray(_fused_pack_cols(spec_d, spec_m)),
+                          axis=1)
+        recv = ragged_exchange(packed, fused, ex_d.n_nodes)
+        cols_d, cols_m = _fused_recv_cols(spec_d, spec_m, fused)
+        rd = _take_recv_cols(recv, cols_d)
+        rm = _take_recv_cols(recv, cols_m)
+    return rd[..., :-1], rd[..., -1] > 0, rm[..., :-1], rm[..., -1] > 0
 
 
 def _spanned_collective(fn: Callable, name: str) -> Callable:
@@ -1077,10 +1338,18 @@ def run_exchange(role: str, policy, config: ExchangeConfig,
     if ex.carry_budget:
         resid = valid & ~served
         ex2 = UniformExecutor(ex.n_nodes, ex.carry_budget)
+        # pipelined carry: the residual plan only depends on round-1 plan
+        # outputs, so hoisting it out of the cond lets it overlap the main
+        # round's collective instead of serializing behind the cond gate
+        hoisted = None
+        if config.pipeline:
+            with obs.span("exchange.carry.plan", cat="trace", role=role):
+                hoisted = ex2.plan(dest, resid, client=client)
 
         def _carry(op):
             st_in = op if mutates else state
-            plan2 = ex2.plan(dest, resid, client=client)
+            plan2 = (hoisted if hoisted is not None
+                     else ex2.plan(dest, resid, client=client))
             recv2, rvalid2 = ex2.send(plan2, fields, exchange, shift)
             st2, reply2 = apply_fn(st_in, recv2, rvalid2)
             res = (st2,) if mutates else ()
@@ -1141,6 +1410,13 @@ def exchange_footprint(policy, q: int, words: int,
     the worst case of the cond-skipped lossless carry round — 0 when no
     overflow occurs (the common case) and 0 by construction for measured
     ragged plans and lossless B=q.
+
+    When the pipelined write fusion applies (``fused_write_plan``), the
+    write ships both planes' packed columns through one collective and
+    no metadata replies: the element count is the two planes' request
+    columns at the common fused row width (metadata rows are padded to
+    the payload width) — one launch instead of three, which is exactly
+    the trade ``make bench-pipeline`` measures.
     """
     policy = as_policy(policy)
     N = policy.n_nodes
@@ -1154,15 +1430,25 @@ def exchange_footprint(policy, q: int, words: int,
     cols_m = (_spec_cols(config.meta_spec, N, bm)
               if config.kind == "compacted" else N * bm)
     w_meta, w_wr, w_rd = (4 + 1) + 3, (2 + words + 1), (2 + 1) + (words + 1)
+    w_fused = max(2 + words, 4) + 1           # widest plane row + mask
     meta = N * cols_m * w_meta                # op/key/size/loc+mask → replies
     write = N * cols_d * w_wr + meta          # keys+payload+mask, then meta
     read = N * cols_d * w_rd
     carry = {"write_carry_elems": 0, "read_carry_elems": 0,
              "meta_carry_elems": 0}
+    fplan = fused_write_plan(policy, q, config)
+    if fplan is not None:
+        write = N * (cols_d + cols_m) * w_fused     # one launch, no replies
     if config.kind == "compacted" and config.lossless:
         cd = 0 if config.data_spec is not None else _carry_budget(q, bd)
         cm = 0 if config.meta_spec is not None else _carry_budget(q, bm)
-        carry = {"write_carry_elems": N * N * cd * w_wr + N * N * cm * w_meta,
+        if config.carry_budget_hint is not None:
+            cd = min(cd, max(0, int(config.carry_budget_hint)))
+            cm = min(cm, max(0, int(config.carry_budget_hint)))
+        wc = N * N * cd * w_wr + N * N * cm * w_meta
+        if fplan is not None:
+            wc = 0          # fused plans are overflow-free by construction
+        carry = {"write_carry_elems": wc,
                  "read_carry_elems": N * N * cd * w_rd,
                  "meta_carry_elems": N * N * cm * w_meta}
     return {"kind": config.kind, "data_budget": bd, "meta_budget": bm,

@@ -155,6 +155,7 @@ def refresh() -> None:
     """
     load_crossover.cache_clear()
     fabric_model.cache_clear()
+    _stump_threshold.cache_clear()
 
 
 def _fit_fabric(rows: Sequence[Dict]) -> Optional[Tuple[float, float]]:
@@ -297,20 +298,76 @@ def auto_accuracy(table) -> Optional[float]:
     return hits / len(table)
 
 
+def _dense_excess_us(n_nodes: int, q: int, words: int, bw: float) -> float:
+    """Modeled wire-time the dense broadcast wastes vs a routed exchange.
+
+    Dense ships every source row to all N peers; a routed (compacted)
+    plan ships each row once — the difference is ``(N² − N) · q`` rows of
+    ``4 · (words + 3)`` bytes moving at the fabric's fitted bandwidth.
+    This single scalar is the feature the crossover stump splits on: it
+    is monotone in every sweep axis (N, q, words all act multiplicatively
+    on exchange volume), which is exactly why one threshold can separate
+    the dense and compacted regimes of the measured winner table.
+    """
+    return max(n_nodes * n_nodes - n_nodes, 0) * q * 4 * (words + 3) \
+        / max(bw, 1e-9)
+
+
+@lru_cache(maxsize=8)
+def _stump_threshold(table: Tuple, bw: float) -> Optional[float]:
+    """Fit the crossover decision stump: the excess-µs split point.
+
+    Projects every winner-table cell onto ``_dense_excess_us`` and — when
+    the two regimes are perfectly separable along that axis — returns the
+    geometric mean of the boundary gap (max dense cell, min compacted
+    cell) as the threshold.  Returns None when the table has a single
+    winner or the projections interleave; callers then fall back to the
+    nearest-measured-cell lookup, which makes no separability assumption.
+    """
+    dense, comp = [], []
+    for n, q, w, winner in table:
+        (dense if winner == "dense" else comp).append(
+            _dense_excess_us(n, q, w, bw))
+    if not dense or not comp:
+        return None
+    lo, hi = max(dense), min(comp)
+    if lo <= 0 or lo >= hi:
+        return None
+    return math.sqrt(lo * hi)
+
+
 def pick_backend(n_nodes: int, q: int, words: int,
                  table: Optional[Tuple] = None) -> str:
     """Pick "dense" or "compacted" for one call shape (N, q, words).
 
-    Nearest measured cell in log space (node count, batch and width all
-    act multiplicatively on exchange volume) → that cell's winner.  On the
-    measured grid itself this reproduces the measured winner exactly,
-    which is what the auto-accuracy regression pins.
+    Auto path (no explicit ``table``): the fitted ``fabric_model``
+    decides — the call shape's modeled dense-excess wire time is compared
+    against a decision-stump threshold fit from the measured winner table
+    (``_stump_threshold``), so picks interpolate smoothly between
+    measured cells instead of snapping to the nearest one.  When the
+    stump cannot be fit (single-winner or non-separable table) — or when
+    a caller passes an explicit ``table`` (the leave-one-out accuracy
+    harness does) — the pick is the nearest measured cell in
+    log-(N, q, words) space, which reproduces the measured winner exactly
+    on the grid itself.
 
-    Every pick emits an ``exchange_backend`` audit record whose
-    alternatives carry the nearest-cell log-space distance of each
+    Every pick emits an ``exchange_backend`` audit record whose evidence
+    names the deciding ``oracle`` ("fabric_model" or "nearest_cell") and
+    whose alternatives carry the nearest-cell log-space distance of each
     losing backend (the margin by which it lost the lookup).
     """
-    table = table if table is not None else load_crossover()
+    explicit = table is not None
+    table = table if explicit else load_crossover()
+    oracle, choice, stump = "nearest_cell", None, {}
+    if not explicit:
+        model = fabric_model()
+        thr = _stump_threshold(table, model[1])
+        if thr is not None:
+            excess = _dense_excess_us(n_nodes, q, words, model[1])
+            choice = "compacted" if excess > thr else "dense"
+            oracle = "fabric_model"
+            stump = {"excess_us": excess, "threshold_us": thr,
+                     "fabric_measured": bool(model[2])}
     best, best_d = "compacted", None
     near: Dict[str, float] = {}
     for ni, qi, wi, winner in table:
@@ -321,13 +378,16 @@ def pick_backend(n_nodes: int, q: int, words: int,
             near[winner] = d
         if best_d is None or d < best_d:
             best, best_d = winner, d
+    if choice is None:
+        choice = best
     record_decision(
-        "exchange_backend", best,
+        "exchange_backend", choice,
         inputs={"n_nodes": int(n_nodes), "q": int(q), "words": int(words),
                 "table_cells": len(table),
-                "distance": best_d if best_d is not None else -1.0},
-        alternatives={k: v for k, v in near.items() if k != best},
+                "distance": best_d if best_d is not None else -1.0,
+                **stump},
+        alternatives={k: v for k, v in near.items() if k != choice},
         evidence={"grade": ("fallback" if table is FALLBACK_TABLE
                             else "measured"),
-                  "source": "crossover_table"})
-    return best
+                  "source": "crossover_table", "oracle": oracle})
+    return choice

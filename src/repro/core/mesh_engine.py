@@ -106,7 +106,8 @@ def _check_specs(config: bb.ExchangeConfig, local_n: int) -> None:
 
 @obs.trace_span("mesh.build_ops", cat="build")
 def build_mesh_ops(mesh: Mesh, policy,
-                   config: bb.ExchangeConfig = bb.DENSE) -> Tuple:
+                   config: bb.ExchangeConfig = bb.DENSE,
+                   donate: bool = False) -> Tuple:
     """Returns jitted (write, read, meta, read_loc) ops bound to a mesh.
 
     Each op takes the per-request ``mode`` array right after the state
@@ -116,8 +117,17 @@ def build_mesh_ops(mesh: Mesh, policy,
     sharded over the ``node`` axis on their leading dim.  ``config``
     selects the exchange data plane; the planner (exchange_plan.py)
     resolves it per phase, and all transports — dense bucketize, uniform
-    all_to_all, padded mesh-ragged, ppermute segmented — run through the
-    same ``mesh_exchange``/``build_mesh_shift`` collectives.
+    all_to_all, padded mesh-ragged, ppermute segmented (whose shift
+    rounds ``run_exchange`` software-pipelines when ``config.pipeline``)
+    — run through the same ``mesh_exchange``/``build_mesh_shift``
+    collectives.
+
+    ``donate=True`` marks the state argument of the mutating ops (write,
+    meta) as donated, letting XLA reuse the old table buffers in place
+    for the updated state.  The donated input is DELETED after the call:
+    only enable it for callers that rebind their state reference
+    (``BBClient(donate=True)`` public paths do; raw replay loops that
+    reuse a saved state must not).
     """
     policy = as_policy(policy)
     n_dev = mesh.shape[NODE_AXIS]
@@ -155,11 +165,12 @@ def build_mesh_ops(mesh: Mesh, policy,
     state_specs = jax.tree_util.tree_map(
         lambda _: PS(NODE_AXIS), bb.init_state(1, 1, 1, 1))
 
+    dargs = (0,) if donate else ()
     write = jax.jit(shard_map(
         _write, mesh=mesh,
         in_specs=(state_specs, req_spec, req_spec, req_spec, req_spec,
                   req_spec),
-        out_specs=state_specs, check_rep=False))
+        out_specs=state_specs, check_rep=False), donate_argnums=dargs)
     read = jax.jit(shard_map(
         _read, mesh=mesh,
         in_specs=(state_specs, req_spec, req_spec, req_spec, req_spec),
@@ -169,7 +180,7 @@ def build_mesh_ops(mesh: Mesh, policy,
         in_specs=(state_specs, req_spec, req_spec, req_spec, req_spec,
                   req_spec, req_spec),
         out_specs=(state_specs, req_spec, req_spec, req_spec),
-        check_rep=False))
+        check_rep=False), donate_argnums=dargs)
     read_loc = jax.jit(shard_map(
         _read_loc, mesh=mesh,
         in_specs=(state_specs, req_spec, req_spec, req_spec, req_spec,
@@ -180,7 +191,8 @@ def build_mesh_ops(mesh: Mesh, policy,
 
 @obs.trace_span("mesh.build_migrate", cat="build")
 def build_mesh_migrate(mesh: Mesh, policy,
-                       config: bb.ExchangeConfig = bb.COMPACTED):
+                       config: bb.ExchangeConfig = bb.COMPACTED,
+                       donate: bool = False):
     """Jitted ``migrate_rows`` bound to a mesh + policy (live relayout).
 
     Kept separate from ``build_mesh_ops`` so existing tuple callers are
@@ -211,7 +223,8 @@ def build_mesh_migrate(mesh: Mesh, policy,
         _migrate, mesh=mesh,
         in_specs=(state_specs, req_spec, req_spec, req_spec, req_spec,
                   req_spec),
-        out_specs=(state_specs, req_spec, req_spec), check_rep=False))
+        out_specs=(state_specs, req_spec, req_spec), check_rep=False),
+        donate_argnums=(0,) if donate else ())
 
 
 @obs.trace_span("mesh.build_probe", cat="build")

@@ -33,7 +33,11 @@ from repro.core.obs.export import (
     trace_events,
     write_recording,
 )
-from repro.core.obs.metrics import MetricsRegistry, metric_key
+from repro.core.obs.metrics import (
+    MetricsRegistry,
+    metric_key,
+    overlap_efficiency,
+)
 from repro.core.obs.recorder import (
     Span,
     SpanHandle,
@@ -62,6 +66,7 @@ __all__ = [
     "current_metrics",
     "current_recorder",
     "metric_key",
+    "overlap_efficiency",
     "provenance_meta",
     "record_decision",
     "recording_dict",

@@ -286,7 +286,7 @@ def test_transition_policy_keeps_both_epoch_modes_present():
 
 
 def _interleaved_stream(relayout: bool, backend="stacked",
-                        new_mode=LayoutMode.DIST_HASH):
+                        new_mode=LayoutMode.DIST_HASH, **client_kw):
     """Drive one fixed interleaved op stream; return every observable.
 
     With ``relayout=True`` a LiveMigrator for SCOPE runs one installment
@@ -299,7 +299,7 @@ def _interleaved_stream(relayout: bool, backend="stacked",
     should) reproduce.
     """
     client = BBClient(_policy(), backend, cap=256, words=W, mcap=256,
-                      telemetry=True)
+                      telemetry=True, **client_kw)
     rng = np.random.RandomState(7)
     outs = []
     reqs = []

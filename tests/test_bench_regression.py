@@ -207,6 +207,52 @@ def test_tracing_overhead_bounded_on_stacked_sweep():
     assert min(medians) <= 1.05, medians
 
 
+# ---------------------------------------------------------------------------
+# PR-10: pipelined exchange (BENCH_pr10.json)
+# ---------------------------------------------------------------------------
+def _pr10_cells(data, section):
+    cells = data.get(section, {}).get("cells") or []
+    if not cells:
+        pytest.skip(f"BENCH_pr10.json has no {section} cells")
+    return cells
+
+
+def test_pipelined_rounds_near_fabric_floor_at_scale():
+    """The headline transport pin: at 32 nodes the pipelined round time
+    on BOTH multi-round paths (the N−1 ppermute shifts and the
+    cond-gated lossless carry) must sit within 1.2× of the same-run
+    fabric fit's lower bound for the cell's collective sequence — i.e.
+    the software pipeline leaves no more than 20% non-fabric overhead
+    on top of the bytes the rounds must ship."""
+    data = _load("BENCH_pr10.json")
+    cells = [c for c in _pr10_cells(data, "overlap") if c["n_nodes"] == 32]
+    assert {c["path"] for c in cells} >= {"ppermute", "carry"}, cells
+    for c in cells:
+        assert c["pipelined_us"] <= 1.2 * c["lower_bound_us"], c
+
+
+def test_fused_write_speedup_on_write_heavy_sweep():
+    """The fused write round-trip (one collective + the write-specialized
+    metadata apply) must beat the synchronous three-collective plan by
+    ≥ 1.25× somewhere on the write-heavy sweep, and regress it nowhere
+    (every cell ≥ 1.05× — i.e. fusion never loses)."""
+    data = _load("BENCH_pr10.json")
+    cells = _pr10_cells(data, "write_heavy")
+    assert max(c["speedup"] for c in cells) >= 1.25, cells
+    for c in cells:
+        assert c["speedup"] >= 1.05, c
+
+
+def test_pipeline_bench_carries_measured_fabric():
+    """BENCH_pr10.json must ship the fabric fit its bounds were computed
+    in, and that fit must be a measured one — an analytic-fallback bound
+    would make the 1.2× pin vacuous."""
+    data = _load("BENCH_pr10.json")
+    fit = (data.get("fabric") or {}).get("fit") or {}
+    assert fit.get("measured") is True
+    assert fit.get("bytes_per_us", 0) > 0
+
+
 def test_mesh_ragged_does_not_regress_pr4_adaptation():
     """The frozen PR-4 artifact's adaptation win must still hold alongside
     the PR-5 plane (the bench contract other suites pin — reasserted here

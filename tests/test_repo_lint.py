@@ -220,6 +220,78 @@ def test_host_conversion_counts_as_fence(tmp_path):
     assert rules == []
 
 
+def test_detects_donated_buffer_reuse(tmp_path):
+    rules = _lint_snippet(tmp_path, """
+        import jax
+
+        def _f(state, x):
+            return state + x
+
+        step = jax.jit(_f, donate_argnums=(0,))
+
+        def drive(state, x):
+            new = step(state, x)
+            return state + new
+        """)
+    assert rules == ["donated-buffer-reuse"]
+
+
+def test_detects_donated_reuse_partial_decorator(tmp_path):
+    rules = _lint_snippet(tmp_path, """
+        import functools
+        import jax
+
+        @functools.partial(jax.jit, donate_argnums=0)
+        def step(state, x):
+            return state + x
+
+        def drive(state, x):
+            out = step(state, x)
+            return state
+        """)
+    assert rules == ["donated-buffer-reuse"]
+
+
+def test_donated_rebind_is_allowed(tmp_path):
+    # `state = step(state, ...)` is the safe idiom: the rebind clears it
+    rules = _lint_snippet(tmp_path, """
+        import jax
+
+        def _f(state, x):
+            return state + x
+
+        step = jax.jit(_f, donate_argnums=(0,))
+
+        def drive(state, x):
+            state = step(state, x)
+            state = step(state, x)
+            return state
+        """)
+    assert rules == []
+
+
+def test_computed_donate_argnums_not_tracked(tmp_path):
+    # non-literal donate positions are unknowable statically: the rule
+    # must stay silent (the repo's builders thread a `dargs` flag)
+    rules = _lint_snippet(tmp_path, """
+        import jax
+
+        def _f(state, x):
+            return state + x
+
+        def build(donate):
+            dargs = (0,) if donate else ()
+            return jax.jit(_f, donate_argnums=dargs)
+
+        step = build(True)
+
+        def drive(state, x):
+            out = step(state, x)
+            return state
+        """)
+    assert rules == []
+
+
 def test_timing_plain_python_is_allowed(tmp_path):
     rules = _lint_snippet(tmp_path, """
         import time

@@ -15,6 +15,11 @@ gate catches it at commit time instead:
   git SHA, jax version, device kind, warm-pass count).  Older artifacts
   predate the flight recorder and are exempt — the version key is how
   the schema ratchets without rewriting history.
+* ``overlap`` (when present, schema v2+): the pipelined-exchange
+  section ``tests/test_bench_regression.py`` pins — an object whose
+  ``cells`` list holds objects each carrying numeric ``sync_us``,
+  ``pipelined_us`` and ``lower_bound_us`` (the sync round, the
+  software-pipelined round, and the fabric model's pure-bytes floor).
 
 Exit code is the number of failing files.
 
@@ -65,6 +70,33 @@ def check_bench(path: pathlib.Path) -> List[str]:
         if missing:
             errs.append(f"schema_version={version} but provenance keys "
                         f"missing: {', '.join(missing)}")
+        overlap = data.get("overlap")
+        if overlap is not None:
+            errs.extend(_check_overlap(overlap))
+    return errs
+
+
+OVERLAP_CELL_KEYS = ("sync_us", "pipelined_us", "lower_bound_us")
+
+
+def _check_overlap(overlap) -> List[str]:
+    """Violations in a v2 artifact's ``overlap`` section."""
+    if not isinstance(overlap, dict):
+        return ["'overlap' is not an object"]
+    cells = overlap.get("cells")
+    if not isinstance(cells, list) or not cells:
+        return ["overlap.cells missing or not a non-empty list"]
+    errs: List[str] = []
+    for i, c in enumerate(cells):
+        if not isinstance(c, dict):
+            errs.append(f"overlap.cells[{i}] is not an object")
+            continue
+        for k in OVERLAP_CELL_KEYS:
+            v = c.get(k)
+            if not isinstance(v, (int, float)) or isinstance(v, bool) \
+                    or v < 0:
+                errs.append(f"overlap.cells[{i}].{k} missing or not a "
+                            "non-negative number")
     return errs
 
 

@@ -23,6 +23,15 @@ and hard to debug in this codebase:
   (or host conversion) inside the timed region.  jax dispatch is async:
   the delta measures enqueue time, not compute time, and the resulting
   "benchmark" silently reports numbers that are orders of magnitude off.
+* ``donated-buffer-reuse`` — reading an array after it was passed at a
+  donated argnum position of a ``jax.jit(..., donate_argnums=...)``
+  callable.  Donation DELETES the input buffer once the call consumes
+  it; the later read raises ``Array has been deleted`` on backends that
+  enforce donation and silently aliases on those that don't.  Only
+  literal ``donate_argnums`` are tracked (a computed value makes the
+  positions unknowable statically), and a rebind of the name between
+  the donating call and the read clears it — the
+  ``state = write(state, ...)`` idiom is exactly the safe pattern.
 
 Usage: ``python tools/repo_lint.py [path ...]`` (default: ``src/repro``).
 Exits non-zero when any finding is reported.
@@ -81,6 +90,47 @@ def _is_jit_decorator(dec: ast.AST) -> bool:
     return False
 
 
+def _literal_argnums(keywords) -> Optional[tuple]:
+    """Literal ``donate_argnums`` positions from a keyword list.
+
+    Accepts a bare int or a tuple/list of ints; anything computed
+    (a name, a conditional, arithmetic) returns None — the positions
+    are unknowable statically, so the rule stays silent rather than
+    guessing (the repo's own builders thread ``donate_argnums=dargs``
+    through a flag, which is exactly this case).
+    """
+    for kw in keywords:
+        if kw.arg != "donate_argnums":
+            continue
+        v = kw.value
+        if isinstance(v, ast.Constant) and isinstance(v.value, int):
+            return (v.value,)
+        if isinstance(v, (ast.Tuple, ast.List)) and v.elts and all(
+                isinstance(e, ast.Constant) and isinstance(e.value, int)
+                for e in v.elts):
+            return tuple(e.value for e in v.elts)
+        return None
+    return None
+
+
+def _donated_argnums(call: ast.AST) -> Optional[tuple]:
+    """Donated positions of a jit-wrapping call (None when not one).
+
+    Handles both spellings that bind donation to a callable name:
+    ``jax.jit(f, donate_argnums=(0,))`` and
+    ``(functools.)partial(jax.jit, donate_argnums=(0,))``.
+    """
+    if not isinstance(call, ast.Call):
+        return None
+    fn = _dotted(call.func)
+    if fn in ("jax.jit", "jit"):
+        return _literal_argnums(call.keywords)
+    if fn in ("functools.partial", "partial") and call.args and \
+            _dotted(call.args[0]) in ("jax.jit", "jit"):
+        return _literal_argnums(call.keywords)
+    return None
+
+
 def _is_cache_decorator(dec: ast.AST) -> bool:
     name = _dotted(dec if not isinstance(dec, ast.Call) else dec.func)
     return name in ("functools.lru_cache", "lru_cache",
@@ -133,6 +183,22 @@ class _ModuleLinter(ast.NodeVisitor):
                 for t in node.targets:
                     if isinstance(t, ast.Name):
                         self.jitted_fns.add(t.id)
+        # callables with LITERAL donated argnums: g = jax.jit(f,
+        # donate_argnums=(0,)) assigns, and @partial(jax.jit,
+        # donate_argnums=...) decorators (name -> donated positions)
+        self.donated_fns: dict = {}
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Assign):
+                pos = _donated_argnums(node.value)
+                if pos:
+                    for t in node.targets:
+                        if isinstance(t, ast.Name):
+                            self.donated_fns[t.id] = pos
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                for dec in node.decorator_list:
+                    pos = _donated_argnums(dec)
+                    if pos:
+                        self.donated_fns[node.name] = pos
         # helper functions that ARE fences (their body touches
         # block_until_ready — e.g. the benches' `_block`)
         self.fence_fns: Set[str] = set()
@@ -280,6 +346,64 @@ class _ModuleLinter(ast.NodeVisitor):
                                "before modifying")
 
         self._lint_timing(fn)
+        self._lint_donation(fn)
+
+    def _lint_donation(self, fn: ast.FunctionDef) -> None:
+        """R6: reads of a name after it was passed at a donated position.
+
+        Line-granular dataflow: a donating call at line ``d`` poisons the
+        argument name until a rebind at some ``b`` with ``d <= b``; any
+        Load-context read at ``r > d`` with no such rebind in ``[d, r]``
+        is flagged.  ``state = write(state, ...)`` clears itself (the
+        rebind shares the donate's line), which is the idiom the rule
+        pushes callers toward.
+        """
+        if not self.donated_fns:
+            return
+        donates: dict = {}               # name -> [donating-call linenos]
+        rebinds: dict = {}               # name -> [rebind linenos]
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Call) and \
+                    isinstance(node.func, ast.Name) and \
+                    node.func.id in self.donated_fns:
+                for p in self.donated_fns[node.func.id]:
+                    if p < len(node.args) and \
+                            isinstance(node.args[p], ast.Name):
+                        donates.setdefault(node.args[p].id,
+                                           []).append(node.lineno)
+            if isinstance(node, (ast.Assign, ast.AugAssign, ast.AnnAssign)):
+                targets = (node.targets if isinstance(node, ast.Assign)
+                           else [node.target])
+                for t in targets:
+                    if isinstance(t, ast.Tuple):
+                        for e in t.elts:
+                            if isinstance(e, ast.Name):
+                                rebinds.setdefault(e.id,
+                                                   []).append(node.lineno)
+                    elif isinstance(t, ast.Name):
+                        rebinds.setdefault(t.id, []).append(node.lineno)
+            if isinstance(node, ast.For) and \
+                    isinstance(node.target, ast.Name):
+                rebinds.setdefault(node.target.id, []).append(node.lineno)
+        if not donates:
+            return
+        for node in ast.walk(fn):
+            if not (isinstance(node, ast.Name) and
+                    isinstance(node.ctx, ast.Load) and
+                    node.id in donates):
+                continue
+            earlier = [d for d in donates[node.id] if d < node.lineno]
+            if not earlier:
+                continue
+            d = max(earlier)
+            if any(d <= b <= node.lineno
+                   for b in rebinds.get(node.id, [])):
+                continue
+            self._emit(node, "donated-buffer-reuse",
+                       f"`{node.id}` is read after being donated to a "
+                       "jit call (donate_argnums) — the buffer is "
+                       "deleted by the call; rebind the name to the "
+                       "call's result or drop the donation")
 
     def _lint_timing(self, fn: ast.FunctionDef) -> None:
         """R5: clock delta over a jitted call with no completion fence."""
